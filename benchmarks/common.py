@@ -1,0 +1,45 @@
+"""Shared timing helpers for the benchmark harness."""
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import jax
+import numpy as np
+
+
+def time_us(fn: Callable, *, warmup: int = 2, iters: int = 10) -> float:
+    """Median wall time per call in microseconds."""
+    for _ in range(warmup):
+        fn()
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn()
+        ts.append((time.perf_counter() - t0) * 1e6)
+    return float(np.median(ts))
+
+
+def block(x):
+    return jax.block_until_ready(x)
+
+
+def fmt_row(name: str, us: float, derived: str) -> str:
+    return f"{name},{us:.1f},{derived}"
+
+
+def simulated_dsa_put(latency_model):
+    """A calibrated *simulated* DSA engine: completion after the modeled
+    latency, without consuming caller CPU (sleep releases the GIL).  Used to
+    validate mode semantics under genuinely parallel copy hardware — this
+    1-core container cannot overlap real memcpys with compute."""
+    import jax
+    import numpy as np
+    import time
+
+    def put(batch, sharding=None):
+        nbytes = sum(np.asarray(x).nbytes for x in jax.tree.leaves(batch))
+        time.sleep(latency_model.predict_us(nbytes) * 1e-6)
+        return batch
+
+    return put

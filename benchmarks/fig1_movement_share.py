@@ -1,0 +1,40 @@
+"""Paper Fig. 1: share of end-to-end latency attributable to data movement
+as a function of message size (shmem/gRPC echo analogue: host->device
+transfer + a fixed device compute step)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import block, fmt_row, time_us
+
+
+@jax.jit
+def _compute(x):
+    # fixed "handler" compute: a couple of matmul passes over a slice
+    y = x[: 256 * 256].reshape(256, 256)
+    for _ in range(4):
+        y = jnp.tanh(y @ y.T / 256.0)
+    return y.sum()
+
+
+def run() -> list[str]:
+    from repro.core import AsyncTransferEngine, SYNC_INLINE
+    rows = []
+    with AsyncTransferEngine(SYNC_INLINE) as eng:
+        for mb in (1, 8, 32, 128):
+            n = mb * (1 << 20) // 4
+            host = np.ones(n, np.float32)
+            eng.submit(host).get()                      # pre-map the pool
+
+            def step():
+                dev = eng.submit(host).get()            # the IPC transfer
+                block(_compute(dev))                    # the handler
+
+            total = time_us(step, iters=5)
+            move = time_us(lambda: eng.submit(host).get(), iters=5)
+            share = move / total * 100.0
+            rows.append(fmt_row(f"fig1/movement_share_{mb}MB", total,
+                                f"move_share={share:.0f}%"))
+    return rows

@@ -1,0 +1,64 @@
+"""Paper Fig. 3: polling strategies on completion latency + CPU usage
+(busy-poll vs lazy 100µs poll vs the hybrid size-aware deferral)."""
+from __future__ import annotations
+
+import threading
+import time
+
+import numpy as np
+
+from benchmarks.common import fmt_row
+from repro.core.latency import LatencyModel
+
+WORK_US = 2000.0      # simulated engine completion time
+
+
+def _job():
+    done = threading.Event()
+    t = threading.Timer(WORK_US * 1e-6, done.set)
+    t.start()
+    return done
+
+
+def _measure(poll_fn, iters=20):
+    lats, polls = [], 0
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        done = _job()
+        polls += poll_fn(done)
+        lats.append((time.perf_counter() - t0) * 1e6)
+    return float(np.median(lats)), polls / iters
+
+
+def run() -> list[str]:
+    rows = []
+
+    def busy(done):
+        n = 0
+        while not done.is_set():
+            n += 1
+        return n
+
+    def lazy(done):           # poll every 100us
+        n = 0
+        while not done.is_set():
+            n += 1
+            done.wait(100e-6)
+        return n
+
+    def hybrid(done):         # paper: sleep 0.95*L, then short passive waits
+        model = LatencyModel(l_fixed_us=WORK_US, alpha_us_per_mb=0.0)
+        time.sleep(model.defer_seconds(0))
+        n = 0
+        while not done.is_set():
+            n += 1
+            done.wait(25e-6)
+        return n
+
+    for name, fn in (("busypoll", busy), ("lazypoll", lazy),
+                     ("hybrid", hybrid)):
+        lat, polls = _measure(fn)
+        over = lat - WORK_US
+        rows.append(fmt_row(f"fig3/{name}", lat,
+                            f"overshoot_us={over:.0f};polls={polls:.0f}"))
+    return rows

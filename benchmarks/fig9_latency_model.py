@@ -1,0 +1,22 @@
+"""Paper Fig. 9: the linear transfer-latency model — per-node calibration of
+L = L_fixed + alpha * size_MB and its dispersion (paper: std dev < 2%)."""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from benchmarks.common import block, fmt_row
+from repro.core.latency import calibrate
+
+
+def run() -> list[str]:
+    model = calibrate(
+        lambda buf: block(jax.device_put(buf)),
+        sizes_bytes=(1 << 18, 1 << 20, 1 << 22, 1 << 23),
+        repeats=10)
+    pred_1mb = model.predict_us(1 << 20)
+    return [fmt_row("fig9/latency_model", pred_1mb,
+                    f"L_fixed={model.l_fixed_us:.1f}us;"
+                    f"alpha={model.alpha_us_per_mb:.2f}us_per_MB;"
+                    f"rel_std={model.rel_std:.1%};"
+                    f"bw={model.bandwidth_gbps():.1f}GBps")]

@@ -1,0 +1,60 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.  Usage:
+  PYTHONPATH=src python -m benchmarks.run [--only fig10]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+from benchmarks import (
+    fig1_movement_share,
+    fig3_polling,
+    fig4_buffer_reuse,
+    fig5_vmem_injection,
+    fig9_latency_model,
+    fig10_modes,
+    fig11_batch_sweep,
+    fig12_decomposition,
+    fig13_instruction_counts,
+    table1_workload_bytes,
+)
+
+MODULES = {
+    "table1": table1_workload_bytes,
+    "fig1": fig1_movement_share,
+    "fig3": fig3_polling,
+    "fig4": fig4_buffer_reuse,
+    "fig5": fig5_vmem_injection,
+    "fig9": fig9_latency_model,
+    "fig10": fig10_modes,
+    "fig11": fig11_batch_sweep,
+    "fig12": fig12_decomposition,
+    "fig13": fig13_instruction_counts,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset, e.g. fig10,fig13")
+    args = ap.parse_args()
+    names = args.only.split(",") if args.only else list(MODULES)
+    print("name,us_per_call,derived")
+    failures = 0
+    for name in names:
+        try:
+            for row in MODULES[name].run():
+                print(row, flush=True)
+        except Exception:
+            failures += 1
+            print(f"{name},ERROR,", flush=True)
+            traceback.print_exc(file=sys.stderr)
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,31 @@
+"""Paper Table I: bytes moved per request/step for the assigned workloads —
+the transfer volumes the movement runtime must sustain (from input_specs,
+no allocation)."""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from benchmarks.common import fmt_row
+from repro.configs import SHAPES, get_config, list_archs
+from repro.launch import specs as specs_mod
+
+
+def run() -> list[str]:
+    rows = []
+    for arch in list_archs():
+        cfg = get_config(arch)
+        for shape_name in ("train_4k", "prefill_32k", "decode_32k"):
+            shape = SHAPES[shape_name]
+            sds = specs_mod.input_specs(cfg, shape)
+            nbytes = sum(int(np.prod(s.shape)) * s.dtype.itemsize
+                         for s in jax.tree.leaves(sds))
+            derived = f"req_bytes={nbytes / 2 ** 20:.1f}MB"
+            if shape.kind == "decode":
+                from repro.models import build_model
+                cache = specs_mod.cache_specs(build_model(cfg), shape)
+                cbytes = sum(int(np.prod(s.shape)) * s.dtype.itemsize
+                             for s in jax.tree.leaves(cache))
+                derived += f";state_bytes={cbytes / 2 ** 30:.2f}GB"
+            rows.append(fmt_row(f"table1/{arch}/{shape_name}", 0.0, derived))
+    return rows

@@ -1,0 +1,71 @@
+"""Serving example: a multi-client inference pipeline through the ROCKET
+request dispatcher, comparing the paper's three execution modes end to end
+(Fig. 10/11 scenario: clients submit requests, the server batches them).
+
+  PYTHONPATH=src python examples/serve_pipeline.py --requests 12
+"""
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.core import ExecutionMode, OffloadPolicy
+from repro.models import build_model
+from repro.serve import BatchedServer, ServeConfig
+
+
+def run_mode(model, params, mode: str, requests: int, prompt_len: int,
+             new_tokens: int) -> tuple[float, float]:
+    scfg = ServeConfig(max_len=prompt_len + new_tokens,
+                       max_batch=4, max_new_tokens=new_tokens)
+    server = BatchedServer(model, params, scfg,
+                           OffloadPolicy(mode=ExecutionMode(mode), max_batch=4))
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, model.cfg.vocab_size, prompt_len)
+               .astype(np.int32) for _ in range(requests)]
+    with server.make_dispatcher() as d:
+        t0 = time.perf_counter()
+        if mode == "sync":
+            outs = [d.request("generate", p, mode="sync") for p in prompts]
+        else:
+            jids = [d.request("generate", p, mode=mode) for p in prompts]
+            outs = [d.query(j) for j in jids]
+        dt = time.perf_counter() - t0
+        mean_batch = d.stats.mean_batch or 1.0
+    server.close()
+    total_tokens = sum(o.size for o in outs)
+    return dt / requests * 1e3, mean_batch
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-moe-1b-a400m")
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--new-tokens", type=int, default=8)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    print(f"serving {cfg.name} ({cfg.family}), {args.requests} requests, "
+          f"{args.new_tokens} new tokens each\n")
+    base = None
+    for mode in ("sync", "async", "pipelined"):
+        ms, mb = run_mode(model, params, mode, args.requests,
+                          args.prompt_len, args.new_tokens)
+        base = base or ms
+        print(f"{mode:10s} {ms:8.1f} ms/req  speedup {base/ms:4.2f}x  "
+              f"mean_batch {mb:.1f}")
+    print("\n(async removes queueing from the caller's critical path; "
+          "pipelined batches requests (mean_batch above) — on parallel "
+          "accelerators batching amortizes weight reads per token, on this "
+          "1-core CPU the batched compute scales linearly so the benefit "
+          "shows in mean_batch, not wall time — the paper's Fig. 11 point "
+          "that the best mode is workload- and hardware-dependent)")
+
+
+if __name__ == "__main__":
+    main()

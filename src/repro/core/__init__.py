@@ -1,0 +1,28 @@
+"""ROCKET core: the paper's contribution as a composable runtime.
+
+- :mod:`repro.core.policy`    — execution modes / offload control / injection
+- :mod:`repro.core.latency`   — size-aware latency model + calibration
+- :mod:`repro.core.engine`    — tier-1 async transfer engine (host→device)
+- :mod:`repro.core.queuepair` — persistent buffer pools / queue pairs
+- :mod:`repro.core.dispatcher`— serving request dispatcher / query handler
+"""
+from repro.core.policy import (
+    ASYNC_OFFLOAD,
+    Device,
+    ExecutionMode,
+    OffloadPolicy,
+    PIPELINED_OFFLOAD,
+    SYNC_INLINE,
+    SYNC_OFFLOAD,
+)
+from repro.core.latency import LatencyModel, calibrate
+from repro.core.engine import AsyncTransferEngine, EngineStats, TransferJob
+from repro.core.queuepair import BufferPool, QueuePair
+from repro.core.dispatcher import QueryHandler, RequestDispatcher
+
+__all__ = [
+    "ASYNC_OFFLOAD", "AsyncTransferEngine", "BufferPool", "Device",
+    "EngineStats", "ExecutionMode", "LatencyModel", "OffloadPolicy",
+    "PIPELINED_OFFLOAD", "QueryHandler", "QueuePair", "RequestDispatcher",
+    "SYNC_INLINE", "SYNC_OFFLOAD", "TransferJob", "calibrate",
+]

@@ -1,0 +1,200 @@
+"""Serving-side ROCKET runtime: request dispatcher, handlers, query handler.
+
+Mirrors the paper's server architecture (Fig. 7 / Listing 1):
+
+- clients call ``request(mode=..., op=..., data=...)`` -> job id (or a
+  blocking result in sync mode);
+- a :class:`RequestDispatcher` routes messages to registered per-op
+  handlers; in pipelined mode requests are *batched* (application-level
+  request batching, §IV-C) before the handler runs;
+- a :class:`QueryHandler` tracks completions; ``query(job_id)`` applies the
+  hybrid polling strategy (size-aware deferral + short passive waits).
+"""
+from __future__ import annotations
+
+import itertools
+import queue
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Optional
+
+import numpy as np
+
+from repro.core.latency import LatencyModel
+from repro.core.policy import ExecutionMode, OffloadPolicy
+
+
+@dataclass
+class Request:
+    job_id: int
+    op: str
+    data: Any
+    mode: ExecutionMode
+    submit_t: float = field(default_factory=time.perf_counter)
+    nbytes: int = 0
+
+
+@dataclass
+class DispatcherStats:
+    requests: int = 0
+    batches: int = 0
+    batched_requests: int = 0
+    queries: int = 0
+    query_polls: int = 0
+    mean_batch: float = 0.0
+
+
+class QueryHandler:
+    """Completion tracking + hybrid polling for result queries."""
+
+    def __init__(self, latency: LatencyModel, policy: OffloadPolicy):
+        self._results: dict[int, Any] = {}
+        self._events: dict[int, threading.Event] = {}
+        self._meta: dict[int, Request] = {}
+        self._lock = threading.Lock()
+        self.latency = latency
+        self.policy = policy
+        self.polls = 0
+
+    def register(self, req: Request) -> None:
+        with self._lock:
+            self._events[req.job_id] = threading.Event()
+            self._meta[req.job_id] = req
+
+    def complete(self, job_id: int, result: Any) -> None:
+        with self._lock:
+            self._results[job_id] = result
+            ev = self._events.get(job_id)
+        if ev is not None:
+            ev.set()
+
+    def query(self, job_id: int, timeout: float = 60.0) -> Any:
+        with self._lock:
+            ev = self._events.get(job_id)
+            req = self._meta.get(job_id)
+        if ev is None:
+            raise KeyError(f"unknown job {job_id}")
+        if not ev.is_set() and req is not None:
+            # size-aware deferral before polling (remaining predicted latency)
+            pred = self.latency.defer_seconds(req.nbytes, self.policy.defer_fraction)
+            remain = pred - (time.perf_counter() - req.submit_t)
+            if remain > 0:
+                time.sleep(min(remain, timeout))
+        deadline = time.perf_counter() + timeout
+        quantum = self.policy.poll_interval_us * 1e-6
+        while not ev.is_set():
+            self.polls += 1
+            if time.perf_counter() > deadline:
+                raise TimeoutError(f"job {job_id} timed out")
+            ev.wait(quantum)
+        with self._lock:
+            out = self._results.pop(job_id)
+            self._events.pop(job_id, None)
+            self._meta.pop(job_id, None)
+        return out
+
+
+class RequestDispatcher:
+    """Routes requests to registered handlers; batches in pipelined mode."""
+
+    def __init__(self, policy: OffloadPolicy = OffloadPolicy(),
+                 latency: Optional[LatencyModel] = None,
+                 max_batch_wait_s: float = 0.002):
+        self.policy = policy
+        self.latency = latency or LatencyModel()
+        self.queries = QueryHandler(self.latency, policy)
+        self.stats = DispatcherStats()
+        self._handlers: dict[str, Callable] = {}
+        self._batch_handlers: dict[str, Callable] = {}
+        self._q: "queue.Queue[Optional[Request]]" = queue.Queue()
+        self._ids = itertools.count()
+        self._max_wait = max_batch_wait_s
+        self._worker = threading.Thread(target=self._serve_loop, daemon=True)
+        self._running = True
+        self._worker.start()
+
+    # -- handler registration (paper: workload-specific handlers) ------------
+    def register_handler(self, op: str, fn: Callable,
+                         batch_fn: Optional[Callable] = None) -> None:
+        """``fn(data) -> result``; optional ``batch_fn(list[data]) -> list``."""
+        self._handlers[op] = fn
+        if batch_fn is not None:
+            self._batch_handlers[op] = batch_fn
+
+    # -- client API (paper Listing 1) -----------------------------------------
+    def request(self, op: str, data: Any,
+                mode: ExecutionMode | str | None = None) -> int | Any:
+        mode = ExecutionMode(mode) if mode is not None else self.policy.mode
+        req = Request(next(self._ids), op, data, mode,
+                      nbytes=int(np.asarray(data).nbytes)
+                      if isinstance(data, np.ndarray) else 0)
+        self.stats.requests += 1
+        if mode == ExecutionMode.SYNC:
+            return self._handlers[op](data)
+        self.queries.register(req)
+        self._q.put(req)
+        return req.job_id
+
+    def query(self, job_id: int, timeout: float = 60.0) -> Any:
+        self.stats.queries += 1
+        out = self.queries.query(job_id, timeout)
+        self.stats.query_polls = self.queries.polls
+        return out
+
+    # -- server loop -----------------------------------------------------------
+    def _serve_loop(self) -> None:
+        while self._running:
+            try:
+                req = self._q.get(timeout=0.1)
+            except queue.Empty:
+                continue
+            if req is None:
+                break
+            if req.mode == ExecutionMode.PIPELINED:
+                batch = [req]
+                deadline = time.perf_counter() + self._max_wait
+                while len(batch) < self.policy.max_batch:
+                    remain = deadline - time.perf_counter()
+                    if remain <= 0:
+                        break
+                    try:
+                        nxt = self._q.get(timeout=remain)
+                    except queue.Empty:
+                        break
+                    if nxt is None:
+                        self._running = False
+                        break
+                    if nxt.op != req.op or nxt.mode != ExecutionMode.PIPELINED:
+                        self._execute([nxt])
+                        continue
+                    batch.append(nxt)
+                self._execute(batch)
+            else:
+                self._execute([req])
+
+    def _execute(self, batch: list[Request]) -> None:
+        if not batch:
+            return
+        op = batch[0].op
+        self.stats.batches += 1
+        self.stats.batched_requests += len(batch)
+        self.stats.mean_batch = self.stats.batched_requests / self.stats.batches
+        bfn = self._batch_handlers.get(op)
+        if bfn is not None and len(batch) > 1:
+            results = bfn([r.data for r in batch])
+        else:
+            results = [self._handlers[op](r.data) for r in batch]
+        for r, out in zip(batch, results):
+            self.queries.complete(r.job_id, out)
+
+    def close(self) -> None:
+        self._running = False
+        self._q.put(None)
+        self._worker.join(timeout=5)
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()

@@ -1,0 +1,72 @@
+"""ROCKET offload policy: execution modes, offload control, cache injection.
+
+Direct transcription of the paper's configuration surface (§IV-B):
+
+- ``mode``  ∈ {sync, async, pipelined} — synchronization/overlap strategy;
+- ``device`` ∈ {inline, offload} — the paper's {cpu, dsa} knob; ``inline``
+  keeps the movement on the compute stream, ``offload`` delegates it to the
+  async engine (host thread-pool / TPU DMA, tier-dependent);
+- ``cache_injection`` — the paper's LLC-injection knob; on TPU this is VMEM
+  residency (kernels) / device-buffer pinning (tier 1).  ``None`` applies the
+  paper's mode-specific default: on for sync, conditional for async
+  (single-client only), off for pipelined (Table III, §V).
+- ``offload_threshold_bytes`` — size-based offload control (Table III "Data
+  Size"): transfers below the threshold stay inline.
+"""
+from __future__ import annotations
+
+import enum
+from dataclasses import dataclass, field, replace
+from typing import Optional
+
+
+class ExecutionMode(str, enum.Enum):
+    SYNC = "sync"
+    ASYNC = "async"
+    PIPELINED = "pipelined"
+
+
+class Device(str, enum.Enum):
+    INLINE = "inline"      # paper: cpu memcpy
+    OFFLOAD = "offload"    # paper: dsa engine
+
+
+@dataclass(frozen=True)
+class OffloadPolicy:
+    mode: ExecutionMode = ExecutionMode.PIPELINED
+    device: Device = Device.OFFLOAD
+    cache_injection: Optional[bool] = None
+    offload_threshold_bytes: int = 1 << 20       # breakeven well above 4KB raw [23]
+    pipeline_depth: int = 2                      # outstanding transfers (pipelined)
+    max_batch: int = 8                           # request batching (pipelined)
+    # hybrid polling (§IV-C): sleep defer_fraction*L, then short-interval poll
+    defer_fraction: float = 0.95
+    poll_interval_us: float = 25.0               # UMWAIT-quantum analogue
+
+    def should_offload(self, nbytes: int) -> bool:
+        if self.device == Device.INLINE:
+            return False
+        return nbytes >= self.offload_threshold_bytes
+
+    def injection_enabled(self, concurrency: int = 1) -> bool:
+        """Paper's default injection policy (Table III / §V):
+        sync -> on; async -> on iff single-threaded; pipelined -> off."""
+        if self.cache_injection is not None:
+            return self.cache_injection
+        if self.mode == ExecutionMode.SYNC:
+            return True
+        if self.mode == ExecutionMode.ASYNC:
+            return concurrency <= 1
+        return False
+
+    def with_mode(self, mode: ExecutionMode | str) -> "OffloadPolicy":
+        return replace(self, mode=ExecutionMode(mode))
+
+    def with_device(self, device: Device | str) -> "OffloadPolicy":
+        return replace(self, device=Device(device))
+
+
+SYNC_INLINE = OffloadPolicy(mode=ExecutionMode.SYNC, device=Device.INLINE)
+SYNC_OFFLOAD = OffloadPolicy(mode=ExecutionMode.SYNC, device=Device.OFFLOAD)
+ASYNC_OFFLOAD = OffloadPolicy(mode=ExecutionMode.ASYNC, device=Device.OFFLOAD)
+PIPELINED_OFFLOAD = OffloadPolicy(mode=ExecutionMode.PIPELINED, device=Device.OFFLOAD)

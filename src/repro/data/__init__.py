@@ -1,0 +1,3 @@
+from repro.data.pipeline import InputPipeline, SyntheticLMSource
+
+__all__ = ["InputPipeline", "SyntheticLMSource"]

@@ -1,0 +1,4 @@
+from repro.ft.monitor import (Heartbeat, RestartManager, StepTimer,
+                              StragglerMonitor)
+
+__all__ = ["Heartbeat", "RestartManager", "StepTimer", "StragglerMonitor"]

@@ -1,0 +1,150 @@
+"""Fault tolerance: heartbeats, straggler detection, restart management.
+
+On a real multi-host deployment each host runs a :class:`Heartbeat` whose
+beats land on shared storage (or a coordination service); the lead host's
+:class:`StragglerMonitor` watches per-step timing and flags hosts whose step
+time exceeds ``threshold ×`` the rolling median (the paper's contention
+analysis, §VI-B "oversubscription", applied as a detector).  The
+:class:`RestartManager` wires checkpoint-on-failure + resume-from-latest,
+including *elastic* resume on a different device count.
+"""
+from __future__ import annotations
+
+import json
+import os
+import threading
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+import numpy as np
+
+
+class Heartbeat:
+    """Periodic liveness beacon (file-based for shared-storage clusters)."""
+
+    def __init__(self, path: str, host_id: int, interval_s: float = 5.0):
+        self.path = path
+        self.host_id = host_id
+        self.interval = interval_s
+        self._stop = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+
+    def beat(self, step: int = -1) -> None:
+        tmp = f"{self.path}.tmp"
+        with open(tmp, "w") as f:
+            json.dump({"host": self.host_id, "t": time.time(), "step": step}, f)
+        os.replace(tmp, self.path)
+
+    def start(self) -> None:
+        def loop():
+            while not self._stop.wait(self.interval):
+                self.beat()
+        self._thread = threading.Thread(target=loop, daemon=True)
+        self._thread.start()
+
+    def stop(self) -> None:
+        self._stop.set()
+        if self._thread:
+            self._thread.join(timeout=2)
+
+    @staticmethod
+    def is_alive(path: str, timeout_s: float) -> bool:
+        try:
+            with open(path) as f:
+                data = json.load(f)
+            return (time.time() - data["t"]) < timeout_s
+        except (OSError, ValueError, KeyError):
+            return False
+
+
+@dataclass
+class StepTimer:
+    """Rolling step-time statistics for straggler detection."""
+    window: int = 64
+    times: deque = field(default_factory=lambda: deque(maxlen=64))
+
+    def record(self, seconds: float) -> None:
+        self.times.append(seconds)
+
+    def median(self) -> float:
+        return float(np.median(self.times)) if self.times else 0.0
+
+    def p95(self) -> float:
+        return float(np.percentile(list(self.times), 95)) if self.times else 0.0
+
+
+class StragglerMonitor:
+    """Flags slow steps/hosts; pluggable mitigation callback.
+
+    Mitigations available to the runner:
+    - log + continue (default),
+    - trigger an early checkpoint (bound the lost work),
+    - request host eviction / elastic re-mesh (callback to the scheduler).
+    """
+
+    def __init__(self, threshold: float = 2.0, patience: int = 3,
+                 on_straggler: Optional[Callable[[dict], None]] = None):
+        self.timer = StepTimer()
+        self.threshold = threshold
+        self.patience = patience
+        self.on_straggler = on_straggler
+        self.consecutive_slow = 0
+        self.events: list[dict] = []
+
+    def record_step(self, seconds: float, step: int = -1) -> bool:
+        med = self.timer.median()
+        self.timer.record(seconds)
+        is_slow = bool(med > 0 and seconds > self.threshold * med)
+        if is_slow:
+            self.consecutive_slow += 1
+            if self.consecutive_slow >= self.patience:
+                ev = {"step": step, "seconds": seconds, "median": med,
+                      "ratio": seconds / med}
+                self.events.append(ev)
+                if self.on_straggler:
+                    self.on_straggler(ev)
+                self.consecutive_slow = 0
+        else:
+            self.consecutive_slow = 0
+        return is_slow
+
+
+class RestartManager:
+    """Checkpoint-on-failure + resume-from-latest orchestration."""
+
+    def __init__(self, ckpt_manager, save_every: int = 100):
+        self.ckpt = ckpt_manager
+        self.save_every = save_every
+        self.failures = 0
+
+    def maybe_save(self, step: int, state: dict, extra: dict) -> None:
+        if step > 0 and step % self.save_every == 0:
+            self.ckpt.save_async(step, state, extra)
+
+    def resume_or_init(self, init_fn: Callable[[], tuple],
+                       like: Optional[dict] = None, shardings=None):
+        """Returns (state, extra, start_step). Elastic: shardings may target
+        a different mesh than the checkpoint was written under."""
+        step = self.ckpt.latest_step()
+        if step is None:
+            state = init_fn()
+            return state, {}, 0
+        if like is None:
+            like = init_fn()
+        state, extra = self.ckpt.restore(step, like, shardings)
+        return state, extra, step
+
+    def run_with_restarts(self, build_fn, loop_fn, max_restarts: int = 3):
+        """Supervision loop: (re)build state and run; on exception checkpoint
+        metadata is preserved and the loop restarts from the latest step."""
+        while True:
+            try:
+                state, extra, start = build_fn()
+                return loop_fn(state, extra, start)
+            except Exception:
+                self.failures += 1
+                if self.failures > max_restarts:
+                    raise

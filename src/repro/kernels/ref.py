@@ -1,0 +1,58 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose references)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def offload_copy(x, *, scale: float = 1.0, out_dtype=None, inject: bool = False):
+    out_dtype = jnp.dtype(out_dtype or x.dtype)
+    y = (x.astype(jnp.float32) * scale).astype(out_dtype)
+    total = jnp.sum(x.astype(jnp.float32) * scale) if inject else None
+    return y, total
+
+
+def flash_attention(q, k, v, *, causal: bool = True, softcap: float = 0.0):
+    """q: (B,S,H,hd); k/v: (B,T,K,hd) — GQA reference, fp32 softmax."""
+    b, s, h, hd = q.shape
+    t, kh = k.shape[1], k.shape[2]
+    g = h // kh
+    qg = q.reshape(b, s, kh, g, hd)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(hd, jnp.float32))
+    scores = jnp.einsum("bskge,btke->bkgst", qg, k).astype(jnp.float32) * scale
+    if softcap:
+        scores = softcap * jnp.tanh(scores / softcap)
+    if causal:
+        mask = jnp.tril(jnp.ones((s, t), bool), k=t - s)
+        scores = jnp.where(mask[None, None, None], scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1)
+    o = jnp.einsum("bkgst,btke->bskge", w.astype(q.dtype), v)
+    return o.reshape(b, s, h, hd)
+
+
+def ssd_scan(xh, bm, cm, dt, da, d_skip, *, chunk: int = 256):
+    """Reference for the Mamba2 chunk-scan kernel: literal recurrence.
+
+    xh (B,S,H,P); bm/cm (B,S,G,N); dt/da (B,S,H); d_skip (H,).
+    Returns (y (B,S,H,P) fp32, h_final (B,H,N,P) fp32).
+    """
+    b, s, nh, p = xh.shape
+    g, n = bm.shape[2], bm.shape[3]
+    hg = nh // g
+    bm_h = jnp.repeat(bm, hg, axis=2).astype(jnp.float32)   # (B,S,H,N)
+    cm_h = jnp.repeat(cm, hg, axis=2).astype(jnp.float32)
+    dtx = dt[..., None].astype(jnp.float32) * xh.astype(jnp.float32)
+
+    def step(h, xs):
+        bmt, cmt, dtxt, dat = xs
+        h = h * jnp.exp(dat)[..., None, None] + bmt[..., :, None] * dtxt[..., None, :]
+        y = jnp.einsum("bhN,bhNp->bhp", cmt, h)
+        return h, y
+
+    h0 = jnp.zeros((b, nh, n, p), jnp.float32)
+    xs = (jnp.moveaxis(bm_h, 1, 0), jnp.moveaxis(cm_h, 1, 0),
+          jnp.moveaxis(dtx, 1, 0), jnp.moveaxis(da.astype(jnp.float32), 1, 0))
+    hf, ys = jax.lax.scan(step, h0, xs)
+    y = jnp.moveaxis(ys, 0, 1)                              # (B,S,H,P)
+    y = y + d_skip[None, None, :, None].astype(jnp.float32) * xh.astype(jnp.float32)
+    return y, hf

@@ -1,0 +1,105 @@
+"""Mamba2 SSD chunk-scan kernel: carried (N,P) state in VMEM scratch.
+
+Grid (batch, heads, chunks); the chunk dimension is sequential so the
+recurrent state lives in VMEM across chunk tiles — inter-chunk state passing
+without HBM round-trips (the VMEM-residency/"injection" discipline applied
+to the scan carry).  All contractions are 2D MXU matmuls.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, b_ref, c_ref, dt_ref, da_ref, dsk_ref,
+                y_ref, hout_ref, state, *, q: int, nc: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _():
+        state[...] = jnp.zeros_like(state)
+
+    x = x_ref[0, :, 0, :].astype(jnp.float32)       # (q, P)
+    bm = b_ref[0, :, 0, :].astype(jnp.float32)      # (q, N)
+    cm = c_ref[0, :, 0, :].astype(jnp.float32)      # (q, N)
+    dt = dt_ref[0, :, 0].astype(jnp.float32)        # (q,)
+    da = da_ref[0, :, 0].astype(jnp.float32)        # (q,)
+    dsk = dsk_ref[0, 0]
+
+    sgm = jnp.cumsum(da)                             # (q,) inclusive
+    s_last = sgm[q - 1]
+    dtx = dt[:, None] * x                            # (q, P)
+
+    # intra-chunk: M[j,i] = exp(s_j - s_i) (C_j . B_i), i <= j
+    cb = jax.lax.dot_general(cm, bm, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)   # (q,q)
+    ldiff = sgm[:, None] - sgm[None, :]
+    ji = jax.lax.broadcasted_iota(jnp.int32, (q, q), 0)
+    ii = jax.lax.broadcasted_iota(jnp.int32, (q, q), 1)
+    m = jnp.where(ii <= ji, cb * jnp.exp(ldiff), 0.0)
+    y = jax.lax.dot_general(m, dtx, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)    # (q,P)
+
+    # inter-chunk: y_j += exp(s_j) C_j . h_prev
+    y += jax.lax.dot_general(cm, state[...], (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32) \
+        * jnp.exp(sgm)[:, None]
+
+    # state update: h = exp(s_last) h + B^T (decay_to_end * dtx)
+    decay = jnp.exp(s_last - sgm)[:, None]                          # (q,1)
+    upd = jax.lax.dot_general(bm, decay * dtx, (((0,), (0,)), ((), ())),
+                              preferred_element_type=jnp.float32)   # (N,P)
+    state[...] = state[...] * jnp.exp(s_last) + upd
+
+    y_ref[0, :, 0, :] = (y + dsk * x).astype(y_ref.dtype)
+
+    @pl.when(ci == nc - 1)
+    def _():
+        hout_ref[0, 0, :, :] = state[...].astype(hout_ref.dtype)
+
+
+def ssd_scan_pallas(xh, bm, cm, dt, da, d_skip, *, chunk: int = 256,
+                    interpret: bool = False):
+    """xh (B,S,H,P); bm/cm (B,S,G,N); dt/da (B,S,H); d_skip (H,).
+
+    Returns (y (B,S,H,P) fp32, h_final (B,H,N,P) fp32).
+    """
+    b, s, nh, p = xh.shape
+    g, n = bm.shape[2], bm.shape[3]
+    hg = nh // g
+    q = min(chunk, s)
+    assert s % q == 0, (s, q)
+    nc = s // q
+
+    kernel = functools.partial(_ssd_kernel, q=q, nc=nc)
+    dsk = d_skip.reshape(nh, 1).astype(jnp.float32)
+
+    y, hf = pl.pallas_call(
+        kernel,
+        grid=(b, nh, nc),
+        in_specs=[
+            pl.BlockSpec((1, q, 1, p), lambda bi, hi, ci: (bi, ci, hi, 0)),
+            pl.BlockSpec((1, q, 1, n), lambda bi, hi, ci: (bi, ci, hi // hg, 0)),
+            pl.BlockSpec((1, q, 1, n), lambda bi, hi, ci: (bi, ci, hi // hg, 0)),
+            pl.BlockSpec((1, q, 1), lambda bi, hi, ci: (bi, ci, hi)),
+            pl.BlockSpec((1, q, 1), lambda bi, hi, ci: (bi, ci, hi)),
+            pl.BlockSpec((1, 1), lambda bi, hi, ci: (hi, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, q, 1, p), lambda bi, hi, ci: (bi, ci, hi, 0)),
+            pl.BlockSpec((1, 1, n, p), lambda bi, hi, ci: (bi, hi, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, s, nh, p), jnp.float32),
+            jax.ShapeDtypeStruct((b, nh, n, p), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((n, p), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(xh, bm, cm, dt, da, dsk)
+    return y, hf

@@ -1,0 +1,227 @@
+"""Compiled-HLO analysis: collective-byte accounting + roofline terms.
+
+``cost_analysis`` gives per-device FLOPs and bytes; collective bytes are not
+included, so we parse the optimized HLO text and sum the *result-shape* bytes
+of every collective op (all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute, sync and -start forms).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+COLLECTIVE_OPS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+
+# one shape, e.g. bf16[256,1024]{1,0} or f32[]
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+# an HLO instruction line: "%name = <shape(s)> <op>(" — tuple shapes may
+# contain /*index=N*/ comments, so the shape group must admit '='
+_INSTR_RE = re.compile(
+    r"^\s*%[\w.\-]+\s*=\s*(.*?)\s+("
+    + "|".join(op.replace("-", r"\-") for op in COLLECTIVE_OPS)
+    + r")(?:-start|-done)?\(")
+
+
+def _shape_bytes(shapes_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shapes_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+@dataclass
+class CollectiveStats:
+    bytes_by_op: dict = field(default_factory=dict)
+    count_by_op: dict = field(default_factory=dict)
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_op.values())
+
+    @property
+    def total_count(self) -> int:
+        return sum(self.count_by_op.values())
+
+
+_COMP_HEADER_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->.*{\s*$")
+_CALL_ATTR_RE = re.compile(
+    r"(?:calls|to_apply|body|condition)=%?([\w.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_WHILE_BODY_RE = re.compile(r"\bwhile\(.*?\bbody=%?([\w.\-]+)")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+
+
+def _parse_computations(hlo_text: str):
+    """Split HLO text into {comp_name: [instruction lines]}; returns
+    (comps, entry_name)."""
+    comps: dict[str, list[str]] = {}
+    entry = None
+    cur = None
+    for line in hlo_text.splitlines():
+        if line.startswith("  ") and cur is not None:
+            s = line.strip()
+            if s and not s.startswith("//"):
+                comps[cur].append(s)
+            continue
+        m = _COMP_HEADER_RE.match(line.strip())
+        if m and line.rstrip().endswith("{"):
+            cur = m.group(1)
+            comps[cur] = []
+            if line.strip().startswith("ENTRY"):
+                entry = cur
+        elif line.strip() == "}":
+            cur = None
+    return comps, entry
+
+
+def _comp_multipliers(comps: dict, entry: str) -> dict:
+    """Execution-count multiplier per computation.
+
+    While bodies multiply by the loop's ``known_trip_count`` (recorded by XLA
+    in the instruction's backend_config); every other call edge (fusion,
+    to_apply, condition, branches) inherits the caller's multiplier."""
+    mult = {entry: 1.0}
+    stack = [entry]
+    while stack:
+        name = stack.pop()
+        m0 = mult[name]
+        for line in comps.get(name, ()):
+            body_m = _WHILE_BODY_RE.search(line)
+            trips = 1.0
+            tm = _TRIP_RE.search(line)
+            if tm:
+                trips = float(tm.group(1))
+            callees = _CALL_ATTR_RE.findall(line)
+            br = _BRANCHES_RE.search(line)
+            if br:
+                callees += [c.strip().lstrip("%")
+                            for c in br.group(1).split(",")]
+            for c in set(callees):
+                cm = m0 * trips if (body_m and c == body_m.group(1)) else m0
+                if c in comps and mult.get(c, 0.0) < cm:
+                    mult[c] = cm
+                    stack.append(c)
+    return mult
+
+
+def collective_stats(hlo_text: str, depth_trips: dict | None = None
+                     ) -> CollectiveStats:
+    """Sum collective result bytes.  Collectives inside while bodies are
+    scaled by the loop's known_trip_count (from the compiled artifact's
+    backend_config), propagated through the call graph — the HLO text
+    contains each loop body exactly once."""
+    out = CollectiveStats()
+    comps, entry = _parse_computations(hlo_text)
+    mult = _comp_multipliers(comps, entry) if entry else {}
+    for comp, lines in comps.items():
+        trips = mult.get(comp, 1.0)
+        for stripped in lines:
+            if "-done(" in stripped:    # avoid double counting start/done
+                continue
+            m = _INSTR_RE.search(stripped)
+            if not m:
+                continue
+            shapes_str, op = m.group(1), m.group(2)
+            nbytes = _shape_bytes(shapes_str) * trips
+            out.bytes_by_op[op] = out.bytes_by_op.get(op, 0) + nbytes
+            out.count_by_op[op] = out.count_by_op.get(op, 0) + trips
+    return out
+
+
+# ---------------------------------------------------------------------------
+# roofline terms (TPU v5e target constants)
+# ---------------------------------------------------------------------------
+
+PEAK_FLOPS_BF16 = 197e12          # per chip
+HBM_BW = 819e9                    # bytes/s per chip
+ICI_BW = 50e9                     # bytes/s per link
+
+
+@dataclass
+class Roofline:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    flops_per_device: float
+    bytes_per_device: float
+    collective_bytes_per_device: float
+    chips: int
+    model_flops: float = 0.0
+    ideal_bytes_per_device: float = 0.0   # algorithmic minimum HBM traffic
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def model_flops_ratio(self) -> float:
+        total = self.flops_per_device * self.chips
+        return self.model_flops / total if total else 0.0
+
+    @property
+    def ideal_s(self) -> float:
+        """The workload's own roofline: max of its minimal compute time and
+        minimal memory time (decode is legitimately memory-bound — the score
+        is achieved-vs-ideal on whichever resource it genuinely needs)."""
+        useful_compute = self.model_flops / (self.chips * PEAK_FLOPS_BF16)
+        useful_memory = self.ideal_bytes_per_device / HBM_BW
+        return max(useful_compute, useful_memory)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """ideal time / achieved bound time — the score we hillclimb."""
+        if self.bound_s <= 0:
+            return 0.0
+        return min(self.ideal_s / self.bound_s, 1.0)
+
+    def as_dict(self) -> dict:
+        return {
+            "compute_s": self.compute_s, "memory_s": self.memory_s,
+            "collective_s": self.collective_s, "dominant": self.dominant,
+            "flops_per_device": self.flops_per_device,
+            "bytes_per_device": self.bytes_per_device,
+            "collective_bytes_per_device": self.collective_bytes_per_device,
+            "chips": self.chips, "model_flops": self.model_flops,
+            "model_flops_ratio": self.model_flops_ratio,
+            "ideal_bytes_per_device": self.ideal_bytes_per_device,
+            "ideal_s": self.ideal_s,
+            "roofline_fraction": self.roofline_fraction,
+        }
+
+
+def roofline_from_analysis(cost: dict, coll: CollectiveStats, chips: int,
+                           model_flops: float = 0.0,
+                           ideal_bytes_per_device: float = 0.0) -> Roofline:
+    flops = float(cost.get("flops", 0.0))
+    nbytes = float(cost.get("bytes accessed", 0.0))
+    cbytes = float(coll.total_bytes)
+    return Roofline(
+        compute_s=flops / PEAK_FLOPS_BF16,
+        memory_s=nbytes / HBM_BW,
+        collective_s=cbytes / ICI_BW,
+        flops_per_device=flops,
+        bytes_per_device=nbytes,
+        collective_bytes_per_device=cbytes,
+        chips=chips,
+        model_flops=model_flops,
+        ideal_bytes_per_device=ideal_bytes_per_device,
+    )

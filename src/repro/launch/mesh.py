@@ -1,0 +1,27 @@
+"""Production mesh construction.
+
+A function (not a module-level constant) so importing this module never
+touches jax device state.  Single-pod: 16×16 = 256 chips (v5e pod slice);
+multi-pod: 2×16×16 = 512 chips with the leading ``pod`` axis extending data
+parallelism across pods (ICI within a pod, DCN across pods).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_smoke_mesh(devices: int | None = None):
+    """Small mesh over however many devices the test environment has."""
+    n = devices or len(jax.devices())
+    model = 1
+    for cand in (4, 2):
+        if n % cand == 0 and n >= cand:
+            model = cand
+            break
+    return jax.make_mesh((n // model, model), ("data", "model"))

@@ -1,0 +1,142 @@
+"""Render the dry-run/roofline results into markdown tables.
+
+  PYTHONPATH=src python -m repro.launch.report [--mesh singlepod] \
+      [--movement sync] [--compare zero1]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+from repro.launch.dryrun import RESULTS_DIR
+
+
+def load(mesh: str, movement: str) -> dict:
+    out = {}
+    for path in sorted(glob.glob(os.path.join(
+            RESULTS_DIR, f"*__{mesh}__{movement}.json"))):
+        with open(path) as f:
+            r = json.load(f)
+        out[(r["arch"], r["shape"])] = _refresh_metrics(r)
+    return out
+
+
+def _refresh_metrics(r: dict) -> dict:
+    """Recompute derived roofline metrics from the stored raw measurements
+    (costs / collective bytes / meta) under the current metric definitions."""
+    if r.get("status") != "ok" or "cost" not in r:
+        return r
+    from repro.configs import SHAPES, get_config
+    from repro.launch import hlo as hlo_mod
+    from repro.launch.dryrun import _ideal_bytes, _model_flops
+    cfg = get_config(r["arch"])
+    shape = SHAPES[r["shape"]]
+    coll = hlo_mod.CollectiveStats(
+        bytes_by_op=r["collectives"]["bytes_by_op"],
+        count_by_op=r["collectives"]["count_by_op"])
+    rl = hlo_mod.roofline_from_analysis(
+        r["cost"], coll, chips=r["roofline"]["chips"],
+        model_flops=_model_flops(cfg, shape),
+        ideal_bytes_per_device=_ideal_bytes(cfg, shape, r.get("meta", {})))
+    r = dict(r)
+    r["roofline"] = rl.as_dict()
+    return r
+
+
+def _fmt_s(x: float) -> str:
+    if x >= 0.1:
+        return f"{x:.2f}s"
+    if x >= 1e-4:
+        return f"{x * 1e3:.1f}ms"
+    return f"{x * 1e6:.0f}us"
+
+
+def roofline_table(recs: dict) -> str:
+    lines = [
+        "| arch | shape | compute | memory | collective | dominant | "
+        "MF ratio | frac | note |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for (arch, shape), r in sorted(recs.items()):
+        if r["status"] == "skipped":
+            lines.append(f"| {arch} | {shape} | — | — | — | — | — | — | "
+                         f"skipped: full-attention arch |")
+            continue
+        if r["status"] == "error":
+            lines.append(f"| {arch} | {shape} | — | — | — | — | — | — | "
+                         f"ERROR {r['error'][:60]} |")
+            continue
+        rl = r["roofline"]
+        lines.append(
+            f"| {arch} | {shape} | {_fmt_s(rl['compute_s'])} | "
+            f"{_fmt_s(rl['memory_s'])} | {_fmt_s(rl['collective_s'])} | "
+            f"{rl['dominant']} | {rl['model_flops_ratio']:.2f} | "
+            f"{rl['roofline_fraction']:.3f} |  |")
+    return "\n".join(lines)
+
+
+def dryrun_table(recs: dict) -> str:
+    lines = [
+        "| arch | shape | params | param B/dev | state B/dev | flops/dev | "
+        "bytes/dev | coll B/dev | compile |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for (arch, shape), r in sorted(recs.items()):
+        if r["status"] != "ok":
+            lines.append(f"| {arch} | {shape} | — | — | — | — | — | — | "
+                         f"{r['status']} |")
+            continue
+        m, rl = r["meta"], r["roofline"]
+        state = m.get("cache_bytes_per_device", m.get("opt_bytes_per_device", 0))
+        lines.append(
+            f"| {arch} | {shape} | {m['params'] / 1e9:.2f}B | "
+            f"{m['param_bytes_per_device'] / 2 ** 30:.2f}G | "
+            f"{state / 2 ** 30:.2f}G | "
+            f"{rl['flops_per_device']:.2e} | {rl['bytes_per_device']:.2e} | "
+            f"{rl['collective_bytes_per_device']:.2e} | {r['compile_s']}s |")
+    return "\n".join(lines)
+
+
+def compare_table(base: dict, opt: dict, label: str) -> str:
+    lines = [
+        f"| arch | shape | term | baseline | {label} | delta |",
+        "|---|---|---|---|---|---|",
+    ]
+    for key in sorted(set(base) & set(opt)):
+        b, o = base[key], opt[key]
+        if b["status"] != "ok" or o["status"] != "ok":
+            continue
+        rb, ro = b["roofline"], o["roofline"]
+        for term in ("collective_s", "memory_s", "compute_s",
+                     "roofline_fraction"):
+            if abs(rb[term]) < 1e-12 and abs(ro[term]) < 1e-12:
+                continue
+            delta = (ro[term] - rb[term]) / max(abs(rb[term]), 1e-12) * 100
+            lines.append(
+                f"| {key[0]} | {key[1]} | {term} | {rb[term]:.4g} | "
+                f"{ro[term]:.4g} | {delta:+.1f}% |")
+    return "\n".join(lines)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="singlepod")
+    ap.add_argument("--movement", default="sync")
+    ap.add_argument("--compare", default=None)
+    ap.add_argument("--kind", default="roofline",
+                    choices=["roofline", "dryrun"])
+    args = ap.parse_args()
+    base = load(args.mesh, args.movement)
+    if args.compare:
+        opt = load(args.mesh, args.compare)
+        print(compare_table(base, opt, args.compare))
+    elif args.kind == "roofline":
+        print(roofline_table(base))
+    else:
+        print(dryrun_table(base))
+
+
+if __name__ == "__main__":
+    main()

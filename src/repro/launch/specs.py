@@ -1,0 +1,62 @@
+"""ShapeDtypeStruct stand-ins for every model input (no device allocation).
+
+``input_specs(cfg, shape)`` returns the abstract batch for train/prefill
+cells; decode cells additionally take the abstract cache from
+``cache_specs``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models.registry import ModelAPI, build_model
+
+SDS = jax.ShapeDtypeStruct
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        if cfg.family == "audio":
+            return {
+                "frame_embeds": SDS((b, s, cfg.d_model), jnp.float32),
+                "tokens": SDS((b, s), jnp.int32),
+                "labels": SDS((b, s), jnp.int32),
+            }
+        if cfg.family == "vlm":
+            st = s - cfg.num_patches
+            return {
+                "tokens": SDS((b, st), jnp.int32),
+                "patch_embeds": SDS((b, cfg.num_patches, cfg.d_model), jnp.float32),
+                "labels": SDS((b, st), jnp.int32),
+            }
+        return {"tokens": SDS((b, s), jnp.int32),
+                "labels": SDS((b, s), jnp.int32)}
+
+    if shape.kind == "prefill":
+        if cfg.family == "audio":
+            return {"frame_embeds": SDS((b, s, cfg.d_model), jnp.float32),
+                    "tokens": SDS((b, s), jnp.int32)}
+        if cfg.family == "vlm":
+            return {"tokens": SDS((b, s - cfg.num_patches), jnp.int32),
+                    "patch_embeds": SDS((b, cfg.num_patches, cfg.d_model),
+                                        jnp.float32)}
+        return {"tokens": SDS((b, s), jnp.int32)}
+
+    # decode: one new token against a cache of length seq_len
+    return {"tokens": SDS((b, 1), jnp.int32)}
+
+
+def cache_specs(model: ModelAPI, shape: ShapeConfig):
+    """Abstract decode cache (KV / recurrent state) for a decode cell."""
+    cfg = model.cfg
+    b, s = shape.global_batch, shape.seq_len
+    if cfg.is_encdec:
+        return jax.eval_shape(
+            lambda: model.init_cache(b, s, src_len=s))
+    return jax.eval_shape(lambda: model.init_cache(b, s))
+
+
+def params_specs(model: ModelAPI):
+    return jax.eval_shape(lambda: model.init(jax.random.key(0)))

@@ -1,0 +1,3 @@
+from repro.models.registry import ModelAPI, build_model, count_params_analytic
+
+__all__ = ["ModelAPI", "build_model", "count_params_analytic"]

@@ -1,0 +1,204 @@
+"""Encoder-decoder backbone (Seamless-M4T medium geometry).
+
+The speech/text modality frontend is a STUB per the assignment: the encoder
+consumes precomputed frame embeddings (batch, src_len, d_model).  The decoder
+is a standard causal transformer with cross-attention.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models.layers import (
+    apply_mlp,
+    apply_norm,
+    embed_init,
+    embed_tokens,
+    mlp_init,
+    norm_init,
+    softmax_cross_entropy,
+    stack_init,
+    unembed,
+)
+from repro.sharding import api as shard_api
+
+
+# ---------------------------------------------------------------------------
+# blocks
+# ---------------------------------------------------------------------------
+
+def enc_block_init(key, cfg: ModelConfig):
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": norm_init(cfg),
+        "attn": attn.attn_init(k1, cfg),
+        "ln2": norm_init(cfg),
+        "mlp": mlp_init(k2, cfg),
+    }
+
+
+def dec_block_init(key, cfg: ModelConfig):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "ln1": norm_init(cfg),
+        "self_attn": attn.attn_init(k1, cfg),
+        "lnx": norm_init(cfg),
+        "cross_attn": attn.attn_init(k2, cfg),
+        "ln2": norm_init(cfg),
+        "mlp": mlp_init(k3, cfg),
+    }
+
+
+def enc_block_apply(params, x, cfg: ModelConfig, positions):
+    h = apply_norm(params["ln1"], x, cfg)
+    x = x + attn.self_attention(params["attn"], h, cfg, positions=positions,
+                                causal=False)
+    h = apply_norm(params["ln2"], x, cfg)
+    return x + apply_mlp(params["mlp"], h, cfg)
+
+
+def dec_block_apply(params, x, enc_out, cfg: ModelConfig, positions):
+    h = apply_norm(params["ln1"], x, cfg)
+    x = x + attn.self_attention(params["self_attn"], h, cfg, positions=positions)
+    h = apply_norm(params["lnx"], x, cfg)
+    mk, mv = attn.cross_attention_memory(params["cross_attn"], enc_out, cfg)
+    x = x + attn.cross_attention(params["cross_attn"], h, mk, mv, cfg)
+    h = apply_norm(params["ln2"], x, cfg)
+    return x + apply_mlp(params["mlp"], h, cfg)
+
+
+# ---------------------------------------------------------------------------
+# model
+# ---------------------------------------------------------------------------
+
+def encdec_init(key, cfg: ModelConfig):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "embed": embed_init(k1, cfg),
+        "enc_blocks": stack_init(k2, cfg.enc_layers,
+                                 lambda k: enc_block_init(k, cfg)),
+        "dec_blocks": stack_init(k3, cfg.dec_layers,
+                                 lambda k: dec_block_init(k, cfg)),
+        "enc_final_norm": norm_init(cfg),
+        "final_norm": norm_init(cfg),
+    }
+
+
+def encode(params, frames, cfg: ModelConfig):
+    """frames: (B, T, D) precomputed frame embeddings (frontend stub)."""
+    h = frames.astype(jnp.dtype(cfg.dtype))
+    h = shard_api.constrain(h, "batch", None, None)
+    positions = jnp.arange(h.shape[1])[None, :]
+
+    def body(hh, bp):
+        return enc_block_apply(bp, hh, cfg, positions), None
+    if cfg.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    h, _ = jax.lax.scan(body, h, params["enc_blocks"])
+    return apply_norm(params["enc_final_norm"], h, cfg)
+
+
+def encdec_loss(params, batch, cfg: ModelConfig):
+    """batch: {frame_embeds (B,T,D), tokens (B,S), labels (B,S)}."""
+    enc_out = encode(params, batch["frame_embeds"], cfg)
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    h = embed_tokens(params["embed"], tokens, cfg)
+    positions = jnp.arange(s)[None, :]
+
+    def body(hh, bp):
+        return dec_block_apply(bp, hh, enc_out, cfg, positions), None
+    if cfg.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    h, _ = jax.lax.scan(body, h, params["dec_blocks"])
+    h = apply_norm(params["final_norm"], h, cfg)
+    logits = unembed(params["embed"], h, cfg)
+    logits = shard_api.constrain(logits, "batch", None, "model")
+    ce, count = softmax_cross_entropy(logits, batch["labels"], batch.get("loss_mask"))
+    return ce, {"ce": ce, "aux": jnp.zeros((), jnp.float32), "tokens": count}
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill computes encoder output + decoder self-cache + per-layer
+# cross-attention memory; decode is a one-token decoder step.
+# ---------------------------------------------------------------------------
+
+def encdec_init_cache(cfg: ModelConfig, batch: int, max_len: int,
+                      src_len: int | None = None, kv_dtype=None):
+    hd = cfg.resolved_head_dim()
+    kh = cfg.num_kv_heads
+    dt = kv_dtype or jnp.dtype(cfg.dtype)
+    src = src_len or max_len
+    l = cfg.dec_layers
+    return {
+        "k": jnp.zeros((l, batch, max_len, kh, hd), dt),
+        "v": jnp.zeros((l, batch, max_len, kh, hd), dt),
+        "mk": jnp.zeros((l, batch, src, kh, hd), dt),
+        "mv": jnp.zeros((l, batch, src, kh, hd), dt),
+        "index": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+def encdec_prefill(params, batch, cfg: ModelConfig, max_len=None):
+    enc_out = encode(params, batch["frame_embeds"], cfg)
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    t = max_len or s
+    h = embed_tokens(params["embed"], tokens, cfg)
+    positions = jnp.arange(s)[None, :]
+
+    def body(x, bp):
+        hn = apply_norm(bp["ln1"], x, cfg)
+        q, k, v = attn.project_qkv(bp["self_attn"], hn, cfg, positions)
+        if attn._use_blockwise(s, s):
+            o = attn.attend_blockwise(q, k, v, cfg, causal=True)
+        else:
+            o = attn.attend(q, k, v, cfg, attn.causal_mask(s))
+        x = x + attn.project_out(bp["self_attn"], o, x.dtype)
+        hn = apply_norm(bp["lnx"], x, cfg)
+        mk, mv = attn.cross_attention_memory(bp["cross_attn"], enc_out, cfg)
+        x = x + attn.cross_attention(bp["cross_attn"], hn, mk, mv, cfg)
+        hn = apply_norm(bp["ln2"], x, cfg)
+        x = x + apply_mlp(bp["mlp"], hn, cfg)
+        if t > s:
+            pad = ((0, 0), (0, t - s), (0, 0), (0, 0))
+            k, v = jnp.pad(k, pad), jnp.pad(v, pad)
+        return x, (k, v, mk, mv)
+
+    if cfg.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    h, (ks, vs, mks, mvs) = jax.lax.scan(body, h, params["dec_blocks"])
+    h = apply_norm(params["final_norm"], h[:, -1:, :], cfg)
+    logits = unembed(params["embed"], h, cfg)
+    cache = {"k": ks, "v": vs, "mk": mks, "mv": mvs,
+             "index": jnp.full((b,), s, jnp.int32)}
+    return logits, cache
+
+
+def encdec_decode_step(params, cache, tokens, cfg: ModelConfig):
+    h = embed_tokens(params["embed"], tokens, cfg)
+    index = cache["index"]
+
+    def body(x, xs):
+        bp, lk, lv, mk, mv = xs
+        hn = apply_norm(bp["ln1"], x, cfg)
+        o, lk, lv = attn.self_attention_decode(
+            bp["self_attn"], hn, cfg, layer_k=lk, layer_v=lv, index=index)
+        x = x + o
+        hn = apply_norm(bp["lnx"], x, cfg)
+        x = x + attn.cross_attention(bp["cross_attn"], hn,
+                                     mk.astype(x.dtype), mv.astype(x.dtype), cfg)
+        hn = apply_norm(bp["ln2"], x, cfg)
+        x = x + apply_mlp(bp["mlp"], hn, cfg)
+        return x, (lk, lv)
+
+    h, (ks, vs) = jax.lax.scan(
+        body, h, (params["dec_blocks"], cache["k"], cache["v"],
+                  cache["mk"], cache["mv"]))
+    h = apply_norm(params["final_norm"], h, cfg)
+    logits = unembed(params["embed"], h, cfg)
+    new_cache = {"k": ks, "v": vs, "mk": cache["mk"], "mv": cache["mv"],
+                 "index": index + 1}
+    return logits, new_cache

@@ -1,0 +1,166 @@
+"""Zamba2-style hybrid LM: Mamba2 backbone with a weight-shared attention+MLP
+block applied every ``shared_attn_every`` layers [arXiv:2411.15242].
+
+Layers are scanned in groups of ``shared_attn_every`` Mamba2 blocks; the
+shared transformer block (single parameter set, reused at every application)
+closes over the scan body, so its gradient accumulates across applications.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import ssm
+from repro.models.layers import (
+    apply_mlp,
+    apply_norm,
+    embed_init,
+    embed_tokens,
+    mlp_init,
+    norm_init,
+    softmax_cross_entropy,
+    stack_init,
+    unembed,
+)
+from repro.models.transformer import block_apply as tblock_apply
+from repro.models.transformer import block_decode as tblock_decode
+from repro.models.transformer import block_init as tblock_init
+from repro.sharding import api as shard_api
+
+
+def _group_counts(cfg: ModelConfig):
+    per = cfg.shared_attn_every
+    assert cfg.num_layers % per == 0, "num_layers must divide by shared_attn_every"
+    return cfg.num_layers // per, per
+
+
+def _ssm_layer_init(key, cfg: ModelConfig):
+    k1, k2 = jax.random.split(key)
+    return {"ln": norm_init(cfg), "ssm": ssm.ssm_init(k2, cfg)}
+
+
+def hybrid_lm_init(key, cfg: ModelConfig):
+    groups, per = _group_counts(cfg)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "embed": embed_init(k1, cfg),
+        "ssm_blocks": stack_init(
+            k2, groups,
+            lambda kk: stack_init(kk, per, lambda k3_: _ssm_layer_init(k3_, cfg))),
+        "shared_block": tblock_init(k3, cfg),
+        "final_norm": norm_init(cfg),
+    }
+
+
+def _ssm_layer_apply(lp, h, cfg: ModelConfig):
+    return h + ssm.ssm_block_apply(lp["ssm"], apply_norm(lp["ln"], h, cfg), cfg)
+
+
+def hybrid_lm_loss(params, batch, cfg: ModelConfig):
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    h = embed_tokens(params["embed"], tokens, cfg)
+    h = shard_api.constrain(h, "batch", None, None)
+    positions = jnp.arange(s)[None, :]
+    shared = params["shared_block"]
+
+    def gbody(hh, gp):
+        def sbody(hhh, lp):
+            return _ssm_layer_apply(lp, hhh, cfg), None
+        hh, _ = jax.lax.scan(sbody, hh, gp)
+        hh, _ = tblock_apply(shared, hh, cfg, positions)
+        return hh, None
+
+    body = jax.checkpoint(gbody, prevent_cse=False) if cfg.remat else gbody
+    h, _ = jax.lax.scan(body, h, params["ssm_blocks"])
+    h = apply_norm(params["final_norm"], h, cfg)
+    logits = unembed(params["embed"], h, cfg)
+    logits = shard_api.constrain(logits, "batch", None, "model")
+    ce, count = softmax_cross_entropy(logits, batch["labels"], batch.get("loss_mask"))
+    return ce, {"ce": ce, "aux": jnp.zeros((), jnp.float32), "tokens": count}
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+def hybrid_init_cache(cfg: ModelConfig, batch: int, max_len: int,
+                      kv_dtype=None):
+    groups, per = _group_counts(cfg)
+    conv, state = ssm.init_ssm_state(cfg, batch)
+
+    def rep(x, *lead):
+        return jnp.broadcast_to(x, (*lead, *x.shape))
+    kvc = attn.init_kv_cache(cfg, batch, max_len, groups, kv_dtype)
+    return {
+        "conv": rep(conv, groups, per),
+        "ssm": rep(state, groups, per),
+        "k": kvc["k"], "v": kvc["v"],
+        "index": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+def hybrid_lm_prefill(params, batch, cfg: ModelConfig, max_len=None):
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    t = max_len or s
+    h = embed_tokens(params["embed"], tokens, cfg)
+    positions = jnp.arange(s)[None, :]
+    shared = params["shared_block"]
+
+    def gbody(hh, gp):
+        def sbody(hhh, lp):
+            out, st = ssm.ssm_block_prefill(lp["ssm"], apply_norm(lp["ln"], hhh, cfg), cfg)
+            return hhh + out, st
+        hh, (convs, states) = jax.lax.scan(sbody, hh, gp)
+        # shared attention block with KV capture
+        x = hh
+        hn = apply_norm(shared["ln1"], x, cfg)
+        q, k, v = attn.project_qkv(shared["attn"], hn, cfg, positions)
+        if attn._use_blockwise(s, s):
+            o = attn.attend_blockwise(q, k, v, cfg, causal=True)
+        else:
+            o = attn.attend(q, k, v, cfg, attn.causal_mask(s))
+        x = x + attn.project_out(shared["attn"], o, x.dtype)
+        hn = apply_norm(shared["ln2"], x, cfg)
+        x = x + apply_mlp(shared["mlp"], hn, cfg)
+        if t > s:
+            pad = ((0, 0), (0, t - s), (0, 0), (0, 0))
+            k, v = jnp.pad(k, pad), jnp.pad(v, pad)
+        return x, (convs, states, k, v)
+
+    body = jax.checkpoint(gbody, prevent_cse=False) if cfg.remat else gbody
+    h, (convs, states, ks, vs) = jax.lax.scan(body, h, params["ssm_blocks"])
+    h = apply_norm(params["final_norm"], h[:, -1:, :], cfg)
+    logits = unembed(params["embed"], h, cfg)
+    cache = {"conv": convs, "ssm": states, "k": ks, "v": vs,
+             "index": jnp.full((b,), s, jnp.int32)}
+    return logits, cache
+
+
+def hybrid_lm_decode_step(params, cache, tokens, cfg: ModelConfig):
+    h = embed_tokens(params["embed"], tokens, cfg)
+    index = cache["index"]
+    shared = params["shared_block"]
+
+    def gbody(hh, xs):
+        gp, convs, states, lk, lv = xs
+        def sbody(hhh, xs2):
+            lp, cv, st = xs2
+            out, cv, st = ssm.ssm_block_decode(
+                lp["ssm"], apply_norm(lp["ln"], hhh, cfg), cfg, cv, st)
+            return hhh + out, (cv, st)
+        hh, (convs, states) = jax.lax.scan(sbody, hh, (gp, convs, states))
+        hh, lk, lv = tblock_decode(shared, hh, cfg, lk, lv, index)
+        return hh, (convs, states, lk, lv)
+
+    h, (convs, states, ks, vs) = jax.lax.scan(
+        gbody, h,
+        (params["ssm_blocks"], cache["conv"], cache["ssm"], cache["k"], cache["v"]))
+    h = apply_norm(params["final_norm"], h, cfg)
+    logits = unembed(params["embed"], h, cfg)
+    new_cache = {"conv": convs, "ssm": states, "k": ks, "v": vs,
+                 "index": index + 1}
+    return logits, new_cache

@@ -1,0 +1,204 @@
+"""Shared building blocks: norms, RoPE, MLP variants, init helpers.
+
+All modules are pure functions over nested-dict parameter pytrees.  Compute
+dtype (``cfg.dtype``) and parameter storage dtype (``cfg.param_dtype``) are
+taken from the :class:`~repro.configs.base.ModelConfig`; numerically
+sensitive reductions (norms, softmax, loss) run in float32.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+# ---------------------------------------------------------------------------
+# dtype helpers
+# ---------------------------------------------------------------------------
+
+def adtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def pdtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.param_dtype)
+
+
+def cast_act(x, cfg: ModelConfig):
+    return x.astype(adtype(cfg))
+
+
+# ---------------------------------------------------------------------------
+# initializers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, shape, dtype, scale: float = 0.02):
+    return (scale * jax.random.normal(key, shape)).astype(dtype)
+
+
+def zeros_init(shape, dtype):
+    return jnp.zeros(shape, dtype)
+
+
+def ones_init(shape, dtype):
+    return jnp.ones(shape, dtype)
+
+
+def stack_init(key, n: int, init_fn: Callable):
+    """Initialize ``n`` copies of a layer, stacked on a leading axis (for scan)."""
+    keys = jax.random.split(key, n)
+    return jax.vmap(init_fn)(keys)
+
+
+# ---------------------------------------------------------------------------
+# normalization
+# ---------------------------------------------------------------------------
+
+def norm_init(cfg: ModelConfig, dim: int | None = None):
+    d = dim or cfg.d_model
+    p = {"scale": ones_init((d,), pdtype(cfg))}
+    if cfg.norm_type == "layernorm":
+        p["bias"] = zeros_init((d,), pdtype(cfg))
+    return p
+
+
+def apply_norm(params, x, cfg: ModelConfig, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    if cfg.norm_type == "layernorm":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+        y = y * params["scale"].astype(jnp.float32)
+        y = y + params["bias"].astype(jnp.float32)
+    else:  # rmsnorm
+        ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(ms + eps)
+        y = y * params["scale"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def rms_normalize(x, scale=None, eps: float = 1e-6):
+    """Headwise RMS norm used for qk_norm; operates on the last dim."""
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(ms + eps)
+    if scale is not None:
+        y = y * scale.astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float):
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs   # (..., S, hd/2)
+    cos = jnp.cos(angles)[..., None, :]                 # (..., S, 1, hd/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP variants
+# ---------------------------------------------------------------------------
+
+def mlp_init(key, cfg: ModelConfig, d_in: int | None = None, d_ff: int | None = None):
+    d = d_in or cfg.d_model
+    f = d_ff or cfg.d_ff
+    dt = pdtype(cfg)
+    k1, k2, k3 = jax.random.split(key, 3)
+    if cfg.mlp_type == "swiglu":
+        return {
+            "wg": dense_init(k1, (d, f), dt),
+            "wu": dense_init(k2, (d, f), dt),
+            "wd": dense_init(k3, (f, d), dt),
+        }
+    # squared_relu / gelu: single up projection
+    return {
+        "wi": dense_init(k1, (d, f), dt),
+        "wd": dense_init(k2, (f, d), dt),
+    }
+
+
+def apply_mlp(params, x, cfg: ModelConfig):
+    if cfg.mlp_type == "swiglu":
+        g = jnp.einsum("...d,df->...f", x, params["wg"].astype(x.dtype))
+        u = jnp.einsum("...d,df->...f", x, params["wu"].astype(x.dtype))
+        h = jax.nn.silu(g) * u
+    else:
+        h = jnp.einsum("...d,df->...f", x, params["wi"].astype(x.dtype))
+        if cfg.mlp_type == "squared_relu":
+            h = jnp.square(jax.nn.relu(h))
+        else:  # gelu
+            h = jax.nn.gelu(h)
+    return jnp.einsum("...f,fd->...d", h, params["wd"].astype(x.dtype))
+
+
+def mlp_param_count(cfg: ModelConfig, d_in: int | None = None, d_ff: int | None = None) -> int:
+    d = d_in or cfg.d_model
+    f = d_ff or cfg.d_ff
+    return (3 if cfg.mlp_type == "swiglu" else 2) * d * f
+
+
+# ---------------------------------------------------------------------------
+# embeddings / unembedding
+# ---------------------------------------------------------------------------
+
+def embed_init(key, cfg: ModelConfig):
+    dt = pdtype(cfg)
+    k1, k2 = jax.random.split(key)
+    p = {"embedding": dense_init(k1, (cfg.vocab_size, cfg.d_model), dt)}
+    if not cfg.tie_embeddings:
+        p["lm_head"] = dense_init(k2, (cfg.d_model, cfg.vocab_size), dt)
+    return p
+
+
+def embed_tokens(params, tokens, cfg: ModelConfig):
+    emb = params["embedding"]
+    return jnp.take(emb, tokens, axis=0).astype(adtype(cfg))
+
+
+def unembed(params, x, cfg: ModelConfig):
+    """Returns logits (..., V) in the activation dtype (cast up at the loss)."""
+    if cfg.tie_embeddings:
+        w = params["embedding"].astype(x.dtype)   # (V, D)
+        return jnp.einsum("...d,vd->...v", x, w)
+    w = params["lm_head"].astype(x.dtype)         # (D, V)
+    return jnp.einsum("...d,dv->...v", x, w)
+
+
+# ---------------------------------------------------------------------------
+# losses
+# ---------------------------------------------------------------------------
+
+def softmax_cross_entropy(logits, labels, mask=None):
+    """CE over the last dim; one-hot einsum form (TPU/GSPMD friendly).
+
+    logits: (..., V) any float dtype; labels: (...) int32; mask: (...) or None.
+    Returns (mean_loss_f32, token_count).
+    """
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    onehot = jax.nn.one_hot(labels, lf.shape[-1], dtype=lf.dtype)
+    picked = jnp.einsum("...v,...v->...", lf, onehot)
+    nll = lse - picked
+    if mask is None:
+        mask = jnp.ones(nll.shape, jnp.float32)
+    mask = mask.astype(jnp.float32)
+    total = jnp.sum(nll * mask)
+    count = jnp.maximum(jnp.sum(mask), 1.0)
+    return total / count, count

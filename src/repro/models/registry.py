@@ -1,0 +1,116 @@
+"""Model registry: a uniform API over the 10 assigned architecture families."""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+@dataclass(frozen=True)
+class ModelAPI:
+    cfg: ModelConfig
+    init: Callable[[Any], Any]                  # rng -> params
+    loss: Callable[[Any, Any], Any]             # (params, batch) -> (loss, metrics)
+    prefill: Callable[..., Any]                 # (params, batch, max_len) -> (logits, cache)
+    decode_step: Callable[[Any, Any, Any], Any] # (params, cache, tokens) -> (logits, cache)
+    init_cache: Callable[..., Any]              # (batch, max_len) -> cache
+
+
+def build_model(cfg: ModelConfig) -> ModelAPI:
+    fam = cfg.family
+    if fam in ("dense", "moe"):
+        from repro.models import transformer as t
+        return ModelAPI(
+            cfg=cfg,
+            init=functools.partial(t.lm_init, cfg=cfg),
+            loss=functools.partial(t.lm_loss, cfg=cfg),
+            prefill=functools.partial(t.lm_prefill, cfg=cfg),
+            decode_step=functools.partial(t.lm_decode_step, cfg=cfg),
+            init_cache=functools.partial(t.lm_init_cache, cfg),
+        )
+    if fam == "vlm":
+        from repro.models import vlm as v
+        return ModelAPI(
+            cfg=cfg,
+            init=functools.partial(v.vlm_init, cfg=cfg),
+            loss=functools.partial(v.vlm_loss, cfg=cfg),
+            prefill=functools.partial(v.vlm_prefill, cfg=cfg),
+            decode_step=functools.partial(v.vlm_decode_step, cfg=cfg),
+            init_cache=functools.partial(v.vlm_init_cache, cfg),
+        )
+    if fam == "audio":
+        from repro.models import encdec as e
+        return ModelAPI(
+            cfg=cfg,
+            init=functools.partial(e.encdec_init, cfg=cfg),
+            loss=functools.partial(e.encdec_loss, cfg=cfg),
+            prefill=functools.partial(e.encdec_prefill, cfg=cfg),
+            decode_step=functools.partial(e.encdec_decode_step, cfg=cfg),
+            init_cache=functools.partial(e.encdec_init_cache, cfg),
+        )
+    if fam == "ssm":
+        from repro.models import xlstm as x
+        return ModelAPI(
+            cfg=cfg,
+            init=functools.partial(x.xlstm_lm_init, cfg=cfg),
+            loss=functools.partial(x.xlstm_lm_loss, cfg=cfg),
+            prefill=functools.partial(x.xlstm_lm_prefill, cfg=cfg),
+            decode_step=functools.partial(x.xlstm_lm_decode_step, cfg=cfg),
+            init_cache=functools.partial(x.xlstm_init_cache, cfg),
+        )
+    if fam == "hybrid":
+        from repro.models import hybrid as hb
+        return ModelAPI(
+            cfg=cfg,
+            init=functools.partial(hb.hybrid_lm_init, cfg=cfg),
+            loss=functools.partial(hb.hybrid_lm_loss, cfg=cfg),
+            prefill=functools.partial(hb.hybrid_lm_prefill, cfg=cfg),
+            decode_step=functools.partial(hb.hybrid_lm_decode_step, cfg=cfg),
+            init_cache=functools.partial(hb.hybrid_init_cache, cfg),
+        )
+    raise ValueError(f"unknown family {fam!r}")
+
+
+# ---------------------------------------------------------------------------
+# analytic parameter counts (for MODEL_FLOPS = 6·N·D)
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=64)
+def _param_count_cached(cfg: ModelConfig, active_only: bool) -> int:
+    import math
+    model = build_model(cfg)
+    shapes = jax.eval_shape(lambda k: model.init(k), jax.random.key(0))
+    total = sum(math.prod(x.shape) if x.shape else 1
+                for x in jax.tree.leaves(shapes))
+    if active_only and cfg.num_experts:
+        e, k = cfg.num_experts, cfg.num_experts_per_token
+        inactive = cfg.num_layers * 3 * (e - k) * cfg.d_model * cfg.d_ff
+        total -= inactive
+    return total
+
+
+def count_params_analytic(cfg: ModelConfig, active_only: bool = False) -> int:
+    return _param_count_cached(cfg, active_only)
+
+
+def count_flops_params(cfg: ModelConfig, kind: str) -> int:
+    """Parameter count entering MODEL_FLOPS = {6,2}·N·D.
+
+    Embedding-table *gathers* are not matmul FLOPs, and prefill computes
+    logits for the final position only, so:
+      train/decode: N = core + V·D (the unembedding matmul)
+      prefill:      N = core
+    where core excludes both embedding tables.
+    """
+    total = _param_count_cached(cfg, bool(cfg.num_experts))
+    embed_vd = cfg.vocab_size * cfg.d_model
+    untied_extra = 0 if cfg.tie_embeddings else embed_vd
+    core = total - embed_vd - untied_extra
+    if kind == "prefill":
+        return core
+    return core + embed_vd

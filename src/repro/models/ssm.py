@@ -1,0 +1,254 @@
+"""Mamba2 (SSD — state-space duality) block in pure JAX.
+
+Chunked-parallel SSD for train/prefill, recurrent state update for decode.
+The chunked form here is also the reference oracle for the Pallas
+``ssd_scan`` kernel.
+
+Recurrence (per head h, state N×P):
+    h_t = exp(A·dt_t) · h_{t-1} + dt_t · B_t ⊗ x_t
+    y_t = C_t · h_t + D_skip · x_t
+with A = -exp(A_log) < 0, dt = softplus(dt_raw + dt_bias).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense_init, norm_init, ones_init, pdtype, zeros_init
+from repro.sharding import api as shard_api
+
+
+def ssm_dims(cfg: ModelConfig):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    n_heads = d_inner // cfg.ssm_head_dim
+    conv_dim = d_inner + 2 * cfg.ssm_ngroups * cfg.ssm_state
+    return d_inner, n_heads, conv_dim
+
+
+def ssm_init(key, cfg: ModelConfig):
+    d = cfg.d_model
+    d_inner, n_heads, conv_dim = ssm_dims(cfg)
+    g, n, w = cfg.ssm_ngroups, cfg.ssm_state, cfg.ssm_conv_width
+    dt = pdtype(cfg)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    # in_proj emits [z, x, B, C, dt]
+    proj_out = 2 * d_inner + 2 * g * n + n_heads
+    return {
+        "in_proj": dense_init(k1, (d, proj_out), dt),
+        "conv_w": dense_init(k2, (w, conv_dim), dt, scale=0.5),
+        "conv_b": zeros_init((conv_dim,), dt),
+        "A_log": jnp.zeros((n_heads,), jnp.float32),
+        "D": jnp.ones((n_heads,), jnp.float32),
+        "dt_bias": jnp.zeros((n_heads,), jnp.float32),
+        "norm_scale": ones_init((d_inner,), dt),
+        "out_proj": dense_init(k3, (d_inner, d), dt),
+    }
+
+
+def ssm_param_count(cfg: ModelConfig) -> int:
+    d = cfg.d_model
+    d_inner, n_heads, conv_dim = ssm_dims(cfg)
+    g, n, w = cfg.ssm_ngroups, cfg.ssm_state, cfg.ssm_conv_width
+    proj_out = 2 * d_inner + 2 * g * n + n_heads
+    return (d * proj_out + w * conv_dim + conv_dim + 3 * n_heads
+            + d_inner + d_inner * d)
+
+
+# ---------------------------------------------------------------------------
+# projections / conv
+# ---------------------------------------------------------------------------
+
+def _split_proj(proj, cfg: ModelConfig):
+    d_inner, n_heads, _ = ssm_dims(cfg)
+    gn = cfg.ssm_ngroups * cfg.ssm_state
+    z = proj[..., :d_inner]
+    xbc = proj[..., d_inner: 2 * d_inner + 2 * gn]
+    dt_raw = proj[..., 2 * d_inner + 2 * gn:]
+    return z, xbc, dt_raw
+
+
+def causal_conv(xbc, conv_w, conv_b):
+    """Depthwise causal conv: xbc (B,S,C), conv_w (W,C) -> (B,S,C)."""
+    w = conv_w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (w - 1, 0), (0, 0)))
+    out = jnp.zeros_like(xbc)
+    s = xbc.shape[1]
+    for i in range(w):
+        out = out + pad[:, i: i + s, :] * conv_w[i][None, None, :].astype(xbc.dtype)
+    return out + conv_b[None, None, :].astype(xbc.dtype)
+
+
+def conv_step(x_t, conv_state, conv_w, conv_b):
+    """One-token conv: x_t (B,C); conv_state (B,W-1,C) -> (y_t, new_state)."""
+    w = conv_w.shape[0]
+    window = jnp.concatenate([conv_state, x_t[:, None, :]], axis=1)  # (B,W,C)
+    y = jnp.einsum("bwc,wc->bc", window, conv_w.astype(x_t.dtype))
+    y = y + conv_b[None, :].astype(x_t.dtype)
+    return y, window[:, 1:, :]
+
+
+def _gates(xbc_conv, dt_raw, params, cfg: ModelConfig):
+    d_inner, n_heads, _ = ssm_dims(cfg)
+    g, n = cfg.ssm_ngroups, cfg.ssm_state
+    p = cfg.ssm_head_dim
+    x = xbc_conv[..., :d_inner]
+    bmat = xbc_conv[..., d_inner: d_inner + g * n]
+    cmat = xbc_conv[..., d_inner + g * n:]
+    lead = x.shape[:-1]
+    xh = x.reshape(*lead, n_heads, p)
+    bm = bmat.reshape(*lead, g, n).astype(jnp.float32)
+    cm = cmat.reshape(*lead, g, n).astype(jnp.float32)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])
+    a = -jnp.exp(params["A_log"])                      # (H,) negative
+    da = dt * a                                        # (..., H) log-decay
+    return xh, bm, cm, dt, da
+
+
+# ---------------------------------------------------------------------------
+# chunked SSD (train / prefill)  — reference for kernels/ssd_scan
+# ---------------------------------------------------------------------------
+
+def ssd_chunked(xh, bm, cm, dt, da, d_skip, cfg: ModelConfig, h0=None):
+    """xh (B,S,H,P); bm/cm (B,S,G,N) fp32; dt/da (B,S,H) fp32.
+
+    Sequential ``lax.scan`` over chunks with carried state, so the quadratic
+    intra-chunk tensors exist for one chunk at a time (bounded working set —
+    the same pipelined-streaming discipline as the paper's batched mode).
+    Returns (y (B,S,H,P), h_final (B,H,N,P)).
+    """
+    b, s, nh, p = xh.shape
+    g, n = bm.shape[2], bm.shape[3]
+    hg = nh // g                                   # heads per B/C group
+    q = min(cfg.ssm_chunk, s)
+    s_orig = s
+    if s % q:                                      # pad with identity steps:
+        pad = q - s % q                            # da=0 (decay 1), dt/B/C/x = 0
+        zpad = lambda t: jnp.pad(t, [(0, 0), (0, pad)] + [(0, 0)] * (t.ndim - 2))
+        xh, bm, cm, dt, da = map(zpad, (xh, bm, cm, dt, da))
+        s = s + pad
+    nc = s // q
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    if h0 is None:
+        h0 = jnp.zeros((b, nh, n, p), jnp.float32)
+
+    def chunk_body(h_state, xs):
+        xq, bq, cq, dtq, daq = xs                  # (b,q,...) one chunk
+        sgm = jnp.cumsum(daq, axis=1)              # (b,q,h) inclusive
+        s_last = sgm[:, -1, :]                     # (b,h)
+        # intra-chunk: M[j,i] = exp(s_j - s_i) * (C_j . B_i), i <= j
+        cb = jnp.einsum("bjgN,bigN->bgji", cq, bq)           # (b,g,q,q)
+        cb = jnp.repeat(cb, hg, axis=1)                      # (b,h,q,q)
+        ldiff = sgm[:, :, None, :] - sgm[:, None, :, :]      # (b,j,i,h)
+        ldiff = jnp.transpose(ldiff, (0, 3, 1, 2))           # (b,h,j,i)
+        m = jnp.where(mask[None, None], cb * jnp.exp(ldiff), 0.0)
+        dtx = dtq[..., None] * xq.astype(jnp.float32)        # (b,q,h,p)
+        y_intra = jnp.einsum("bhji,bihp->bjhp", m, dtx)
+        # inter-chunk: y_j += exp(s_j) * C_j . h_prev
+        cq_h = jnp.repeat(cq, hg, axis=2)                    # (b,q,h,N)
+        y_inter = jnp.einsum("bqhN,bhNp->bqhp", cq_h, h_state) \
+            * jnp.exp(sgm)[..., None]
+        # state update: h_new = exp(s_last) h_prev + sum_i exp(s_last-s_i) B_i (x) dtx_i
+        decay_to_end = jnp.exp(s_last[:, None, :] - sgm)     # (b,q,h)
+        bq_h = jnp.repeat(bq, hg, axis=2)                    # (b,q,h,N)
+        chunk_state = jnp.einsum("bqhN,bqhp,bqh->bhNp", bq_h, dtx, decay_to_end)
+        h_new = h_state * jnp.exp(s_last)[..., None, None] + chunk_state
+        return h_new, y_intra + y_inter
+
+    xs = (
+        jnp.moveaxis(xh.reshape(b, nc, q, nh, p), 1, 0),
+        jnp.moveaxis(bm.reshape(b, nc, q, g, n), 1, 0),
+        jnp.moveaxis(cm.reshape(b, nc, q, g, n), 1, 0),
+        jnp.moveaxis(dt.reshape(b, nc, q, nh), 1, 0),
+        jnp.moveaxis(da.reshape(b, nc, q, nh), 1, 0),
+    )
+    hfin, ys = jax.lax.scan(jax.checkpoint(chunk_body), h0, xs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, s, nh, p)
+    y = y + d_skip[None, None, :, None] * xh.astype(jnp.float32)
+    return y[:, :s_orig], hfin
+
+
+def ssd_recurrent_step(state, xh, bm, cm, dt, da, d_skip):
+    """One decode step. state (B,H,N,P); xh (B,H,P); bm/cm (B,G,N); dt/da (B,H)."""
+    b, nh, n, p = state.shape
+    g = bm.shape[1]
+    hg = nh // g
+    bm_h = jnp.repeat(bm, hg, axis=1)            # (B,H,N)
+    cm_h = jnp.repeat(cm, hg, axis=1)
+    dtx = dt[..., None] * xh.astype(jnp.float32)  # (B,H,P)
+    new_state = state * jnp.exp(da)[..., None, None] \
+        + bm_h[..., :, None] * dtx[..., None, :]  # (B,H,N,P)
+    y = jnp.einsum("bhN,bhNp->bhp", cm_h, new_state)
+    y = y + d_skip[None, :, None] * xh.astype(jnp.float32)
+    return y, new_state
+
+
+# ---------------------------------------------------------------------------
+# block application
+# ---------------------------------------------------------------------------
+
+def _gated_norm(y, z, scale, eps=1e-6):
+    """Mamba2 gated RMSNorm: rmsnorm(y * silu(z)) * scale."""
+    yf = y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    ms = jnp.mean(jnp.square(yf), axis=-1, keepdims=True)
+    return (yf * jax.lax.rsqrt(ms + eps)) * scale.astype(jnp.float32)
+
+
+def ssm_block_apply(params, x, cfg: ModelConfig, use_kernel: bool = False):
+    """x: (B, S, D) -> (B, S, D). Full-sequence (train / prefill)."""
+    b, s, d = x.shape
+    d_inner, n_heads, _ = ssm_dims(cfg)
+    proj = jnp.einsum("bsd,dp->bsp", x, params["in_proj"].astype(x.dtype))
+    z, xbc, dt_raw = _split_proj(proj, cfg)
+    xbc = jax.nn.silu(causal_conv(xbc, params["conv_w"], params["conv_b"]))
+    xh, bm, cm, dt, da = _gates(xbc, dt_raw, params, cfg)
+    if use_kernel:
+        from repro.kernels import ops as kops
+        y, _ = kops.ssd_scan(xh, bm, cm, dt, da, params["D"], chunk=cfg.ssm_chunk)
+    else:
+        y, _ = ssd_chunked(xh, bm, cm, dt, da, params["D"], cfg)
+    y = y.reshape(b, s, d_inner)
+    y = _gated_norm(y, z, params["norm_scale"]).astype(x.dtype)
+    return jnp.einsum("bsi,id->bsd", y, params["out_proj"].astype(x.dtype))
+
+
+def ssm_block_prefill(params, x, cfg: ModelConfig):
+    """Like ssm_block_apply but also returns (conv_state, ssm_state)."""
+    b, s, d = x.shape
+    d_inner, n_heads, conv_dim = ssm_dims(cfg)
+    w = cfg.ssm_conv_width
+    proj = jnp.einsum("bsd,dp->bsp", x, params["in_proj"].astype(x.dtype))
+    z, xbc, dt_raw = _split_proj(proj, cfg)
+    conv_state = xbc[:, -(w - 1):, :] if s >= w - 1 else jnp.pad(
+        xbc, ((0, 0), (w - 1 - s, 0), (0, 0)))
+    xbc = jax.nn.silu(causal_conv(xbc, params["conv_w"], params["conv_b"]))
+    xh, bm, cm, dt, da = _gates(xbc, dt_raw, params, cfg)
+    y, hfin = ssd_chunked(xh, bm, cm, dt, da, params["D"], cfg)
+    y = y.reshape(b, s, d_inner)
+    y = _gated_norm(y, z, params["norm_scale"]).astype(x.dtype)
+    out = jnp.einsum("bsi,id->bsd", y, params["out_proj"].astype(x.dtype))
+    return out, (conv_state, hfin)
+
+
+def ssm_block_decode(params, x, cfg: ModelConfig, conv_state, ssm_state):
+    """x: (B, 1, D) one-token decode with carried states."""
+    b, _, d = x.shape
+    d_inner, n_heads, conv_dim = ssm_dims(cfg)
+    proj = jnp.einsum("bsd,dp->bsp", x, params["in_proj"].astype(x.dtype))
+    z, xbc, dt_raw = _split_proj(proj[:, 0], cfg)   # squeeze S=1
+    y_conv, conv_state = conv_step(xbc, conv_state, params["conv_w"], params["conv_b"])
+    xbc = jax.nn.silu(y_conv)
+    xh, bm, cm, dt, da = _gates(xbc, dt_raw, params, cfg)
+    y, ssm_state = ssd_recurrent_step(ssm_state, xh, bm, cm, dt, da, params["D"])
+    y = y.reshape(b, d_inner)
+    y = _gated_norm(y, z, params["norm_scale"]).astype(x.dtype)
+    out = jnp.einsum("bi,id->bd", y, params["out_proj"].astype(x.dtype))
+    return out[:, None, :], conv_state, ssm_state
+
+
+def init_ssm_state(cfg: ModelConfig, batch: int):
+    d_inner, n_heads, conv_dim = ssm_dims(cfg)
+    return (
+        jnp.zeros((batch, cfg.ssm_conv_width - 1, conv_dim), jnp.dtype(cfg.dtype)),
+        jnp.zeros((batch, n_heads, cfg.ssm_state, cfg.ssm_head_dim), jnp.float32),
+    )

@@ -1,0 +1,281 @@
+"""Decoder-only transformer LM (dense and MoE) with scan-over-layers.
+
+Used directly by the dense / moe / vlm families and as the building block of
+the encoder-decoder and hybrid families.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models.layers import (
+    adtype,
+    apply_mlp,
+    apply_norm,
+    embed_init,
+    embed_tokens,
+    mlp_init,
+    norm_init,
+    softmax_cross_entropy,
+    stack_init,
+    unembed,
+)
+from repro.sharding import api as shard_api
+
+
+# ---------------------------------------------------------------------------
+# blocks
+# ---------------------------------------------------------------------------
+
+def block_init(key, cfg: ModelConfig):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p = {
+        "ln1": norm_init(cfg),
+        "attn": attn.attn_init(k1, cfg),
+        "ln2": norm_init(cfg),
+    }
+    if cfg.num_experts:
+        p["moe"] = moe_mod.moe_init(k2, cfg)
+    else:
+        p["mlp"] = mlp_init(k3, cfg)
+    return p
+
+
+def block_apply(params, x, cfg: ModelConfig, positions):
+    x = shard_api.constrain(x, "batch", None, None)
+    h = apply_norm(params["ln1"], x, cfg)
+    h = attn.self_attention(params["attn"], h, cfg, positions=positions)
+    x = x + h
+    h = apply_norm(params["ln2"], x, cfg)
+    if cfg.num_experts:
+        h, aux = moe_mod.moe_apply(params["moe"], h, cfg)
+    else:
+        h, aux = apply_mlp(params["mlp"], h, cfg), jnp.zeros((), jnp.float32)
+    x = x + h
+    x = shard_api.constrain(x, "batch", None, None)
+    return x, aux
+
+
+def block_decode(params, x, cfg: ModelConfig, layer_k, layer_v, index):
+    h = apply_norm(params["ln1"], x, cfg)
+    h, layer_k, layer_v = attn.self_attention_decode(
+        params["attn"], h, cfg, layer_k=layer_k, layer_v=layer_v, index=index)
+    x = x + h
+    h = apply_norm(params["ln2"], x, cfg)
+    if cfg.num_experts:
+        h, _ = moe_mod.moe_apply(params["moe"], h, cfg)
+    else:
+        h = apply_mlp(params["mlp"], h, cfg)
+    return x + h, layer_k, layer_v
+
+
+# ---------------------------------------------------------------------------
+# model
+# ---------------------------------------------------------------------------
+
+def lm_init(key, cfg: ModelConfig):
+    k1, k2 = jax.random.split(key)
+    return {
+        "embed": embed_init(k1, cfg),
+        "blocks": stack_init(k2, cfg.num_layers, lambda k: block_init(k, cfg)),
+        "final_norm": norm_init(cfg),
+    }
+
+
+def apply_blocks(params, h, cfg: ModelConfig, positions):
+    """h: (B, S, D) -> (h, aux_sum); scan over the stacked layer params."""
+    def body(carry, layer_params):
+        carry, aux = block_apply(layer_params, carry, cfg, positions)
+        return carry, aux
+    if cfg.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    h, auxs = jax.lax.scan(body, h, params["blocks"])
+    return h, jnp.sum(auxs)
+
+
+def apply_blocks_decode(params, h, cfg: ModelConfig, cache):
+    """h: (B,1,D); cache: stacked (L,B,T,K,hd) k/v + index (B,)."""
+    index = cache["index"]
+
+    def body(carry, xs):
+        layer_params, lk, lv = xs
+        carry, lk, lv = block_decode(layer_params, carry, cfg, lk, lv, index)
+        return carry, (lk, lv)
+
+    h, (new_k, new_v) = jax.lax.scan(body, h, (params["blocks"], cache["k"], cache["v"]))
+    new_cache = {"k": new_k, "v": new_v, "index": index + 1}
+    return h, new_cache
+
+
+def hidden_to_logits(params, h, cfg: ModelConfig):
+    h = apply_norm(params["final_norm"], h, cfg)
+    logits = unembed(params["embed"], h, cfg)
+    return shard_api.constrain(logits, "batch", None, "model")
+
+
+# ---------------------------------------------------------------------------
+# training forward / loss
+# ---------------------------------------------------------------------------
+
+AUX_LOSS_WEIGHT = 0.01
+
+
+def lm_loss(params, batch, cfg: ModelConfig):
+    """batch: {tokens (B,S), labels (B,S)} -> (loss, metrics)."""
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    h = embed_tokens(params["embed"], tokens, cfg)
+    h = shard_api.constrain(h, "batch", None, None)
+    positions = jnp.arange(s)[None, :]
+    h, aux = apply_blocks(params, h, cfg, positions)
+    logits = hidden_to_logits(params, h, cfg)
+    mask = batch.get("loss_mask")
+    ce, count = softmax_cross_entropy(logits, batch["labels"], mask)
+    loss = ce + AUX_LOSS_WEIGHT * aux
+    return loss, {"ce": ce, "aux": aux, "tokens": count}
+
+
+# ---------------------------------------------------------------------------
+# serving forward
+# ---------------------------------------------------------------------------
+
+def lm_prefill(params, batch, cfg: ModelConfig, max_len: int | None = None):
+    """Prefill over the prompt; returns (last-token logits, KV cache).
+
+    The cache is sized to ``max_len`` (defaults to prompt length).
+    """
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    t = max_len or s
+    h = embed_tokens(params["embed"], tokens, cfg)
+    positions = jnp.arange(s)[None, :]
+
+    def body(carry, layer_params):
+        x = carry
+        hn = apply_norm(layer_params["ln1"], x, cfg)
+        q, k, v = attn.project_qkv(layer_params["attn"], hn, cfg, positions)
+        if attn._use_blockwise(s, s):
+            o = attn.attend_blockwise(q, k, v, cfg, causal=True)
+        else:
+            o = attn.attend(q, k, v, cfg, attn.causal_mask(s))
+        x = x + attn.project_out(layer_params["attn"], o, x.dtype)
+        hn = apply_norm(layer_params["ln2"], x, cfg)
+        if cfg.num_experts:
+            hn, _ = moe_mod.moe_apply(layer_params["moe"], hn, cfg)
+        else:
+            hn = apply_mlp(layer_params["mlp"], hn, cfg)
+        x = x + hn
+        if t > s:
+            pad = ((0, 0), (0, t - s), (0, 0), (0, 0))
+            k, v = jnp.pad(k, pad), jnp.pad(v, pad)
+        return x, (k, v)
+
+    if cfg.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    h, (ks, vs) = jax.lax.scan(body, h, params["blocks"])
+    logits = hidden_to_logits(params, h[:, -1:, :], cfg)
+    # cache layout is imposed by the caller via out_shardings (shape-aware:
+    # sequence-sharded for long-context, batch-sharded otherwise)
+    cache = {"k": ks, "v": vs, "index": jnp.full((b,), s, jnp.int32)}
+    return logits, cache
+
+
+def lm_decode_step(params, cache, tokens, cfg: ModelConfig):
+    """tokens: (B, 1) -> (logits (B,1,V), new cache)."""
+    h = embed_tokens(params["embed"], tokens, cfg)
+    h, cache = apply_blocks_decode(params, h, cfg, cache)
+    logits = hidden_to_logits(params, h, cfg)
+    return logits, cache
+
+
+def lm_decode_step_inplace(params, cache, tokens, cfg: ModelConfig,
+                           sp_axis: str | None = None, sp_batch_axes=None):
+    """Optimized decode (§Perf): the cache is a scan *carry* updated with
+    O(1)-token writes (no per-layer cache rewrite), and attention runs over
+    the stale cache merged with the current token's k/v.  With ``sp_axis``
+    the sequence-sharded cache is attended via shard_map split-KV partials
+    (only (B,H) statistics cross the interconnect).  Supports int8-quantized
+    caches (``k_scale``/``v_scale`` present): values are dequantized at use,
+    new tokens quantized at write — halves cache traffic vs bf16."""
+    index = cache["index"]
+    h = embed_tokens(params["embed"], tokens, cfg)
+    n_layers = cache["k"].shape[0]
+    quant = "k_scale" in cache
+
+    def body(carry, xs):
+        if quant:
+            h, ck, cv, cks, cvs = carry
+        else:
+            h, ck, cv = carry
+        layer_params, li = xs
+        x = shard_api.constrain(h, "batch", None, None)
+        hn = apply_norm(layer_params["ln1"], x, cfg)
+        positions = index[:, None]
+        q, k_new, v_new = attn.project_qkv(layer_params["attn"], hn, cfg,
+                                           positions)
+        # Megatron-style decode: activations cross the TP group (MBs), the
+        # weights stay put — see EXPERIMENTS.md §Perf (decode cell)
+        q = shard_api.constrain(q, "batch", None, None, None)
+        k_new = shard_api.constrain(k_new, "batch", None, None, None)
+        v_new = shard_api.constrain(v_new, "batch", None, None, None)
+        lk = jax.lax.dynamic_index_in_dim(ck, li, 0, keepdims=False)
+        lv = jax.lax.dynamic_index_in_dim(cv, li, 0, keepdims=False)
+        if quant:
+            lks = jax.lax.dynamic_index_in_dim(cks, li, 0, keepdims=False)
+            lvs = jax.lax.dynamic_index_in_dim(cvs, li, 0, keepdims=False)
+            lk = attn.dequantize_kv(lk, lks, q.dtype)
+            lv = attn.dequantize_kv(lv, lvs, q.dtype)
+        if sp_axis:
+            o = attn.sp_decode_attention(q, lk, lv, k_new, v_new, cfg, index,
+                                         axis=sp_axis,
+                                         batch_axes=sp_batch_axes)
+        else:
+            o = attn.decode_attention_merged(q, lk, lv, k_new, v_new, cfg,
+                                             index)
+        x = x + attn.project_out(layer_params["attn"], o, x.dtype)
+        x = shard_api.constrain(x, "batch", None, None)
+        hn = apply_norm(layer_params["ln2"], x, cfg)
+        if cfg.num_experts:
+            hn, _ = moe_mod.moe_apply(layer_params["moe"], hn, cfg)
+        else:
+            hn = apply_mlp(layer_params["mlp"], hn, cfg)
+        x = shard_api.constrain(x + hn, "batch", None, None)
+
+        # O(1)-token in-place cache write at (layer li, batch b, index_b)
+        def write(c, new):
+            def one(cb, nb, idx):     # cb (L,T,K,hd); nb (1,K,hd)
+                return jax.lax.dynamic_update_slice(
+                    cb, nb[None].astype(cb.dtype), (li, idx, 0, 0))
+            return jax.vmap(one, in_axes=(1, 0, 0), out_axes=1)(c, new, index)
+        if quant:
+            kq, ks = attn.quantize_kv(k_new)
+            vq, vs = attn.quantize_kv(v_new)
+            ck, cv = write(ck, kq), write(cv, vq)
+            cks, cvs = write(cks, ks), write(cvs, vs)
+            return (x, ck, cv, cks, cvs), None
+        ck = write(ck, k_new)
+        cv = write(cv, v_new)
+        return (x, ck, cv), None
+
+    if quant:
+        carry0 = (h, cache["k"], cache["v"], cache["k_scale"],
+                  cache["v_scale"])
+    else:
+        carry0 = (h, cache["k"], cache["v"])
+    out_carry, _ = jax.lax.scan(
+        body, carry0, (params["blocks"], jnp.arange(n_layers)))
+    h = out_carry[0]
+    logits = hidden_to_logits(params, h, cfg)
+    new_cache = {"k": out_carry[1], "v": out_carry[2], "index": index + 1}
+    if quant:
+        new_cache["k_scale"], new_cache["v_scale"] = out_carry[3], out_carry[4]
+    return logits, new_cache
+
+
+def lm_init_cache(cfg: ModelConfig, batch: int, max_len: int):
+    return attn.init_kv_cache(cfg, batch, max_len, cfg.num_layers)

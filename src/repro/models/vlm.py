@@ -1,0 +1,78 @@
+"""VLM backbone (Phi-3-vision geometry): phi3-mini decoder + CLIP frontend
+STUB — ``input_specs`` provides precomputed patch embeddings at d_model,
+fused at the head of the token sequence.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import embed_tokens, softmax_cross_entropy
+from repro.models.transformer import (
+    apply_blocks,
+    hidden_to_logits,
+    lm_decode_step,
+    lm_init,
+    lm_init_cache,
+)
+from repro.sharding import api as shard_api
+
+vlm_init = lm_init
+vlm_init_cache = lm_init_cache
+vlm_decode_step = lm_decode_step
+
+
+def _fuse(params, batch, cfg: ModelConfig):
+    """Prepend patch embeddings to token embeddings."""
+    tok = embed_tokens(params["embed"], batch["tokens"], cfg)       # (B,S_t,D)
+    patches = batch["patch_embeds"].astype(tok.dtype)               # (B,P,D)
+    return jnp.concatenate([patches, tok], axis=1)
+
+
+def vlm_loss(params, batch, cfg: ModelConfig):
+    """batch: {tokens (B,S_t), patch_embeds (B,P,D), labels (B,S_t)}."""
+    h = _fuse(params, batch, cfg)
+    h = shard_api.constrain(h, "batch", None, None)
+    b, s, _ = h.shape
+    positions = jnp.arange(s)[None, :]
+    h, aux = apply_blocks(params, h, cfg, positions)
+    p = batch["patch_embeds"].shape[1]
+    logits = hidden_to_logits(params, h[:, p:, :], cfg)             # text region
+    ce, count = softmax_cross_entropy(logits, batch["labels"], batch.get("loss_mask"))
+    return ce, {"ce": ce, "aux": aux, "tokens": count}
+
+
+def vlm_prefill(params, batch, cfg: ModelConfig, max_len=None):
+    """Prefill over [patches; prompt tokens]; logits for the last position."""
+    from repro.models import attention as attn
+    from repro.models.layers import apply_mlp, apply_norm
+    from repro.models import moe as moe_mod
+
+    h = _fuse(params, batch, cfg)
+    b, s, _ = h.shape
+    t = max_len or s
+    positions = jnp.arange(s)[None, :]
+
+    def body(x, layer_params):
+        hn = apply_norm(layer_params["ln1"], x, cfg)
+        q, k, v = attn.project_qkv(layer_params["attn"], hn, cfg, positions)
+        if attn._use_blockwise(s, s):
+            o = attn.attend_blockwise(q, k, v, cfg, causal=True)
+        else:
+            o = attn.attend(q, k, v, cfg, attn.causal_mask(s))
+        x = x + attn.project_out(layer_params["attn"], o, x.dtype)
+        hn = apply_norm(layer_params["ln2"], x, cfg)
+        x = x + apply_mlp(layer_params["mlp"], hn, cfg)
+        if t > s:
+            pad = ((0, 0), (0, t - s), (0, 0), (0, 0))
+            k, v = jnp.pad(k, pad), jnp.pad(v, pad)
+        return x, (k, v)
+
+    if cfg.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    h, (ks, vs) = jax.lax.scan(body, h, params["blocks"])
+    from repro.models.transformer import hidden_to_logits as h2l
+    logits = h2l(params, h[:, -1:, :], cfg)
+    cache = {"k": ks, "v": vs, "index": jnp.full((b,), s, jnp.int32)}
+    return logits, cache

@@ -1,0 +1,496 @@
+"""xLSTM blocks: mLSTM (matrix-memory, parallelizable) and sLSTM (scalar
+memory, sequential scan) [arXiv:2405.04517].
+
+The mLSTM parallel (training) form and the recurrent (decode) form are kept
+numerically consistent — a property test asserts their equivalence.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import (
+    dense_init,
+    norm_init,
+    apply_norm,
+    ones_init,
+    pdtype,
+    zeros_init,
+)
+from repro.models.ssm import causal_conv, conv_step
+
+NEG_INF = -1e30
+
+
+def mlstm_dims(cfg: ModelConfig):
+    d_inner = int(cfg.mlstm_proj_factor * cfg.d_model)
+    hd = d_inner // cfg.num_heads
+    return d_inner, hd
+
+
+# ---------------------------------------------------------------------------
+# mLSTM block
+# ---------------------------------------------------------------------------
+
+def mlstm_init(key, cfg: ModelConfig):
+    d = cfg.d_model
+    d_inner, hd = mlstm_dims(cfg)
+    dt = pdtype(cfg)
+    ks = jax.random.split(key, 8)
+    return {
+        "ln": norm_init(cfg),
+        "up_proj": dense_init(ks[0], (d, 2 * d_inner), dt),
+        "conv_w": dense_init(ks[1], (4, d_inner), dt, scale=0.5),
+        "conv_b": zeros_init((d_inner,), dt),
+        "wq": dense_init(ks[2], (d_inner, d_inner), dt),
+        "wk": dense_init(ks[3], (d_inner, d_inner), dt),
+        "wv": dense_init(ks[4], (d_inner, d_inner), dt),
+        "w_i": dense_init(ks[5], (d_inner, cfg.num_heads), dt),
+        "b_i": zeros_init((cfg.num_heads,), jnp.float32),
+        "w_f": dense_init(ks[6], (d_inner, cfg.num_heads), dt),
+        "b_f": jnp.full((cfg.num_heads,), 3.0, jnp.float32),   # open forget gates
+        "gn_scale": ones_init((d_inner,), dt),
+        "down_proj": dense_init(ks[7], (d_inner, d), dt),
+    }
+
+
+def mlstm_param_count(cfg: ModelConfig) -> int:
+    d = cfg.d_model
+    d_inner, _ = mlstm_dims(cfg)
+    h = cfg.num_heads
+    return (d * 2 * d_inner + 4 * d_inner + d_inner
+            + 3 * d_inner * d_inner + 2 * d_inner * h + 2 * h
+            + d_inner + d_inner * d + 2 * d)   # + block layernorm
+
+
+def _mlstm_qkv_gates(params, x_in, cfg: ModelConfig):
+    """x_in: (B,S,d_inner) pre-conv path. Returns q,k,v (B,S,H,hd), i,f (B,S,H)."""
+    b, s, d_inner = x_in.shape
+    h = cfg.num_heads
+    hd = d_inner // h
+    x_conv = jax.nn.silu(causal_conv(x_in, params["conv_w"], params["conv_b"]))
+    q = jnp.einsum("bsd,de->bse", x_conv, params["wq"].astype(x_in.dtype))
+    k = jnp.einsum("bsd,de->bse", x_conv, params["wk"].astype(x_in.dtype))
+    v = jnp.einsum("bsd,de->bse", x_in, params["wv"].astype(x_in.dtype))
+    q = q.reshape(b, s, h, hd)
+    k = k.reshape(b, s, h, hd)
+    v = v.reshape(b, s, h, hd)
+    i_raw = jnp.einsum("bsd,dh->bsh", x_conv, params["w_i"].astype(x_in.dtype))
+    f_raw = jnp.einsum("bsd,dh->bsh", x_conv, params["w_f"].astype(x_in.dtype))
+    i_raw = i_raw.astype(jnp.float32) + params["b_i"]
+    f_raw = f_raw.astype(jnp.float32) + params["b_f"]
+    return q, k, v, i_raw, f_raw, x_conv
+
+
+def _headwise_groupnorm(y, scale, eps=1e-6):
+    """y: (B,S,H,hd) — layernorm per head, then flatten and scale."""
+    yf = y.astype(jnp.float32)
+    mu = jnp.mean(yf, axis=-1, keepdims=True)
+    var = jnp.var(yf, axis=-1, keepdims=True)
+    yn = (yf - mu) * jax.lax.rsqrt(var + eps)
+    b, s, h, hd = y.shape
+    return yn.reshape(b, s, h * hd) * scale.astype(jnp.float32)
+
+
+def mlstm_parallel(q, k, v, i_raw, f_raw):
+    """Stabilized parallel mLSTM (xLSTM paper eq. 29-33).
+
+    q,k,v: (B,S,H,hd); i_raw,f_raw: (B,S,H) fp32. Returns (B,S,H,hd).
+    """
+    b, s, h, hd = q.shape
+    logf = jax.nn.log_sigmoid(f_raw)                       # (B,S,H)
+    fcum = jnp.cumsum(logf, axis=1)                        # F_j inclusive
+    # D[j,i] = F_j - F_i + i_i   for i <= j   (decay from i+1..j, gate i_i)
+    dmat = (fcum[:, :, None, :] - fcum[:, None, :, :]
+            + i_raw[:, None, :, :])                        # (B,j,i,H)
+    mask = jnp.tril(jnp.ones((s, s), bool))
+    dmat = jnp.where(mask[None, :, :, None], dmat, NEG_INF)
+    mstab = jnp.max(dmat, axis=2)                          # (B,j,H)
+    dexp = jnp.exp(dmat - mstab[:, :, None, :])
+    scale = 1.0 / jnp.sqrt(jnp.asarray(hd, jnp.float32))
+    scores = jnp.einsum("bjhe,bihe->bjih", q, k).astype(jnp.float32) * scale
+    w = scores * dexp                                      # (B,j,i,H)
+    denom = jnp.maximum(jnp.abs(jnp.sum(w, axis=2)), jnp.exp(-mstab))  # (B,j,H)
+    y = jnp.einsum("bjih,bihe->bjhe", w, v.astype(jnp.float32))
+    return (y / denom[..., None]).astype(q.dtype)
+
+
+def mlstm_chunked(q, k, v, i_raw, f_raw, chunk: int = 1024, state=None):
+    """Chunk-scanned stabilized mLSTM, numerically equal to the recurrent
+    form: carried (C, n, m) state across chunks; quadratic tensors exist one
+    chunk at a time.
+
+    q,k,v: (B,S,H,hd); i_raw,f_raw: (B,S,H) fp32. Returns (y, (C, n, m)).
+    """
+    b, s, h, hd = q.shape
+    cq = min(chunk, s)
+    s_orig = s
+    if s % cq:    # pad with identity steps: f=+inf (decay 1), i=-inf, qkv=0
+        pad = cq - s % cq
+        zpad = lambda t: jnp.pad(t, [(0, 0), (0, pad)] + [(0, 0)] * (t.ndim - 2))
+        q, k, v = map(zpad, (q, k, v))
+        i_raw = jnp.pad(i_raw, ((0, 0), (0, pad), (0, 0)), constant_values=NEG_INF)
+        f_raw = jnp.pad(f_raw, ((0, 0), (0, pad), (0, 0)), constant_values=40.0)
+        s = s + pad
+    nc = s // cq
+    scale = 1.0 / jnp.sqrt(jnp.asarray(hd, jnp.float32))
+    mask = jnp.tril(jnp.ones((cq, cq), bool))
+    if state is None:
+        C0 = jnp.zeros((b, h, hd, hd), jnp.float32)
+        n0 = jnp.zeros((b, h, hd), jnp.float32)
+        m0 = jnp.full((b, h), NEG_INF, jnp.float32)
+    else:
+        C0, n0, m0 = state
+
+    def body(carry, xs):
+        C, n, m = carry
+        qc, kc, vc, ic, fc = xs                    # (b,cq,...) one chunk
+        logf = jax.nn.log_sigmoid(fc)              # (b,cq,h)
+        fcum = jnp.cumsum(logf, axis=1)            # F_j inclusive
+        # D[j,i] = F_j - F_i + i_i (i <= j); carry term: F_j + m_prev
+        dmat = (fcum[:, :, None, :] - fcum[:, None, :, :] + ic[:, None, :, :])
+        dmat = jnp.where(mask[None, :, :, None], dmat, NEG_INF)
+        carry_log = fcum + m[:, None, :]           # (b,j,h)
+        m_new = jnp.maximum(jnp.max(dmat, axis=2), carry_log)  # rowwise (b,j,h)
+        dexp = jnp.exp(dmat - m_new[:, :, None, :])
+        cscale = jnp.exp(carry_log - m_new)        # (b,j,h)
+        scores = jnp.einsum("bjhe,bihe->bjih", qc, kc).astype(jnp.float32) * scale
+        w = scores * dexp
+        qf = qc.astype(jnp.float32)
+        num = jnp.einsum("bjih,bihe->bjhe", w, vc.astype(jnp.float32)) \
+            + jnp.einsum("bjhe,bhef->bjhf", qf, C) * cscale[..., None]
+        # denominator: sum_i exp(D-m)(q_j.k_i)/sqrt(d) + cscale*(q_j.n_prev)
+        den = jnp.sum(w, axis=2) + jnp.einsum("bjhe,bhe->bjh", qf, n) * cscale
+        den = jnp.maximum(jnp.abs(den), jnp.exp(-m_new))
+        y = num / den[..., None]
+        # end-of-chunk state (recurrent semantics at position cq)
+        m_end = m_new[:, -1, :]                    # (b,h)
+        dlast = fcum[:, -1:, :] - fcum + ic        # D_{Q,i}: (b,i,h)
+        wts = jnp.exp(dlast - m_end[:, None, :])   # (b,i,h)
+        kf = kc.astype(jnp.float32) * scale
+        C_new = jnp.exp(carry_log[:, -1] - m_end)[..., None, None] * C \
+            + jnp.einsum("bih,bihe,bihf->bhef", wts, kf, vc.astype(jnp.float32))
+        n_new = jnp.exp(carry_log[:, -1] - m_end)[..., None] * n \
+            + jnp.einsum("bih,bihe->bhe", wts, kf)
+        return (C_new, n_new, m_end), y.astype(qc.dtype)
+
+    xs = tuple(jnp.moveaxis(t.reshape(b, nc, cq, *t.shape[2:]), 1, 0)
+               for t in (q, k, v, i_raw, f_raw))
+    (C, n, m), ys = jax.lax.scan(jax.checkpoint(body), (C0, n0, m0), xs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, s, h, hd)
+    return y[:, :s_orig], (C, n, m)
+
+
+def mlstm_recurrent_step(state, q, k, v, i_raw, f_raw):
+    """One-token mLSTM. state = (C (B,H,hd,hd), n (B,H,hd), m (B,H)).
+
+    q,k,v: (B,H,hd); i_raw,f_raw: (B,H) fp32.
+    """
+    C, n, m = state
+    hd = q.shape[-1]
+    logf = jax.nn.log_sigmoid(f_raw)
+    m_new = jnp.maximum(logf + m, i_raw)
+    fsc = jnp.exp(logf + m - m_new)[..., None]
+    isc = jnp.exp(i_raw - m_new)[..., None]
+    kf = k.astype(jnp.float32) / jnp.sqrt(jnp.asarray(hd, jnp.float32))
+    vf = v.astype(jnp.float32)
+    C_new = fsc[..., None] * C + isc[..., None] * kf[..., :, None] * vf[..., None, :]
+    n_new = fsc * n + isc * kf
+    qf = q.astype(jnp.float32)
+    num = jnp.einsum("bhe,bhef->bhf", qf, C_new)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhe,bhe->bh", qf, n_new)),
+                      jnp.exp(-m_new))
+    y = (num / den[..., None]).astype(q.dtype)
+    return (C_new, n_new, m_new), y
+
+
+MLSTM_CHUNK_THRESHOLD = 2048
+
+
+def mlstm_block_apply(params, x, cfg: ModelConfig):
+    """x: (B,S,D) -> (B,S,D). Parallel form for short sequences; chunk-scanned
+    (bounded working set) above ``MLSTM_CHUNK_THRESHOLD``."""
+    h = apply_norm(params["ln"], x, cfg)
+    up = jnp.einsum("bsd,de->bse", h, params["up_proj"].astype(x.dtype))
+    x_in, z = jnp.split(up, 2, axis=-1)
+    q, k, v, i_raw, f_raw, _ = _mlstm_qkv_gates(params, x_in, cfg)
+    if x.shape[1] > MLSTM_CHUNK_THRESHOLD:
+        y, _ = mlstm_chunked(q, k, v, i_raw, f_raw)
+    else:
+        y = mlstm_parallel(q, k, v, i_raw, f_raw)
+    y = _headwise_groupnorm(y, params["gn_scale"])
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    return x + jnp.einsum("bse,ed->bsd", y, params["down_proj"].astype(x.dtype))
+
+
+def mlstm_block_decode(params, x, cfg: ModelConfig, state):
+    """x: (B,1,D) one-token decode; state = (C, n, m, conv_state)."""
+    C, n, m, conv_state = state
+    h = apply_norm(params["ln"], x, cfg)
+    up = jnp.einsum("bsd,de->bse", h, params["up_proj"].astype(x.dtype))
+    x_in, z = jnp.split(up[:, 0], 2, axis=-1)              # (B, d_inner)
+    y_conv, conv_state = conv_step(x_in, conv_state, params["conv_w"], params["conv_b"])
+    x_conv = jax.nn.silu(y_conv)
+    b = x.shape[0]
+    nh = cfg.num_heads
+    hd = x_in.shape[-1] // nh
+    q = (x_conv @ params["wq"].astype(x.dtype)).reshape(b, nh, hd)
+    k = (x_conv @ params["wk"].astype(x.dtype)).reshape(b, nh, hd)
+    v = (x_in @ params["wv"].astype(x.dtype)).reshape(b, nh, hd)
+    i_raw = (x_conv @ params["w_i"].astype(x.dtype)).astype(jnp.float32) + params["b_i"]
+    f_raw = (x_conv @ params["w_f"].astype(x.dtype)).astype(jnp.float32) + params["b_f"]
+    (C, n, m), y = mlstm_recurrent_step((C, n, m), q, k, v, i_raw, f_raw)
+    y = _headwise_groupnorm(y[:, None, :, :], params["gn_scale"])[:, 0]
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    out = x + (y @ params["down_proj"].astype(x.dtype))[:, None, :]
+    return out, (C, n, m, conv_state)
+
+
+def init_mlstm_state(cfg: ModelConfig, batch: int):
+    d_inner, hd = mlstm_dims(cfg)
+    h = cfg.num_heads
+    return (
+        jnp.zeros((batch, h, hd, hd), jnp.float32),
+        jnp.zeros((batch, h, hd), jnp.float32),
+        jnp.full((batch, h), -1e30, jnp.float32),
+        jnp.zeros((batch, 3, d_inner), jnp.dtype(cfg.dtype)),   # conv width 4
+    )
+
+
+# ---------------------------------------------------------------------------
+# sLSTM block (sequential scan; scalar-memory cells with recurrent mixing)
+# ---------------------------------------------------------------------------
+
+def slstm_init(key, cfg: ModelConfig):
+    d = cfg.d_model
+    h = cfg.num_heads
+    hd = d // h
+    dt = pdtype(cfg)
+    ks = jax.random.split(key, 10)
+    d_ff = int(d * 4 / 3)
+    return {
+        "ln": norm_init(cfg),
+        # input projections for gates z, i, f, o
+        "wz": dense_init(ks[0], (d, d), dt),
+        "wi": dense_init(ks[1], (d, d), dt),
+        "wf": dense_init(ks[2], (d, d), dt),
+        "wo": dense_init(ks[3], (d, d), dt),
+        # per-head recurrent (block-diagonal) mixing
+        "rz": dense_init(ks[4], (h, hd, hd), dt),
+        "ri": dense_init(ks[5], (h, hd, hd), dt),
+        "rf": dense_init(ks[6], (h, hd, hd), dt),
+        "ro": dense_init(ks[7], (h, hd, hd), dt),
+        "b_z": zeros_init((d,), jnp.float32),
+        "b_i": zeros_init((d,), jnp.float32),
+        "b_f": jnp.full((d,), 3.0, jnp.float32),
+        "b_o": zeros_init((d,), jnp.float32),
+        "gn_scale": ones_init((d,), dt),
+        # post-FFN (proj factor 4/3, gelu)
+        "ln2": norm_init(cfg),
+        "ffn_wi": dense_init(ks[8], (d, d_ff), dt),
+        "ffn_wd": dense_init(ks[9], (d_ff, d), dt),
+    }
+
+
+def slstm_param_count(cfg: ModelConfig) -> int:
+    d = cfg.d_model
+    h = cfg.num_heads
+    hd = d // h
+    d_ff = int(d * 4 / 3)
+    return (4 * d * d + 4 * h * hd * hd + 4 * d + d
+            + 2 * d * d_ff + 4 * d)   # + 2 norms
+
+
+def slstm_scan(params, x_gates, cfg: ModelConfig, state):
+    """x_gates: dict of per-step gate preactivations (B,S,D). Sequential scan."""
+    b, s, d = x_gates["z"].shape
+    h = cfg.num_heads
+    hd = d // h
+
+    def step(carry, xs):
+        c, n, m, hprev = carry                     # all (B,H,hd) / m (B,H,hd)
+        zx, ix, fx, ox = xs                        # (B,D) fp32
+        def mix(r, hp):
+            return jnp.einsum("bhe,hef->bhf", hp, r.astype(jnp.float32))
+        hp = hprev
+        z = jnp.tanh(zx.reshape(b, h, hd) + mix(params["rz"], hp))
+        it = ix.reshape(b, h, hd) + mix(params["ri"], hp)
+        ft = fx.reshape(b, h, hd) + mix(params["rf"], hp)
+        ot = jax.nn.sigmoid(ox.reshape(b, h, hd) + mix(params["ro"], hp))
+        logf = jax.nn.log_sigmoid(ft)
+        m_new = jnp.maximum(logf + m, it)
+        i_p = jnp.exp(it - m_new)
+        f_p = jnp.exp(logf + m - m_new)
+        c_new = f_p * c + i_p * z
+        n_new = jnp.maximum(f_p * n + i_p, 1e-6)
+        h_new = ot * c_new / n_new
+        return (c_new, n_new, m_new, h_new), h_new
+
+    xs = tuple(jnp.moveaxis(x_gates[g].astype(jnp.float32), 1, 0)
+               for g in ("z", "i", "f", "o"))
+    (c, n, m, hlast), hs = jax.lax.scan(step, state, xs)
+    hs = jnp.moveaxis(hs, 0, 1).reshape(b, s, d)   # (B,S,D)
+    return hs, (c, n, m, hlast)
+
+
+def slstm_block_apply(params, x, cfg: ModelConfig, state=None):
+    b, s, d = x.shape
+    hn = apply_norm(params["ln"], x, cfg)
+    gates = {
+        "z": hn @ params["wz"].astype(x.dtype) + params["b_z"].astype(x.dtype),
+        "i": hn @ params["wi"].astype(x.dtype) + params["b_i"].astype(x.dtype),
+        "f": hn @ params["wf"].astype(x.dtype) + params["b_f"].astype(x.dtype),
+        "o": hn @ params["wo"].astype(x.dtype) + params["b_o"].astype(x.dtype),
+    }
+    if state is None:
+        state = init_slstm_state(cfg, b)
+    hs, state = slstm_scan(params, gates, cfg, state)
+    hs = hs.astype(jnp.float32) * params["gn_scale"].astype(jnp.float32)
+    x = x + hs.astype(x.dtype)
+    hn = apply_norm(params["ln2"], x, cfg)
+    ff = jax.nn.gelu(hn @ params["ffn_wi"].astype(x.dtype)) \
+        @ params["ffn_wd"].astype(x.dtype)
+    return x + ff, state
+
+
+def slstm_block_decode(params, x, cfg: ModelConfig, state):
+    out, state = slstm_block_apply(params, x, cfg, state)
+    return out, state
+
+
+def init_slstm_state(cfg: ModelConfig, batch: int):
+    d = cfg.d_model
+    h = cfg.num_heads
+    hd = d // h
+    z = jnp.zeros((batch, h, hd), jnp.float32)
+    return (z, z + 1e-6, z - 1e30, z)
+
+
+def mlstm_block_prefill(params, x, cfg: ModelConfig):
+    """Full-sequence forward that also returns the end-of-sequence state."""
+    h = apply_norm(params["ln"], x, cfg)
+    up = jnp.einsum("bsd,de->bse", h, params["up_proj"].astype(x.dtype))
+    x_in, z = jnp.split(up, 2, axis=-1)
+    q, k, v, i_raw, f_raw, _ = _mlstm_qkv_gates(params, x_in, cfg)
+    y, (C, n, m) = mlstm_chunked(q, k, v, i_raw, f_raw)
+    s = x.shape[1]
+    conv_state = x_in[:, -3:, :] if s >= 3 else jnp.pad(
+        x_in, ((0, 0), (3 - s, 0), (0, 0)))
+    y = _headwise_groupnorm(y, params["gn_scale"])
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    out = x + jnp.einsum("bse,ed->bsd", y, params["down_proj"].astype(x.dtype))
+    return out, (C, n, m, conv_state)
+
+
+# ---------------------------------------------------------------------------
+# xLSTM language model assembly
+#
+# Blocks are organized in groups of ``slstm_every``: (slstm_every - 1) mLSTM
+# blocks followed by one sLSTM block, scanned over groups so the HLO stays
+# compact for deep stacks.
+# ---------------------------------------------------------------------------
+
+from repro.models.layers import embed_init, embed_tokens, softmax_cross_entropy, stack_init, unembed  # noqa: E402
+from repro.sharding import api as shard_api  # noqa: E402
+
+
+def _xlstm_group_counts(cfg: ModelConfig):
+    per = cfg.slstm_every
+    assert cfg.num_layers % per == 0, "num_layers must divide by slstm_every"
+    return cfg.num_layers // per, per - 1
+
+
+def xlstm_lm_init(key, cfg: ModelConfig):
+    groups, m_per = _xlstm_group_counts(cfg)
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "embed": embed_init(k1, cfg),
+        "mblocks": stack_init(
+            k2, groups,
+            lambda kk: stack_init(kk, m_per, lambda k3_: mlstm_init(k3_, cfg))),
+        "sblocks": stack_init(k3, groups, lambda kk: slstm_init(kk, cfg)),
+        "final_norm": norm_init(cfg),
+    }
+
+
+def _xlstm_group_apply(mparams, sparams, h, cfg: ModelConfig):
+    def mbody(hh, mp):
+        return mlstm_block_apply(mp, hh, cfg), None
+    h, _ = jax.lax.scan(mbody, h, mparams)
+    h, _ = slstm_block_apply(sparams, h, cfg)
+    return h
+
+
+def xlstm_lm_loss(params, batch, cfg: ModelConfig):
+    tokens = batch["tokens"]
+    h = embed_tokens(params["embed"], tokens, cfg)
+    h = shard_api.constrain(h, "batch", None, None)
+
+    def gbody(hh, xs):
+        mp, sp = xs
+        return _xlstm_group_apply(mp, sp, hh, cfg), None
+    body = jax.checkpoint(gbody, prevent_cse=False) if cfg.remat else gbody
+    h, _ = jax.lax.scan(body, h, (params["mblocks"], params["sblocks"]))
+    h = apply_norm(params["final_norm"], h, cfg)
+    logits = unembed(params["embed"], h, cfg)
+    logits = shard_api.constrain(logits, "batch", None, "model")
+    ce, count = softmax_cross_entropy(logits, batch["labels"], batch.get("loss_mask"))
+    return ce, {"ce": ce, "aux": jnp.zeros((), jnp.float32), "tokens": count}
+
+
+def xlstm_init_cache(cfg: ModelConfig, batch: int, max_len: int):
+    """Recurrent state per block; no KV growth with sequence length."""
+    groups, m_per = _xlstm_group_counts(cfg)
+
+    def rep(x, *lead):
+        return jnp.broadcast_to(x, (*lead, *x.shape))
+    C, n, m, conv = init_mlstm_state(cfg, batch)
+    ms = tuple(rep(t, groups, m_per) for t in (C, n, m, conv))
+    ss = tuple(rep(t, groups) for t in init_slstm_state(cfg, batch))
+    return {"mlstm": ms, "slstm": ss,
+            "index": jnp.zeros((batch,), jnp.int32)}
+
+
+def xlstm_lm_prefill(params, batch, cfg: ModelConfig, max_len=None):
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    h = embed_tokens(params["embed"], tokens, cfg)
+
+    def gbody(hh, xs):
+        mp, sp = xs
+        def mbody(hhh, mpp):
+            out, st = mlstm_block_prefill(mpp, hhh, cfg)
+            return out, st
+        hh, mstates = jax.lax.scan(mbody, hh, mp)
+        hh, sstate = slstm_block_apply(sp, hh, cfg)
+        return hh, (mstates, sstate)
+    body = jax.checkpoint(gbody, prevent_cse=False) if cfg.remat else gbody
+    h, (mstates, sstates) = jax.lax.scan(body, h, (params["mblocks"], params["sblocks"]))
+    h = apply_norm(params["final_norm"], h[:, -1:, :], cfg)
+    logits = unembed(params["embed"], h, cfg)
+    cache = {"mlstm": mstates, "slstm": sstates,
+             "index": jnp.full((b,), s, jnp.int32)}
+    return logits, cache
+
+
+def xlstm_lm_decode_step(params, cache, tokens, cfg: ModelConfig):
+    h = embed_tokens(params["embed"], tokens, cfg)
+
+    def gbody(hh, xs):
+        mp, sp, mstate, sstate = xs
+        def mbody(hhh, xs2):
+            mpp, st = xs2
+            out, st = mlstm_block_decode(mpp, hhh, cfg, st)
+            return out, st
+        hh, mstate = jax.lax.scan(mbody, hh, (mp, mstate))
+        hh, sstate = slstm_block_decode(sp, hh, cfg, sstate)
+        return hh, (mstate, sstate)
+
+    h, (ms, ss) = jax.lax.scan(
+        gbody, h,
+        (params["mblocks"], params["sblocks"], cache["mlstm"], cache["slstm"]))
+    h = apply_norm(params["final_norm"], h, cfg)
+    logits = unembed(params["embed"], h, cfg)
+    new_cache = {"mlstm": ms, "slstm": ss, "index": cache["index"] + 1}
+    return logits, new_cache

@@ -1,0 +1,3 @@
+from repro.serve.engine import BatchedServer, ServeConfig
+
+__all__ = ["BatchedServer", "ServeConfig"]

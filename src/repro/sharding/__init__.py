@@ -1,0 +1,4 @@
+from repro.sharding import api
+from repro.sharding.api import constrain, get_mesh, set_mesh, spec, use_mesh
+
+__all__ = ["api", "constrain", "get_mesh", "set_mesh", "spec", "use_mesh"]

@@ -1,0 +1,125 @@
+"""Mesh registry + logical-axis sharding constraints.
+
+Models call :func:`constrain` with *logical* axis names; outside a mesh
+context (CPU smoke tests) this is a no-op, inside the dry-run/launcher it
+resolves to ``with_sharding_constraint`` against the registered mesh.
+
+Logical axes:
+  ``batch``  -> ("pod", "data") on the multi-pod mesh, ("data",) single-pod
+  ``model``  -> "model" (tensor-parallel axis)
+  ``fsdp``   -> "data"  (parameter sharding for fsdp archs)
+  ``seq``    -> "data"  (sequence parallelism, long-context decode)
+  ``expert`` -> "model" (expert parallelism)
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_MESH: Optional[Mesh] = None
+_LAYOUT: str = "tp"      # "tp" | "dp_only" (see sharding.rules / §Perf)
+_MANUAL: bool = False    # inside a manual shard_map region (constraints no-op)
+
+
+@contextlib.contextmanager
+def manual_mode():
+    global _MANUAL
+    prev = _MANUAL
+    _MANUAL = True
+    try:
+        yield
+    finally:
+        _MANUAL = prev
+
+
+def set_mesh(mesh: Optional[Mesh]) -> None:
+    global _MESH
+    _MESH = mesh
+
+
+def set_layout(layout: str) -> None:
+    global _LAYOUT
+    assert layout in ("tp", "dp_only"), layout
+    _LAYOUT = layout
+
+
+def layout() -> str:
+    return _LAYOUT
+
+
+def get_mesh() -> Optional[Mesh]:
+    return _MESH
+
+
+@contextlib.contextmanager
+def use_mesh(mesh):
+    prev = _MESH
+    set_mesh(mesh)
+    try:
+        if isinstance(mesh, Mesh):        # AbstractMesh has no device context
+            with mesh:
+                yield mesh
+        else:
+            yield mesh
+    finally:
+        set_mesh(prev)
+
+
+def _axes(mesh: Mesh) -> tuple:
+    return tuple(mesh.axis_names)
+
+
+def resolve(logical) -> object:
+    """Map one logical axis name (or None / tuple) to mesh axis name(s)."""
+    if _MESH is None:
+        return None
+    names = _axes(_MESH)
+    if logical is None:
+        return None
+    if isinstance(logical, (tuple, list)):
+        out = []
+        for l in logical:
+            r = resolve(l)
+            if r is None:
+                continue
+            if isinstance(r, tuple):
+                out.extend(r)
+            else:
+                out.append(r)
+        return tuple(out) or None
+    batch_names = ("pod", "data", "model") if _LAYOUT == "dp_only" \
+        else ("pod", "data")
+    table = {
+        "batch": tuple(a for a in batch_names if a in names) or None,
+        "model": None if _LAYOUT == "dp_only" else (
+            "model" if "model" in names else None),
+        "fsdp": "data" if "data" in names else None,
+        "seq": "data" if "data" in names else None,
+        "expert": "model" if "model" in names else None,
+    }
+    if logical not in table:
+        raise KeyError(f"unknown logical axis {logical!r}")
+    return table[logical]
+
+
+def spec(*logicals) -> P:
+    """Build a PartitionSpec from logical axis names (None = replicated)."""
+    return P(*[resolve(l) for l in logicals])
+
+
+def constrain(x, *logicals):
+    """Apply a sharding constraint expressed in logical axes; no-op w/o mesh
+    or inside a manual shard_map region."""
+    if _MESH is None or _MANUAL:
+        return x
+    s = spec(*logicals)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(_MESH, s))
+
+
+def named(s: P) -> Optional[NamedSharding]:
+    if _MESH is None:
+        return None
+    return NamedSharding(_MESH, s)

@@ -1,0 +1,266 @@
+"""Parameter / batch / cache PartitionSpec rules (DP / TP / EP / SP / FSDP).
+
+Rules are keyed by the *trailing* parameter-tree path names so they apply
+uniformly to stacked (scanned) parameters: leading stack dimensions are
+padded with ``None``.
+
+Policy (baseline):
+- attention: Q heads over ``model``; KV heads over ``model`` only when
+  divisible (Megatron GQA convention: replicate KV inside the TP group
+  otherwise); output projection reduced over ``model``;
+- MLP: hidden over ``model``; MoE experts over ``model`` (EP);
+- embeddings: vocab over ``model`` (+ d_model over ``data`` for fsdp archs);
+- fsdp archs: the non-TP dimension of every large matrix over ``data``;
+- KV caches: batch over ``data`` when divisible, otherwise *sequence* over
+  ``data`` (SP — long-context decode), heads over ``model`` when divisible.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.sharding import api as shard_api
+
+
+def _mesh_axis_size(name: str) -> int:
+    mesh = shard_api.get_mesh()
+    if mesh is None or name not in mesh.axis_names:
+        return 1
+    return mesh.shape[name]
+
+
+def _model_axis(n: int) -> Optional[str]:
+    """'model' if the dimension is shardable over the model axis."""
+    if shard_api.layout() == "dp_only":
+        return None          # model axis is repurposed as data parallelism
+    size = _mesh_axis_size("model")
+    return "model" if size > 1 and n % size == 0 else None
+
+
+def _fsdp_axis(cfg: ModelConfig, n: int) -> Optional[str]:
+    if not cfg.fsdp:
+        return None
+    size = _mesh_axis_size("data")
+    return "data" if size > 1 and n % size == 0 else None
+
+
+def _batch_axes() -> tuple:
+    mesh = shard_api.get_mesh()
+    if mesh is None:
+        return ()
+    names = ("pod", "data", "model") if shard_api.layout() == "dp_only" \
+        else ("pod", "data")
+    return tuple(a for a in names if a in mesh.axis_names)
+
+
+def batch_axis_size() -> int:
+    return int(np.prod([_mesh_axis_size(a) for a in _batch_axes()])) \
+        if _batch_axes() else 1
+
+
+# ---------------------------------------------------------------------------
+# parameter rules
+# ---------------------------------------------------------------------------
+
+# layout policy (hillclimbed; see EXPERIMENTS.md §Perf):
+# "tp"      — tensor parallel over the model axis (default)
+# "dp_only" — replicate parameters, use the model axis as extra data
+#             parallelism (right choice for small archs whose matrices are
+#             too small to amortize TP collectives); set via
+#             shard_api.set_layout around tracing.
+
+
+def _param_spec(path_names: tuple, shape: tuple, cfg: ModelConfig) -> P:
+    name = path_names[-1]
+    nd = len(shape)
+    if shard_api.layout() == "dp_only":
+        return P(*([None] * nd))
+
+    def pad(*trailing) -> P:
+        lead = nd - len(trailing)
+        return P(*([None] * lead), *trailing)
+
+    kvh = cfg.num_kv_heads
+    if name == "embedding":                       # (V, D)
+        return pad(_model_axis(shape[-2]), _fsdp_axis(cfg, shape[-1]))
+    if name == "lm_head":                         # (D, V)
+        return pad(_fsdp_axis(cfg, shape[-2]), _model_axis(shape[-1]))
+    if name == "wq":                              # (D, H, hd)
+        return pad(_fsdp_axis(cfg, shape[-3]), _model_axis(shape[-2]), None)
+    if name in ("wk", "wv") and nd >= 3:          # (D, K, hd)
+        return pad(_fsdp_axis(cfg, shape[-3]), _model_axis(shape[-2]), None)
+    if name == "wo" and nd >= 3:                  # (H, hd, D)
+        return pad(_model_axis(shape[-3]), None, _fsdp_axis(cfg, shape[-1]))
+    if name in ("wg", "wu", "wi", "ffn_wi") and nd >= 2:   # (D, F)
+        return pad(_fsdp_axis(cfg, shape[-2]), _model_axis(shape[-1]))
+    if name in ("wd", "ffn_wd"):                  # (F, D)
+        return pad(_model_axis(shape[-2]), _fsdp_axis(cfg, shape[-1]))
+    if name == "router":                          # (D, E)
+        return pad(None, None)
+    if name in ("we_g", "we_u"):                  # (E, D, F)
+        return pad(_model_axis(shape[-3]), _fsdp_axis(cfg, shape[-2]), None)
+    if name == "we_d":                            # (E, F, D)
+        return pad(_model_axis(shape[-3]), None, _fsdp_axis(cfg, shape[-1]))
+    # --- SSM (Mamba2) -------------------------------------------------------
+    if name == "in_proj":                         # (D, proj_out)
+        return pad(_fsdp_axis(cfg, shape[-2]), _model_axis(shape[-1]))
+    if name == "conv_w":                          # (W, C)
+        return pad(None, _model_axis(shape[-1]))
+    if name in ("conv_b", "norm_scale", "gn_scale"):
+        return pad(_model_axis(shape[-1]))
+    if name == "out_proj":                        # (d_inner, D)
+        return pad(_model_axis(shape[-2]), _fsdp_axis(cfg, shape[-1]))
+    # --- xLSTM ----------------------------------------------------------------
+    if name == "up_proj":                         # (D, 2*din)
+        return pad(_fsdp_axis(cfg, shape[-2]), _model_axis(shape[-1]))
+    if name == "down_proj":                       # (din, D)
+        return pad(_model_axis(shape[-2]), _fsdp_axis(cfg, shape[-1]))
+    if name in ("wz", "wf"):                      # sLSTM gate proj (D, D)
+        return pad(None, _model_axis(shape[-1]))
+    if name in ("w_i", "w_f"):                    # mLSTM gates (din, H)
+        return pad(_model_axis(shape[-2]), None)
+    # everything else (norm scales/biases, small gates, recurrent mixers)
+    return P(*([None] * nd))
+
+
+def param_pspecs(cfg: ModelConfig, params_tree):
+    """Map a (possibly abstract) param pytree to PartitionSpecs."""
+    def fn(path, leaf):
+        names = tuple(getattr(p, "key", getattr(p, "name", str(p))) for p in path)
+        return _param_spec(names, leaf.shape, cfg)
+    return jax.tree_util.tree_map_with_path(fn, params_tree)
+
+
+# ---------------------------------------------------------------------------
+# batch / activation rules
+# ---------------------------------------------------------------------------
+
+def batch_pspecs(batch_tree):
+    """Shard the leading (global batch) dim of every input over DP axes
+    (replicated when the batch doesn't divide, e.g. long-context batch=1)."""
+    axes = _batch_axes()
+    bsz = batch_axis_size()
+
+    def fn(leaf):
+        if axes and leaf.shape and leaf.shape[0] % max(bsz, 1) == 0 \
+                and leaf.shape[0] >= bsz:
+            return P(axes, *([None] * (leaf.ndim - 1)))
+        return P(*([None] * leaf.ndim))
+    return jax.tree.map(fn, batch_tree)
+
+
+# ---------------------------------------------------------------------------
+# cache rules (shape-aware: SP for long-context decode)
+# ---------------------------------------------------------------------------
+
+def _kv_spec(shape: tuple, cfg: ModelConfig, batch: int) -> P:
+    """(L, B, T, K, hd) or (B, T, K, hd): batch over data if divisible,
+    else sequence over data (SP); KV heads over model when divisible, else
+    the *sequence* dim is sharded over model (flash-decode style split-KV),
+    so the cache never replicates across the TP group."""
+    dsize = _mesh_axis_size("data")
+    msize = _mesh_axis_size("model")
+    axes = _batch_axes()
+    nd = len(shape)
+    b_dim, t_dim, k_dim = nd - 4, nd - 3, nd - 2
+    spec = [None] * nd
+    if dsize > 1 and batch % batch_axis_size() == 0 and batch >= batch_axis_size():
+        spec[b_dim] = axes
+    elif dsize > 1 and shape[t_dim] % dsize == 0:
+        spec[t_dim] = "data"                       # sequence parallelism
+    kax = _model_axis(shape[k_dim])
+    if kax is not None:
+        spec[k_dim] = kax
+    elif msize > 1 and spec[t_dim] is None and shape[t_dim] % msize == 0:
+        spec[t_dim] = "model"                      # split-KV over TP group
+    elif msize > 1 and spec[t_dim] == "data" and shape[t_dim] % (msize * dsize) == 0:
+        spec[t_dim] = ("data", "model")            # long-context: both axes
+    return P(*spec)
+
+
+def logits_pspec(cfg: ModelConfig, batch_sharded: bool = True) -> P:
+    """(B, S, V): batch over DP axes, vocab over model when divisible."""
+    axes = _batch_axes()
+    return P(axes if (axes and batch_sharded) else None, None,
+             _model_axis(cfg.vocab_size))
+
+
+def _state_spec(shape: tuple, cfg: ModelConfig, batch: int, head_dims) -> P:
+    """Recurrent state: batch over data if divisible, else a head/channel dim
+    over model.  ``head_dims`` = candidate trailing dims (negative indices)."""
+    nd = len(shape)
+    spec = [None] * nd
+    if batch % max(batch_axis_size(), 1) == 0 and batch >= batch_axis_size() \
+            and batch_axis_size() > 1:
+        # find the batch dim: first dim whose size == batch
+        for i, s in enumerate(shape):
+            if s == batch:
+                spec[i] = _batch_axes()
+                break
+    else:
+        for d in head_dims:
+            if _model_axis(shape[d]):
+                spec[d] = "model"
+                break
+    return P(*spec)
+
+
+def cache_pspecs(cfg: ModelConfig, cache_tree, batch: int):
+    """PartitionSpecs for a serving cache pytree (family-aware)."""
+    def fn(path, leaf):
+        names = tuple(getattr(p, "key", getattr(p, "name", str(p))) for p in path)
+        name = names[-1] if names else ""
+        if name == "index":
+            return P()
+        if name in ("k", "v", "mk", "mv", "k_scale", "v_scale"):
+            return _kv_spec(leaf.shape, cfg, batch)
+        if name in ("conv", "ssm", "mlstm", "slstm") or len(names) > 1 and \
+                names[0] in ("mlstm", "slstm"):
+            return _state_spec(leaf.shape, cfg, batch, head_dims=(-1, -2, -3))
+        return _state_spec(leaf.shape, cfg, batch, head_dims=(-1, -2, -3))
+    return jax.tree_util.tree_map_with_path(fn, cache_tree)
+
+
+# ---------------------------------------------------------------------------
+# optimizer-state rules
+# ---------------------------------------------------------------------------
+
+def opt_pspecs(params_specs, opt_state_tree):
+    """Adam moments mirror parameter sharding; scalars replicated.
+
+    ``opt_state_tree`` is {"m": params, "v": params, "step": scalar}-shaped.
+    """
+    return {
+        "m": params_specs,
+        "v": params_specs,
+        "step": P(),
+    }
+
+
+def zero1_respec(specs_tree, shapes_tree):
+    """ZeRO-1 (tier-2 'pipelined' movement mode applied to the optimizer):
+    additionally shard the first still-replicated, divisible dim of every
+    moment over ``data`` — GSPMD then lowers the gradient sync as
+    reduce-scatter (+ all-gather of updates) instead of all-reduce."""
+    dsize = _mesh_axis_size("data")
+
+    def fn(spec, leaf):
+        if leaf.ndim == 0 or dsize <= 1:
+            return spec
+        entries = list(tuple(spec)) + [None] * (leaf.ndim - len(tuple(spec)))
+        flat = []
+        for e in entries:
+            flat.extend(e if isinstance(e, (tuple, list)) else [e])
+        if "data" in flat:
+            return spec
+        for i, e in enumerate(entries):
+            if e is None and leaf.shape[i] % dsize == 0:
+                entries[i] = "data"
+                return P(*entries)
+        return spec
+
+    return jax.tree.map(fn, specs_tree, shapes_tree)

@@ -1,0 +1,5 @@
+from repro.train.planner import RuntimePlan, plan_train
+from repro.train.step import TrainConfig, init_train_state, make_train_step
+
+__all__ = ["RuntimePlan", "TrainConfig", "init_train_state",
+           "make_train_step", "plan_train"]

@@ -1,0 +1,54 @@
+"""Runtime planning: choose microbatch count / accumulation dtype per
+(arch × shape × mesh) from an activation-memory budget.
+
+The same napkin math the paper applies to transfer sizes (Table III) applied
+to activation residency: saved bytes per microbatch ≈
+L_scan · (B_dev/µ) · S · D · bytes(act) (block boundaries only, full remat).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.sharding import api as shard_api
+from repro.sharding import rules
+
+
+@dataclass(frozen=True)
+class RuntimePlan:
+    microbatches: int = 1
+    accum_dtype: str = "float32"
+    remat: bool = True
+
+    def describe(self) -> str:
+        return (f"microbatches={self.microbatches} accum={self.accum_dtype} "
+                f"remat={self.remat}")
+
+
+ACT_BUDGET_BYTES = int(2.0 * 2 ** 30)      # ~2 GB of saved activations/device
+
+
+def plan_train(cfg: ModelConfig, shape: ShapeConfig,
+               budget: int = ACT_BUDGET_BYTES) -> RuntimePlan:
+    bsz = rules.batch_axis_size()
+    b_dev = max(shape.global_batch // max(bsz, 1), 1)
+    act_bytes = np.dtype(cfg.dtype).itemsize
+    # per-device saved activations with microbatches=1 (block boundaries)
+    saved = cfg.num_layers * b_dev * shape.seq_len * cfg.d_model * act_bytes
+    m = 1
+    while saved / m > budget and m < b_dev:
+        m *= 2
+    # grad accumulation buffers are fp32 param-sized; for very large models
+    # accumulate in bf16 to halve resident bytes (documented precision trade)
+    n_params = cfg.param_count()
+    mesh = shard_api.get_mesh()
+    mesh_devices = mesh.size if mesh is not None else 1
+    accum = "float32"
+    if m > 1 and n_params * 4 / max(mesh_devices, 1) > 2 * 2 ** 30:
+        accum = "bfloat16"
+    # remat only pays when activations would not fit: below half the budget
+    # the recompute (≈ +1/3 compute, + layer re-reads) is pure waste
+    remat = (saved / m) > budget // 2
+    return RuntimePlan(microbatches=m, accum_dtype=accum, remat=remat)

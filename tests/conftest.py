@@ -1,0 +1,28 @@
+import os
+
+# Tests must see the single real CPU device (the dry-run subprocess sets its
+# own device count); keep XLA quiet and deterministic.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax
+import numpy as np
+import pytest
+from hypothesis import HealthCheck, settings
+
+settings.register_profile(
+    "repro",
+    deadline=None,
+    max_examples=20,
+    suppress_health_check=[HealthCheck.too_slow, HealthCheck.data_too_large],
+)
+settings.load_profile("repro")
+
+
+@pytest.fixture(scope="session")
+def rng_key():
+    return jax.random.key(0)
+
+
+@pytest.fixture()
+def np_rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,115 @@
+"""Attention invariants: blockwise == direct, GQA grouping, masks, RoPE."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models.layers import apply_rope
+
+
+def mk_cfg(h=4, kh=2, hd=16, **kw):
+    return ModelConfig(name="t", family="dense", num_layers=1, d_model=h * hd,
+                       num_heads=h, num_kv_heads=kh, head_dim=hd, d_ff=32,
+                       vocab_size=64, dtype="float32", param_dtype="float32",
+                       **kw)
+
+
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("h,kh", [(4, 4), (4, 2), (8, 1)])
+def test_blockwise_matches_direct(causal, h, kh, rng_key):
+    cfg = mk_cfg(h=h, kh=kh)
+    b, s, t, hd = 2, 64, 64, 16
+    ks = jax.random.split(rng_key, 3)
+    q = jax.random.normal(ks[0], (b, s, h, hd))
+    k = jax.random.normal(ks[1], (b, t, kh, hd))
+    v = jax.random.normal(ks[2], (b, t, kh, hd))
+    mask = attn.causal_mask(s, t) if causal else attn.full_mask(s, t)
+    ref = attn.attend(q, k, v, cfg, mask)
+    out = attn.attend_blockwise(q, k, v, cfg, causal=causal,
+                                q_block=16, k_block=16)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+@given(st.integers(1, 4), st.integers(2, 6))
+def test_blockwise_block_size_invariance(qb_pow, s_pow):
+    """Result must not depend on block decomposition."""
+    cfg = mk_cfg()
+    s = 2 ** s_pow
+    qb = 2 ** min(qb_pow, s_pow)
+    key = jax.random.key(s * 7 + qb)
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (1, s, 4, 16))
+    k = jax.random.normal(ks[1], (1, s, 2, 16))
+    v = jax.random.normal(ks[2], (1, s, 2, 16))
+    a = attn.attend_blockwise(q, k, v, cfg, causal=True, q_block=qb, k_block=qb)
+    b = attn.attend_blockwise(q, k, v, cfg, causal=True, q_block=s, k_block=s)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-5, atol=2e-5)
+
+
+def test_decode_matches_prefill_attention(rng_key):
+    """Cached single-token attention equals the last row of full attention."""
+    cfg = mk_cfg()
+    b, s, d = 2, 9, cfg.d_model
+    params = attn.attn_init(rng_key, cfg)
+    x = jax.random.normal(jax.random.key(3), (b, s, d))
+    positions = jnp.arange(s)[None, :]
+    full = attn.self_attention(params, x, cfg, positions=positions)
+    # replay through the cache
+    q, k, v = attn.project_qkv(params, x[:, : s - 1], cfg,
+                               jnp.arange(s - 1)[None, :])
+    layer_k = jnp.zeros((b, s + 2, cfg.num_kv_heads, cfg.resolved_head_dim()))
+    layer_v = jnp.zeros_like(layer_k)
+    layer_k, layer_v = attn.cache_insert_prefill(layer_k, layer_v, k, v)
+    index = jnp.full((b,), s - 1, jnp.int32)
+    out, _, _ = attn.self_attention_decode(
+        params, x[:, s - 1:], cfg, layer_k=layer_k, layer_v=layer_v, index=index)
+    np.testing.assert_allclose(np.asarray(out[:, 0]), np.asarray(full[:, -1]),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_rope_relative_shift_invariance(rng_key):
+    """RoPE: <q_i, k_j> depends only on i - j (within one head)."""
+    hd = 32
+    q = jax.random.normal(rng_key, (1, 1, 1, hd))
+    k = jax.random.normal(jax.random.key(5), (1, 1, 1, hd))
+    def score(qpos, kpos):
+        qr = apply_rope(q, jnp.array([[qpos]]), 1e4)
+        kr = apply_rope(k, jnp.array([[kpos]]), 1e4)
+        return float(jnp.sum(qr * kr))
+    a = score(3, 1)
+    b = score(10, 8)
+    assert abs(a - b) < 1e-4
+
+
+def test_cache_insert_token_per_batch_positions():
+    b, t, kh, hd = 3, 8, 2, 4
+    lk = jnp.zeros((b, t, kh, hd))
+    lv = jnp.zeros((b, t, kh, hd))
+    k = jnp.ones((b, 1, kh, hd))
+    v = 2 * jnp.ones((b, 1, kh, hd))
+    index = jnp.array([0, 3, 7], jnp.int32)
+    lk, lv = attn.cache_insert_token(lk, lv, k, v, index)
+    for i, pos in enumerate([0, 3, 7]):
+        assert float(lk[i, pos].sum()) == kh * hd
+        assert float(lk[i].sum()) == kh * hd, "wrote outside the slot"
+
+
+def test_gqa_head_grouping_semantics(rng_key):
+    """GQA must equal MHA with KV heads repeated per group."""
+    cfg_gqa = mk_cfg(h=4, kh=2)
+    cfg_mha = mk_cfg(h=4, kh=4)
+    b, s, hd = 1, 8, 16
+    ks = jax.random.split(rng_key, 3)
+    q = jax.random.normal(ks[0], (b, s, 4, hd))
+    k = jax.random.normal(ks[1], (b, s, 2, hd))
+    v = jax.random.normal(ks[2], (b, s, 2, hd))
+    mask = attn.causal_mask(s)
+    out_gqa = attn.attend(q, k, v, cfg_gqa, mask)
+    out_mha = attn.attend(q, jnp.repeat(k, 2, 2), jnp.repeat(v, 2, 2),
+                          cfg_mha, mask)
+    np.testing.assert_allclose(np.asarray(out_gqa), np.asarray(out_mha),
+                               rtol=1e-5, atol=1e-5)

@@ -1,0 +1,227 @@
+"""Checkpoint, fault tolerance, data pipeline, HLO/jaxpr cost analysis."""
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import get_smoke_config
+from repro.configs.base import ShapeConfig
+from repro.core import ExecutionMode, OffloadPolicy
+from repro.data import InputPipeline, SyntheticLMSource
+from repro.ft import Heartbeat, RestartManager, StepTimer, StragglerMonitor
+from repro.launch import hlo as hlo_mod
+from repro.launch import jcost
+
+
+# ---------------------------------------------------------------------------
+# checkpoint
+# ---------------------------------------------------------------------------
+
+def _state(key):
+    return {"params": {"w": jax.random.normal(key, (8, 4)),
+                       "b": jnp.zeros(4)},
+            "step": jnp.array(3)}
+
+
+def test_checkpoint_roundtrip(tmp_path, rng_key):
+    cm = CheckpointManager(str(tmp_path))
+    state = _state(rng_key)
+    cm.save(5, state, {"note": "hi"})
+    restored, extra = cm.restore(5, state)
+    assert extra == {"note": "hi"}
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_async_and_gc(tmp_path, rng_key):
+    cm = CheckpointManager(str(tmp_path), keep=2)
+    state = _state(rng_key)
+    for step in (1, 2, 3, 4):
+        cm.save_async(step, state)
+    cm.wait()
+    assert cm.all_steps() == [3, 4]
+    assert cm.latest_step() == 4
+
+
+def test_checkpoint_elastic_dtype_cast(tmp_path, rng_key):
+    cm = CheckpointManager(str(tmp_path))
+    state = {"w": jnp.ones((4, 4), jnp.float32)}
+    cm.save(1, state)
+    like = {"w": jnp.zeros((4, 4), jnp.bfloat16)}
+    restored, _ = cm.restore(1, like)
+    assert restored["w"].dtype == jnp.bfloat16
+
+
+def test_restart_manager_resume(tmp_path, rng_key):
+    cm = CheckpointManager(str(tmp_path))
+    rm = RestartManager(cm, save_every=2)
+    state = _state(rng_key)
+    rm.maybe_save(2, state, {"data": {"seed": 0, "step": 2}})
+    cm.wait()
+    restored, extra, step = rm.resume_or_init(lambda: state)
+    assert step == 2 and extra["data"]["step"] == 2
+
+
+# ---------------------------------------------------------------------------
+# fault tolerance
+# ---------------------------------------------------------------------------
+
+def test_heartbeat_liveness(tmp_path):
+    path = str(tmp_path / "hb.json")
+    hb = Heartbeat(path, host_id=3)
+    hb.beat(step=7)
+    assert Heartbeat.is_alive(path, timeout_s=5.0)
+    with open(path) as f:
+        assert json.load(f)["host"] == 3
+    assert not Heartbeat.is_alive(str(tmp_path / "none.json"), 5.0)
+
+
+def test_straggler_monitor_threshold():
+    mon = StragglerMonitor(threshold=2.0, patience=2)
+    for _ in range(20):
+        mon.record_step(1.0)
+    assert not mon.events
+    mon.record_step(5.0)
+    mon.record_step(5.0)
+    assert len(mon.events) == 1
+    assert mon.events[0]["ratio"] > 2.0
+
+
+def test_step_timer_stats():
+    t = StepTimer()
+    for x in [1.0, 2.0, 3.0]:
+        t.record(x)
+    assert t.median() == 2.0
+    assert t.p95() >= 2.0
+
+
+# ---------------------------------------------------------------------------
+# data pipeline
+# ---------------------------------------------------------------------------
+
+def test_source_determinism_and_restore():
+    cfg = get_smoke_config("granite-8b")
+    shape = ShapeConfig("t", "train", 16, 2)
+    s1 = SyntheticLMSource(cfg, shape, seed=5)
+    a = next(s1)
+    b = next(s1)
+    s2 = SyntheticLMSource(cfg, shape, seed=5)
+    s2.restore({"seed": 5, "step": 1})
+    b2 = next(s2)
+    np.testing.assert_array_equal(a["tokens"].shape, (2, 16))
+    np.testing.assert_array_equal(b["tokens"], b2["tokens"])
+
+
+@pytest.mark.parametrize("mode", ["sync", "async", "pipelined"])
+def test_pipeline_modes_deliver_in_order(mode):
+    cfg = get_smoke_config("granite-8b")
+    shape = ShapeConfig("t", "train", 16, 2)
+    src = SyntheticLMSource(cfg, shape, seed=1)
+    ref_batches = [next(SyntheticLMSource(cfg, shape, seed=1))["tokens"]
+                   for _ in range(1)]
+    pipe = InputPipeline(src, OffloadPolicy(mode=ExecutionMode(mode),
+                                            offload_threshold_bytes=1))
+    got = next(pipe)
+    np.testing.assert_array_equal(np.asarray(got["tokens"]), ref_batches[0])
+    pipe.close()
+
+
+def test_pipeline_checkpoint_replays_prefetch():
+    cfg = get_smoke_config("granite-8b")
+    shape = ShapeConfig("t", "train", 16, 2)
+    pol = OffloadPolicy(mode=ExecutionMode.PIPELINED, pipeline_depth=2,
+                        offload_threshold_bytes=1)
+    pipe = InputPipeline(SyntheticLMSource(cfg, shape, seed=3), pol)
+    first = np.asarray(next(pipe)["tokens"])
+    state = pipe.state()
+    second = np.asarray(next(pipe)["tokens"])
+    # restore: the same "second" batch must come out again
+    pipe.restore(state)
+    second_replay = np.asarray(next(pipe)["tokens"])
+    np.testing.assert_array_equal(second, second_replay)
+    pipe.close()
+
+
+# ---------------------------------------------------------------------------
+# jaxpr cost model
+# ---------------------------------------------------------------------------
+
+def test_jcost_matmul_flops_exact():
+    a = jax.ShapeDtypeStruct((64, 32), jnp.float32)
+    b = jax.ShapeDtypeStruct((32, 16), jnp.float32)
+    est = jcost.estimate_fn(lambda x, y: x @ y, a, b)
+    assert est.flops == 2 * 64 * 32 * 16
+
+
+def test_jcost_scan_multiplies_by_length():
+    x = jax.ShapeDtypeStruct((8, 16, 16), jnp.float32)
+
+    def f(xs):
+        def body(c, m):
+            return c @ m, None
+        init = jnp.eye(16)
+        out, _ = jax.lax.scan(body, init, xs)
+        return out
+
+    est = jcost.estimate_fn(f, x)
+    assert est.flops >= 8 * 2 * 16 * 16 * 16
+    assert est.depth_trips.get(1, 0) == 8
+
+
+def test_jcost_grad_counts_backward():
+    x = jax.ShapeDtypeStruct((32, 32), jnp.float32)
+    fwd = jcost.estimate_fn(lambda a: jnp.sum(a @ a), x)
+    bwd = jcost.estimate_fn(jax.grad(lambda a: jnp.sum(a @ a)), x)
+    assert bwd.flops >= 2 * fwd.flops * 0.9
+
+
+# ---------------------------------------------------------------------------
+# HLO collective parsing
+# ---------------------------------------------------------------------------
+
+SYNTH_HLO = """
+HloModule test
+
+%body (arg: (s32[], f32[64,128])) -> (s32[], f32[64,128]) {
+  %arg = (s32[], f32[64,128]) parameter(0)
+  %ar = f32[64,128]{1,0} all-reduce(%gte), channel_id=1, to_apply=%add
+  ROOT %t = (s32[], f32[64,128]) tuple(%iter, %ar)
+}
+
+%cond (arg2: (s32[], f32[64,128])) -> pred[] {
+  %arg2 = (s32[], f32[64,128]) parameter(0)
+  ROOT %lt = pred[] compare(%i, %n), direction=LT
+}
+
+ENTRY %main (p: f32[64,128]) -> f32[64,128] {
+  %p = f32[64,128] parameter(0)
+  %ag = f32[128,128]{1,0} all-gather(%p), channel_id=2, dimensions={0}
+  %w = (s32[], f32[64,128]) while(%init), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"12"}}
+  ROOT %out = f32[64,128] get-tuple-element(%w), index=1
+}
+"""
+
+
+def test_collective_stats_trip_scaling():
+    stats = hlo_mod.collective_stats(SYNTH_HLO)
+    # all-gather at entry: 128*128*4 bytes once
+    assert stats.bytes_by_op["all-gather"] == 128 * 128 * 4
+    # all-reduce inside the while: 64*128*4 * 12 trips
+    assert stats.bytes_by_op["all-reduce"] == 64 * 128 * 4 * 12
+    assert stats.count_by_op["all-reduce"] == 12
+
+
+def test_roofline_dominant_term():
+    rl = hlo_mod.Roofline(compute_s=1.0, memory_s=2.0, collective_s=0.5,
+                          flops_per_device=1, bytes_per_device=1,
+                          collective_bytes_per_device=1, chips=256,
+                          model_flops=197e12 * 256,
+                          ideal_bytes_per_device=0)
+    assert rl.dominant == "memory"
+    assert abs(rl.roofline_fraction - 0.5) < 1e-9

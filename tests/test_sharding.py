@@ -1,0 +1,111 @@
+"""Sharding rules: every produced spec must divide the array dims over the
+production mesh (AbstractMesh: no devices needed)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import AbstractMesh, PartitionSpec as P
+
+from repro.configs import SHAPES, get_config, list_archs
+from repro.launch import specs as specs_mod
+from repro.models import build_model
+from repro.optim import adamw
+from repro.sharding import api as shard_api
+from repro.sharding import rules
+
+SINGLE = AbstractMesh((16, 16), ("data", "model"))
+MULTI = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+
+
+def _axis_sizes(mesh):
+    return dict(zip(mesh.axis_names, mesh.axis_sizes))
+
+
+def assert_divisible(spec_tree, abs_tree, mesh):
+    sizes = _axis_sizes(mesh)
+    flat_s = jax.tree.leaves(spec_tree, is_leaf=lambda x: isinstance(x, P))
+    flat_a = jax.tree.leaves(abs_tree)
+    assert len(flat_s) == len(flat_a)
+    for spec, leaf in zip(flat_s, flat_a):
+        entries = tuple(spec)
+        assert len(entries) <= leaf.ndim, (spec, leaf.shape)
+        for i, entry in enumerate(entries):
+            if entry is None:
+                continue
+            axes = entry if isinstance(entry, tuple) else (entry,)
+            denom = int(np.prod([sizes[a] for a in axes]))
+            assert leaf.shape[i] % denom == 0, \
+                f"dim {i} of {leaf.shape} not divisible by {axes} ({spec})"
+
+
+@pytest.mark.parametrize("mesh", [SINGLE, MULTI], ids=["single", "multi"])
+@pytest.mark.parametrize("arch", list_archs())
+def test_param_specs_divisible(arch, mesh):
+    cfg = get_config(arch)
+    model = build_model(cfg)
+    with shard_api.use_mesh(mesh):
+        p_abs = specs_mod.params_specs(model)
+        p_spec = rules.param_pspecs(cfg, p_abs)
+        assert_divisible(p_spec, p_abs, mesh)
+        # optimizer moments follow params
+        opt_abs = jax.eval_shape(adamw.init, p_abs)
+        opt_spec = rules.opt_pspecs(p_spec, opt_abs)
+        assert_divisible(opt_spec["m"], opt_abs["m"], mesh)
+
+
+@pytest.mark.parametrize("arch", list_archs())
+@pytest.mark.parametrize("shape_name", ["decode_32k", "long_500k"])
+def test_cache_specs_divisible(arch, shape_name):
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    if shape_name == "long_500k" and not cfg.supports_long_context:
+        pytest.skip("full-attention arch skips long context")
+    model = build_model(cfg)
+    with shard_api.use_mesh(SINGLE):
+        cache_abs = specs_mod.cache_specs(model, shape)
+        cache_spec = rules.cache_pspecs(cfg, cache_abs, shape.global_batch)
+        assert_divisible(cache_spec, cache_abs, SINGLE)
+
+
+def test_kv_cache_never_replicated_over_model_axis():
+    """KV-head-limited archs must shard seq over model instead (memory!)."""
+    cfg = get_config("qwen3-32b")     # kv=8 < 16
+    with shard_api.use_mesh(SINGLE):
+        spec = rules._kv_spec((64, 128, 32768, 8, 128), cfg, 128)
+        flat = []
+        for e in tuple(spec):
+            flat.extend(e if isinstance(e, tuple) else [e])
+        assert "model" in flat, f"cache replicated over TP group: {spec}"
+
+
+def test_long_context_cache_seq_sharded():
+    cfg = get_config("zamba2-2.7b")
+    with shard_api.use_mesh(SINGLE):
+        spec = rules._kv_spec((9, 1, 524288, 32, 80), cfg, 1)
+        assert tuple(spec)[2] is not None, f"seq dim not sharded: {spec}"
+
+
+def test_batch_specs_divisibility_guard():
+    with shard_api.use_mesh(SINGLE):
+        sds = jax.ShapeDtypeStruct((1, 128), jnp.int32)
+        spec = rules.batch_pspecs({"t": sds})["t"]
+        assert tuple(spec)[0] is None          # batch=1: replicated
+        sds = jax.ShapeDtypeStruct((256, 128), jnp.int32)
+        spec = rules.batch_pspecs({"t": sds})["t"]
+        assert tuple(spec)[0] is not None
+
+
+def test_zero1_respec_adds_data_axis():
+    with shard_api.use_mesh(SINGLE):
+        specs = {"a": P(None, "model"), "b": P("model", None)}
+        shapes = {"a": jax.ShapeDtypeStruct((64, 32), jnp.float32),
+                  "b": jax.ShapeDtypeStruct((32, 7), jnp.float32)}
+        out = rules.zero1_respec(specs, shapes)
+        assert tuple(out["a"]) == ("data", "model")
+        assert tuple(out["b"])[0] == "model" and tuple(out["b"])[1] is None
+
+
+def test_constrain_noop_without_mesh():
+    shard_api.set_mesh(None)
+    x = jnp.ones((4, 4))
+    assert shard_api.constrain(x, "batch", None) is x

@@ -1,0 +1,105 @@
+"""xLSTM invariants: parallel == chunked == recurrent mLSTM; sLSTM state
+continuity across segment boundaries."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.configs.base import ModelConfig
+from repro.models import xlstm
+
+
+def mk_cfg():
+    return ModelConfig(name="t", family="ssm", num_layers=2, d_model=32,
+                       num_heads=2, num_kv_heads=2, d_ff=0, vocab_size=64,
+                       slstm_every=2, dtype="float32", param_dtype="float32",
+                       norm_type="layernorm")
+
+
+def rand_qkvif(key, b=2, s=12, h=2, hd=8):
+    ks = jax.random.split(key, 5)
+    q = jax.random.normal(ks[0], (b, s, h, hd))
+    k = jax.random.normal(ks[1], (b, s, h, hd))
+    v = jax.random.normal(ks[2], (b, s, h, hd))
+    i = jax.random.normal(ks[3], (b, s, h))
+    f = jax.random.normal(ks[4], (b, s, h)) + 2.0
+    return q, k, v, i, f
+
+
+def recurrent_rollout(q, k, v, i, f):
+    b, s, h, hd = q.shape
+    C = jnp.zeros((b, h, hd, hd))
+    n = jnp.zeros((b, h, hd))
+    m = jnp.full((b, h), -1e30)
+    ys = []
+    for t in range(s):
+        (C, n, m), y = xlstm.mlstm_recurrent_step(
+            (C, n, m), q[:, t], k[:, t], v[:, t], i[:, t], f[:, t])
+        ys.append(y)
+    return jnp.stack(ys, 1), (C, n, m)
+
+
+def test_parallel_equals_recurrent(rng_key):
+    q, k, v, i, f = rand_qkvif(rng_key)
+    y_par = xlstm.mlstm_parallel(q, k, v, i, f)
+    y_rec, _ = recurrent_rollout(q, k, v, i, f)
+    np.testing.assert_allclose(np.asarray(y_par), np.asarray(y_rec),
+                               rtol=1e-4, atol=1e-4)
+
+
+@given(st.sampled_from([2, 3, 4, 6, 12]))
+def test_chunked_equals_parallel(chunk):
+    q, k, v, i, f = rand_qkvif(jax.random.key(chunk))
+    y_par = xlstm.mlstm_parallel(q, k, v, i, f)
+    y_chk, _ = xlstm.mlstm_chunked(q, k, v, i, f, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(y_chk), np.asarray(y_par),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_chunked_final_state_matches_recurrent(rng_key):
+    q, k, v, i, f = rand_qkvif(rng_key, s=10)
+    _, (C_r, n_r, m_r) = recurrent_rollout(q, k, v, i, f)
+    _, (C_c, n_c, m_c) = xlstm.mlstm_chunked(q, k, v, i, f, chunk=4)
+    np.testing.assert_allclose(np.asarray(C_c), np.asarray(C_r), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(n_c), np.asarray(n_r), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(m_c), np.asarray(m_r), rtol=1e-4, atol=1e-4)
+
+
+def test_mlstm_block_prefill_then_decode(rng_key):
+    cfg = mk_cfg()
+    params = xlstm.mlstm_init(rng_key, cfg)
+    b, s = 2, 9
+    x = 0.3 * jax.random.normal(jax.random.key(2), (b, s + 1, cfg.d_model))
+    full = xlstm.mlstm_block_apply(params, x, cfg)
+    out, state = xlstm.mlstm_block_prefill(params, x[:, :s], cfg)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(full[:, :s]),
+                               rtol=1e-4, atol=1e-4)
+    step, _ = xlstm.mlstm_block_decode(params, x[:, s:], cfg, state)
+    np.testing.assert_allclose(np.asarray(step[:, 0]), np.asarray(full[:, s]),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_slstm_segment_continuity(rng_key):
+    """Running [x1;x2] at once == running x1 then x2 with carried state."""
+    cfg = mk_cfg()
+    params = xlstm.slstm_init(rng_key, cfg)
+    b, s1, s2 = 2, 6, 5
+    x = 0.3 * jax.random.normal(jax.random.key(4), (b, s1 + s2, cfg.d_model))
+    full, _ = xlstm.slstm_block_apply(params, x, cfg)
+    out1, state = xlstm.slstm_block_apply(params, x[:, :s1], cfg)
+    out2, _ = xlstm.slstm_block_apply(params, x[:, s1:], cfg, state)
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(full[:, :s1]),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(out2), np.asarray(full[:, s1:]),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_stabilizer_prevents_overflow():
+    """Large positive input gates must not overflow the exp-gating."""
+    q, k, v, i, f = rand_qkvif(jax.random.key(9))
+    i = i + 80.0                      # would overflow exp() unstabilized
+    y = xlstm.mlstm_parallel(q, k, v, i, f)
+    assert bool(jnp.all(jnp.isfinite(y)))
+    y2, st_ = xlstm.mlstm_chunked(q, k, v, i, f, chunk=4)
+    assert bool(jnp.all(jnp.isfinite(y2)))
