@@ -11,6 +11,7 @@ import traceback
 
 from benchmarks import (
     fig1_movement_share,
+    fig2_ipc_transports,
     fig3_polling,
     fig4_buffer_reuse,
     fig5_vmem_injection,
@@ -25,6 +26,7 @@ from benchmarks import (
 MODULES = {
     "table1": table1_workload_bytes,
     "fig1": fig1_movement_share,
+    "fig2": fig2_ipc_transports,
     "fig3": fig3_polling,
     "fig4": fig4_buffer_reuse,
     "fig5": fig5_vmem_injection,
@@ -40,8 +42,21 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated subset, e.g. fig10,fig13")
+    ap.add_argument("--dry-run", action="store_true",
+                    help="import and list the selected modules, run nothing "
+                         "(CI smoke: catches import/registration breakage)")
     args = ap.parse_args()
     names = args.only.split(",") if args.only else list(MODULES)
+    unknown = [n for n in names if n not in MODULES]
+    if unknown:
+        ap.error(f"unknown module(s) {','.join(unknown)}; "
+                 f"choose from {','.join(MODULES)}")
+    if args.dry_run:
+        for name in names:
+            mod = MODULES[name]
+            assert callable(mod.run), name
+            print(f"{name},DRY,{mod.__name__}")
+        return
     print("name,us_per_call,derived")
     failures = 0
     for name in names:

@@ -1,0 +1,34 @@
+"""Version-portability shims for the jax APIs this repo straddles.
+
+The repo targets current jax, but CI/dev containers may carry an older
+release.  Two surfaces moved:
+
+- ``jax.shard_map`` (new) vs ``jax.experimental.shard_map.shard_map``
+  (old), whose replication-check kwarg was renamed
+  ``check_rep`` → ``check_vma``;
+- ``pltpu.CompilerParams`` (new) vs ``pltpu.TPUCompilerParams`` (old).
+
+Import from here instead of feature-testing at each call site.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def shard_map(f, mesh, in_specs, out_specs, check_vma: bool = True):
+    """``jax.shard_map`` with the kwarg spelling of whichever jax is
+    installed (``check_vma`` newer / ``check_rep`` older)."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                      out_specs=out_specs, check_rep=check_vma)
+
+
+def pallas_tpu_compiler_params(**kwargs):
+    """``pltpu.CompilerParams`` (new name) / ``TPUCompilerParams`` (old)."""
+    from jax.experimental.pallas import tpu as pltpu
+    cls = getattr(pltpu, "CompilerParams", None) or \
+        getattr(pltpu, "TPUCompilerParams")
+    return cls(**kwargs)

@@ -31,7 +31,7 @@ import numpy as np
 
 from repro.core.latency import LatencyModel
 from repro.core.policy import Device, ExecutionMode, OffloadPolicy
-from repro.core.queuepair import BufferPool
+from repro.core.queuepair import BufferPool, drain_to_depth
 
 
 def _nbytes(tree) -> int:
@@ -170,10 +170,9 @@ class AsyncTransferEngine:
         if self.policy.mode == ExecutionMode.PIPELINED:
             with self._lock:
                 self._inflight.append(job)
-                # backpressure at pipeline depth (bounded queue-pair ring)
-                while len(self._inflight) > self.policy.pipeline_depth:
-                    oldest = self._inflight.pop(0)
-                    oldest.get()
+            # backpressure at pipeline depth (bounded queue-pair ring)
+            drain_to_depth(self._inflight, self._lock,
+                           self.policy.pipeline_depth, lambda j: j.get())
         return job
 
     # -- batch-level completion (pipelined mode defers checks to here) --------

@@ -42,6 +42,10 @@ class OffloadPolicy:
     # hybrid polling (§IV-C): sleep defer_fraction*L, then short-interval poll
     defer_fraction: float = 0.95
     poll_interval_us: float = 25.0               # UMWAIT-quantum analogue
+    # busy-yield window before the quantum sleeps: on kernels with coarse
+    # timer granularity (sleep(25us) can cost ~1ms) a short spin keeps
+    # streaming paths at memcpy speed while staying CPU-polite when idle
+    spin_us: float = 200.0
 
     def should_offload(self, nbytes: int) -> bool:
         if self.device == Device.INLINE:

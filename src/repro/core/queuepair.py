@@ -70,6 +70,21 @@ class BufferPool:
             self.release(b)
 
 
+def drain_to_depth(inflight: list, lock: threading.Lock, depth: int,
+                   wait_fn) -> None:
+    """Bounded-queue-pair backpressure: while more than ``depth`` jobs are
+    in flight, pop the oldest under ``lock`` and block on it *outside* the
+    lock, so concurrent submitters/drainers aren't serialized behind a full
+    transfer latency.  Shared by the tier-1 engine and the IPC channels.
+    """
+    while True:
+        with lock:
+            if len(inflight) <= depth:
+                return
+            oldest = inflight.pop(0)
+        wait_fn(oldest)
+
+
 @dataclass
 class Slot:
     buf: np.ndarray

@@ -1,3 +1,8 @@
-from repro.data.pipeline import InputPipeline, SyntheticLMSource
+from repro.data.pipeline import (
+    InputPipeline,
+    IPCSource,
+    SyntheticLMSource,
+    make_source,
+)
 
-__all__ = ["InputPipeline", "SyntheticLMSource"]
+__all__ = ["InputPipeline", "IPCSource", "SyntheticLMSource", "make_source"]

@@ -83,6 +83,108 @@ class SyntheticLMSource:
 
 
 # ---------------------------------------------------------------------------
+# IPC source: batches produced in a *separate process*, received over the
+# shared-memory transport (repro.ipc) — the paper's producer↔consumer IPC
+# made real instead of thread-simulated
+# ---------------------------------------------------------------------------
+
+class IPCSource:
+    """Drop-in source whose batches come from a producer process.
+
+    Deterministic contract: for the same ``(cfg, shape, seed)`` this yields
+    byte-identical batches to an in-process :class:`SyntheticLMSource` —
+    the transport moves bytes, it never transforms them.  ``state`` /
+    ``restore`` are forwarded to the producer over the control channel
+    (``seek``), so checkpoint replay works across the process boundary.
+    """
+
+    def __init__(self, cfg: ModelConfig, shape: ShapeConfig, seed: int = 0,
+                 batch_override: Optional[int] = None,
+                 policy: Optional[OffloadPolicy] = None,
+                 data_slots: int = 4,
+                 data_slot_bytes: Optional[int] = None,
+                 recv_timeout_s: float = 120.0):
+        from repro.ipc import start_producer, tree_nbytes
+        from repro.ipc.transport import TransportSpec
+
+        self.cfg = cfg
+        self.shape = shape
+        self.seed = seed
+        self.step = 0
+        self._timeout = recv_timeout_s
+        if data_slot_bytes is None:
+            # size slots from a locally produced sample batch (cheap: the
+            # synthetic source is deterministic and stateless per step)
+            sample = next(iter(SyntheticLMSource(cfg, shape, seed=seed,
+                                                 batch_override=batch_override)))
+            data_slot_bytes = max(tree_nbytes(sample) * 2, 1 << 20)
+        spec = {"kind": "synthetic_lm", "cfg": cfg, "shape": shape,
+                "seed": seed, "batch_override": batch_override}
+        self._producer = start_producer(
+            spec, policy=policy,
+            spec=TransportSpec(data_slots=data_slots,
+                               data_slot_bytes=data_slot_bytes))
+
+    def state(self) -> dict:
+        return {"seed": self.seed, "step": self.step}
+
+    def restore(self, state: dict) -> None:
+        self.seed = int(state["seed"])
+        self.step = int(state["step"])
+        gen = self._producer.seek(self.step, seed=self.seed)
+        # drain in-flight batches from before the seek: only a batch carrying
+        # the new generation is really the restored stream (a stale slot can
+        # coincidentally hold the right step number — or the wrong seed)
+        while True:
+            batch, header = self._producer.recv_batch(self._timeout)
+            if header.get("gen") != gen:
+                continue
+            if header.get("eof"):
+                raise RuntimeError("producer ended during restore")
+            if header.get("step") == self.step:
+                self._replay = (batch, header)
+                return
+
+    def __iter__(self):
+        return self
+
+    def __next__(self) -> dict:
+        replay = getattr(self, "_replay", None)
+        if replay is not None:
+            self._replay = None
+            batch, header = replay
+        else:
+            batch, header = self._producer.recv_batch(self._timeout)
+            if header.get("eof"):
+                raise StopIteration
+        self.step = int(header["step"]) + 1
+        return batch
+
+    def close(self) -> None:
+        self._producer.stop()
+
+
+def make_source(cfg: ModelConfig, shape: ShapeConfig, source: str = "synthetic",
+                seed: int = 0, **kwargs):
+    """Source factory: ``synthetic`` (in-process) or ``ipc`` (real producer
+    process over the shared-memory transport).
+
+    Transport-only kwargs (``policy``, ``data_slots``, ...) are accepted for
+    both kinds and ignored by ``synthetic``, so callers can flip the
+    ``source`` flag without changing their call site.
+    """
+    if source == "synthetic":
+        kwargs = {k: v for k, v in kwargs.items()
+                  if k not in ("policy", "data_slots", "data_slot_bytes",
+                               "recv_timeout_s")}
+        return SyntheticLMSource(cfg, shape, seed=seed, **kwargs)
+    if source == "ipc":
+        return IPCSource(cfg, shape, seed=seed, **kwargs)
+    raise ValueError(f"unknown source kind {source!r} "
+                     "(expected 'synthetic' or 'ipc')")
+
+
+# ---------------------------------------------------------------------------
 # the pipeline: source -> staging pool -> transfer engine -> device
 # ---------------------------------------------------------------------------
 
@@ -146,3 +248,5 @@ class InputPipeline:
 
     def close(self):
         self.engine.close()
+        if hasattr(self._src, "close"):
+            self._src.close()          # IPC sources stop their producer

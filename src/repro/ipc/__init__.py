@@ -1,0 +1,39 @@
+"""repro.ipc — real cross-process shared-memory IPC with ROCKET modes.
+
+The paper's runtime, made an actual inter-process transport:
+
+- :mod:`repro.ipc.shm`       — pre-mapped shared-memory arenas + seqlocks
+- :mod:`repro.ipc.ring`      — fixed-slot SPSC rings (queue pairs, §IV-C)
+- :mod:`repro.ipc.channel`   — typed numpy-pytree channels, sync/async/
+  pipelined send modes with hybrid-polling completion
+- :mod:`repro.ipc.transport` — one arena + four rings = one connection
+- :mod:`repro.ipc.worker`    — producer processes and the cross-process
+  dispatcher bridge (request/query across a real process boundary)
+"""
+from repro.ipc.shm import SeqLock, SharedMemoryArena, attach_retry
+from repro.ipc.ring import ChannelClosed, Ring, RingSpec, SlotReader, SlotWriter
+from repro.ipc.channel import (
+    ChannelStats,
+    ControlChannel,
+    DataChannel,
+    RecvLease,
+    SendHandle,
+    tree_nbytes,
+)
+from repro.ipc.transport import ShmTransport, TransportSpec
+from repro.ipc.worker import (
+    DispatcherServer,
+    ProducerHandle,
+    RemoteDispatcherClient,
+    make_source_from_spec,
+    start_producer,
+)
+
+__all__ = [
+    "ChannelClosed", "ChannelStats", "ControlChannel", "DataChannel",
+    "DispatcherServer", "ProducerHandle", "RecvLease",
+    "RemoteDispatcherClient", "Ring", "RingSpec", "SendHandle", "SeqLock",
+    "SharedMemoryArena", "ShmTransport", "SlotReader", "SlotWriter",
+    "TransportSpec", "attach_retry", "make_source_from_spec",
+    "start_producer", "tree_nbytes",
+]

@@ -1,0 +1,358 @@
+"""Typed channels over shm rings: numpy pytrees, ROCKET send modes.
+
+A :class:`DataChannel` sends pytrees (nested dict/list/tuple) of numpy
+arrays through one :class:`~repro.ipc.ring.Ring`.  The wire format is
+
+- **meta**: a pickled descriptor mirroring the tree structure with each
+  array leaf replaced by ``(offset, shape, dtype)`` — plus an optional
+  user header dict (op names, job ids, seeds...);
+- **payload**: the arrays' bytes packed back-to-back at 64-byte-aligned
+  offsets inside the slot — a single memcpy per leaf into pre-mapped
+  shared memory, and *zero* copies on the receive side when the caller
+  asks for views (``copy=False``).
+
+Send modes follow :class:`~repro.core.policy.OffloadPolicy` exactly like
+the tier-1 engine (the paper's Table III):
+
+- ``sync``       — the caller performs the copy inline and the handle is
+  complete on return (cpu/DTO);
+- ``async``      — a dedicated channel thread (the DSA-engine analogue)
+  performs slot acquire + copy + publish; ``send`` returns a handle
+  immediately and ``handle.wait()`` applies hybrid polling;
+- ``pipelined``  — async plus bounded in-flight depth: when more than
+  ``pipeline_depth`` sends are outstanding the oldest is completed first
+  (backpressure), with the blocking wait held *outside* the channel lock.
+
+Small below-threshold messages stay inline in every mode (size-based
+offload control).
+"""
+from __future__ import annotations
+
+import pickle
+import threading
+import time
+from concurrent.futures import Future, ThreadPoolExecutor
+from concurrent.futures import TimeoutError as FuturesTimeout
+from dataclasses import dataclass
+from typing import Any, Optional
+
+import numpy as np
+
+from repro.core.latency import LatencyModel
+from repro.core.policy import ExecutionMode, OffloadPolicy
+from repro.core.queuepair import drain_to_depth
+from repro.ipc.ring import ChannelClosed, Ring, SlotReader, _align
+
+
+# ---------------------------------------------------------------------------
+# pytree packing (stdlib-only: no jax dependency inside the IPC layer)
+# ---------------------------------------------------------------------------
+
+class _Leaf:
+    __slots__ = ("offset", "shape", "dtype")
+
+    def __init__(self, offset: int, shape, dtype: str):
+        self.offset = offset
+        self.shape = tuple(shape)
+        self.dtype = dtype
+
+
+def _pack_descr(tree, cursor: list[int]):
+    """Replace array leaves with placement descriptors; returns mirror tree."""
+    if isinstance(tree, dict):
+        return {k: _pack_descr(v, cursor) for k, v in tree.items()}
+    if isinstance(tree, (list, tuple)):
+        packed = [_pack_descr(v, cursor) for v in tree]
+        return packed if isinstance(tree, list) else tuple(packed)
+    arr = np.asarray(tree)
+    leaf = _Leaf(cursor[0], arr.shape, arr.dtype.str)
+    cursor[0] += _align(arr.nbytes)
+    return leaf
+
+
+def _copy_leaves(tree, descr, payload: memoryview) -> None:
+    if isinstance(descr, dict):
+        for k, d in descr.items():
+            _copy_leaves(tree[k], d, payload)
+        return
+    if isinstance(descr, (list, tuple)):
+        for v, d in zip(tree, descr):
+            _copy_leaves(v, d, payload)
+        return
+    arr = np.ascontiguousarray(np.asarray(tree))
+    dst = np.frombuffer(payload, np.uint8, count=arr.nbytes,
+                        offset=descr.offset)
+    np.copyto(dst, arr.reshape(-1).view(np.uint8))
+
+
+def _unpack(descr, payload: memoryview, copy: bool):
+    if isinstance(descr, dict):
+        return {k: _unpack(d, payload, copy) for k, d in descr.items()}
+    if isinstance(descr, (list, tuple)):
+        out = [_unpack(d, payload, copy) for d in descr]
+        return out if isinstance(descr, list) else tuple(out)
+    dtype = np.dtype(descr.dtype)
+    count = int(np.prod(descr.shape)) if descr.shape else 1
+    arr = np.frombuffer(payload, dtype, count=count,
+                        offset=descr.offset).reshape(descr.shape)
+    return arr.copy() if copy else arr
+
+
+def tree_nbytes(tree) -> int:
+    if isinstance(tree, dict):
+        return sum(tree_nbytes(v) for v in tree.values())
+    if isinstance(tree, (list, tuple)):
+        return sum(tree_nbytes(v) for v in tree)
+    return np.asarray(tree).nbytes
+
+
+# ---------------------------------------------------------------------------
+# completion handles
+# ---------------------------------------------------------------------------
+
+class SendHandle:
+    """Completion flag for one send (the job-id side of the paper's API)."""
+
+    def __init__(self, channel: "DataChannel", nbytes: int,
+                 future: Optional[Future] = None):
+        self.nbytes = nbytes
+        self.submit_t = time.perf_counter()
+        self._future = future
+        self._channel = channel
+
+    def done(self) -> bool:
+        return self._future is None or self._future.done()
+
+    def wait(self, timeout_s: float = 30.0) -> None:
+        """Hybrid-polling completion: size-aware deferral + short waits."""
+        if self._future is None:
+            return
+        ch = self._channel
+        if not self._future.done():
+            pred = ch.latency.defer_seconds(self.nbytes,
+                                            ch.policy.defer_fraction)
+            remain = pred - (time.perf_counter() - self.submit_t)
+            if remain > 0:
+                time.sleep(min(remain, timeout_s))
+                ch.stats.deferred_sleep_s += min(remain, timeout_s)
+            quantum = ch.policy.poll_interval_us * 1e-6
+            deadline = time.perf_counter() + timeout_s
+            t0 = time.perf_counter()
+            while not self._future.done():
+                ch.stats.polls += 1
+                if time.perf_counter() > deadline:
+                    ch.stats.blocked_wait_s += time.perf_counter() - t0
+                    raise TimeoutError("send not complete within timeout")
+                try:
+                    self._future.result(timeout=quantum)
+                except (TimeoutError, FuturesTimeout):
+                    continue
+            ch.stats.blocked_wait_s += time.perf_counter() - t0
+        self._future.result()          # surface worker exceptions
+        self._future = None
+
+
+class RecvLease:
+    """Zero-copy receive: tree views stay valid until ``release``."""
+
+    def __init__(self, tree, header: dict, reader: SlotReader):
+        self.tree = tree
+        self.header = header
+        self._reader = reader
+
+    def release(self) -> None:
+        if self._reader is not None:
+            self._reader.release()
+            self._reader = None
+            # the views are invalid once the slot is recycled; drop them so
+            # they can't pin the arena mapping open (BufferError on close)
+            self.tree = None
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.release()
+
+
+@dataclass
+class ChannelStats:
+    sends: int = 0
+    inline: int = 0
+    offloaded: int = 0
+    recvs: int = 0
+    bytes_sent: int = 0
+    bytes_recv: int = 0
+    polls: int = 0
+    deferred_sleep_s: float = 0.0
+    blocked_wait_s: float = 0.0
+
+    def snapshot(self) -> dict:
+        return dict(self.__dict__)
+
+
+# ---------------------------------------------------------------------------
+# the channel
+# ---------------------------------------------------------------------------
+
+class DataChannel:
+    """Bidirectional typed channel over one tx ring + one rx ring."""
+
+    def __init__(self, tx: Optional[Ring], rx: Optional[Ring],
+                 policy: Optional[OffloadPolicy] = None,
+                 latency: Optional[LatencyModel] = None):
+        self.tx = tx
+        self.rx = rx
+        self.policy = policy or OffloadPolicy()
+        self.latency = latency or LatencyModel()
+        self.stats = ChannelStats()
+        self._send_lock = threading.Lock()      # slot-order serialization
+        self._inflight: list[SendHandle] = []
+        self._inflight_lock = threading.Lock()
+        self._executor: Optional[ThreadPoolExecutor] = None
+
+    def _engine(self) -> ThreadPoolExecutor:
+        # one worker: the single offload engine; also guarantees slot order
+        if self._executor is None:
+            self._executor = ThreadPoolExecutor(
+                max_workers=1, thread_name_prefix="rocket-ipc")
+        return self._executor
+
+    # -- send -----------------------------------------------------------------
+    def _do_send(self, tree, header: Optional[dict],
+                 timeout_s: float) -> None:
+        cursor = [0]
+        descr = _pack_descr(tree, cursor)
+        nbytes = cursor[0]
+        meta = pickle.dumps((header or {}, descr),
+                            protocol=pickle.HIGHEST_PROTOCOL)
+        if nbytes > self.tx.spec.slot_bytes:
+            raise ValueError(
+                f"message of {nbytes} B exceeds slot capacity "
+                f"{self.tx.spec.slot_bytes} B — create the transport with a "
+                f"larger data_slot_bytes")
+        if len(meta) > self.tx.spec.meta_bytes:
+            raise ValueError(
+                f"meta of {len(meta)} B exceeds meta capacity "
+                f"{self.tx.spec.meta_bytes} B")
+        with self._send_lock:
+            writer = self.tx.acquire(timeout_s)
+            _copy_leaves(tree, descr, writer.payload)
+            writer.meta[:len(meta)] = meta
+            writer.publish(nbytes, len(meta))
+
+    def send(self, tree, header: Optional[dict] = None,
+             mode: ExecutionMode | str | None = None,
+             timeout_s: float = 30.0) -> SendHandle:
+        if self.tx is None:
+            raise RuntimeError("receive-only channel")
+        mode = ExecutionMode(mode) if mode is not None else self.policy.mode
+        nbytes = tree_nbytes(tree)
+        self.stats.sends += 1
+        self.stats.bytes_sent += nbytes
+
+        if mode == ExecutionMode.SYNC or not self.policy.should_offload(nbytes):
+            self.stats.inline += 1
+            self.flush(timeout_s)      # FIFO: inline never overtakes offloads
+            self._do_send(tree, header, timeout_s)
+            return SendHandle(self, nbytes)
+
+        self.stats.offloaded += 1
+        fut = self._engine().submit(self._do_send, tree, header, timeout_s)
+        handle = SendHandle(self, nbytes, future=fut)
+        with self._inflight_lock:
+            # track every offloaded send so flush() orders later sync sends
+            # after it; prune cleanly-completed ones so async stays bounded
+            # (a failed handle is kept: flush must surface its exception)
+            while (self._inflight and self._inflight[0]._future is not None
+                   and self._inflight[0]._future.done()
+                   and self._inflight[0]._future.exception() is None):
+                self._inflight.pop(0)._future = None
+            self._inflight.append(handle)
+        if mode == ExecutionMode.PIPELINED:
+            # bounded in-flight depth (the engine's backpressure, same shape)
+            drain_to_depth(self._inflight, self._inflight_lock,
+                           self.policy.pipeline_depth,
+                           lambda h: h.wait(timeout_s))
+        return handle
+
+    def flush(self, timeout_s: float = 30.0) -> None:
+        """Complete all outstanding pipelined sends (batch-level check)."""
+        with self._inflight_lock:
+            pending, self._inflight = self._inflight, []
+        for h in pending:
+            h.wait(timeout_s)
+
+    # -- recv -----------------------------------------------------------------
+    def recv(self, timeout_s: float = 30.0, copy: bool = True,
+             hint_nbytes: int = 0):
+        """Receive one pytree; ``copy=False`` returns a :class:`RecvLease`
+        whose arrays are zero-copy views into the slot."""
+        if self.rx is None:
+            raise RuntimeError("send-only channel")
+        reader = self.rx.wait_recv(timeout_s, hint_nbytes)
+        header, descr = pickle.loads(reader.meta)
+        self.stats.recvs += 1
+        self.stats.bytes_recv += reader.payload_nbytes
+        payload = reader.slot.payload_view
+        if copy:
+            tree = _unpack(descr, payload, copy=True)
+            reader.release()
+            return tree, header
+        return RecvLease(_unpack(descr, payload, copy=False), header, reader)
+
+    def try_recv(self, copy: bool = True):
+        """Non-blocking receive; None when no message is ready."""
+        if self.rx is None:
+            raise RuntimeError("send-only channel")
+        reader = self.rx.try_poll()
+        if reader is None:
+            return None
+        header, descr = pickle.loads(reader.meta)
+        self.stats.recvs += 1
+        self.stats.bytes_recv += reader.payload_nbytes
+        if copy:
+            tree = _unpack(descr, reader.slot.payload_view, copy=True)
+            reader.release()
+            return tree, header
+        return RecvLease(_unpack(descr, reader.slot.payload_view,
+                                 copy=False), header, reader)
+
+    # -- lifecycle ------------------------------------------------------------
+    def close(self, timeout_s: float = 5.0) -> None:
+        try:
+            self.flush(timeout_s)
+        except (TimeoutError, ChannelClosed):
+            pass
+        if self._executor is not None:
+            self._executor.shutdown(wait=True)
+            self._executor = None
+
+
+class ControlChannel:
+    """Small pickled-object messages (commands, acks) over tiny slots."""
+
+    def __init__(self, tx: Optional[Ring], rx: Optional[Ring]):
+        self.tx = tx
+        self.rx = rx
+        self._lock = threading.Lock()
+
+    def send_msg(self, obj: Any, timeout_s: float = 30.0) -> None:
+        blob = pickle.dumps(obj, protocol=pickle.HIGHEST_PROTOCOL)
+        if len(blob) > self.tx.spec.slot_bytes:
+            raise ValueError(f"control message of {len(blob)} B too large")
+        with self._lock:
+            w = self.tx.acquire(timeout_s)
+            w.payload[:len(blob)] = blob
+            w.publish(len(blob))
+
+    def recv_msg(self, timeout_s: float = 30.0) -> Any:
+        with self.rx.wait_recv(timeout_s) as r:
+            return pickle.loads(r.payload)
+
+    def try_recv_msg(self) -> Any:
+        r = self.rx.try_poll()
+        if r is None:
+            return None
+        with r:
+            return pickle.loads(r.payload)

@@ -1,0 +1,321 @@
+"""Fixed-slot SPSC rings over a shared-memory arena (queue pairs, §IV-C).
+
+One :class:`Ring` is a single-producer/single-consumer ring of ``n_slots``
+fixed-size slots living inside a :class:`~repro.ipc.shm.SharedMemoryArena`.
+Each slot is::
+
+    [ slot header (64 B) | meta region (meta_bytes) | payload (slot_bytes) ]
+
+with the header holding the slot *state flag* — the paper's completion flag —
+plus the published payload/meta lengths and a monotonically increasing
+message sequence number.  The producer cycles tail→slots, the consumer
+head→slots; the state flag is the only synchronization point:
+
+    EMPTY --producer--> WRITING --publish--> READY --consumer--> READING
+      ^                                                              |
+      +-------------------------- release --------------------------+
+
+Completion waits use the repo's hybrid polling (``core.latency`` +
+``core.policy``): optional size-aware deferral (sleep most of the predicted
+copy latency) followed by short passive waits of ``poll_interval_us`` — the
+UMWAIT-quantum analogue.  Pre-mapping is inherited from the arena: all slots
+are first-touched at creation, so steady state never faults.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Optional
+
+import numpy as np
+
+from repro.core.latency import LatencyModel
+from repro.core.policy import OffloadPolicy
+from repro.ipc.shm import SharedMemoryArena
+
+SLOT_HEADER_BYTES = 64
+_ALIGN = 64
+
+# slot states (int64 stores — single aligned word, untorn)
+EMPTY, WRITING, READY, READING = 0, 1, 2, 3
+
+
+class ChannelClosed(EOFError):
+    """The peer endpoint shut down while we were waiting on the ring."""
+
+
+def _align(n: int, a: int = _ALIGN) -> int:
+    return (n + a - 1) // a * a
+
+
+@dataclass(frozen=True)
+class RingSpec:
+    """Geometry of one ring; both endpoints must construct from the same
+    spec (the transport embeds it in the arena descriptor)."""
+    n_slots: int
+    slot_bytes: int            # payload capacity per slot
+    meta_bytes: int = 1024     # per-slot metadata capacity (pickled headers)
+
+    @property
+    def slot_stride(self) -> int:
+        return SLOT_HEADER_BYTES + _align(self.meta_bytes) + \
+            _align(self.slot_bytes)
+
+    @property
+    def region_bytes(self) -> int:
+        return self.n_slots * self.slot_stride
+
+
+@dataclass
+class RingStats:
+    produced: int = 0
+    consumed: int = 0
+    polls: int = 0
+    full_waits: int = 0          # producer found ring full (backpressure)
+    deferred_sleep_s: float = 0.0
+    blocked_wait_s: float = 0.0
+
+
+class _Slot:
+    """Typed views over one slot's header/meta/payload regions."""
+
+    def __init__(self, arena: SharedMemoryArena, offset: int, spec: RingSpec):
+        self.hdr = arena.ndarray(offset, (8,), np.int64)   # state, seq, pay, meta
+        meta_off = offset + SLOT_HEADER_BYTES
+        self.meta_view = arena.view(meta_off, spec.meta_bytes)
+        pay_off = meta_off + _align(spec.meta_bytes)
+        self.payload_view = arena.view(pay_off, spec.slot_bytes)
+
+    # header word accessors (index names double as layout docs)
+    @property
+    def state(self) -> int:
+        return int(self.hdr[0])
+
+    @state.setter
+    def state(self, v: int) -> None:
+        self.hdr[0] = v
+
+    @property
+    def seq(self) -> int:
+        return int(self.hdr[1])
+
+    @seq.setter
+    def seq(self, v: int) -> None:
+        self.hdr[1] = v
+
+    @property
+    def payload_nbytes(self) -> int:
+        return int(self.hdr[2])
+
+    @payload_nbytes.setter
+    def payload_nbytes(self, v: int) -> None:
+        self.hdr[2] = v
+
+    @property
+    def meta_nbytes(self) -> int:
+        return int(self.hdr[3])
+
+    @meta_nbytes.setter
+    def meta_nbytes(self, v: int) -> None:
+        self.hdr[3] = v
+
+    def drop_views(self) -> None:
+        """Release buffer exports so the arena can close."""
+        self.hdr = None
+        self.meta_view = None
+        self.payload_view = None
+
+
+class SlotWriter:
+    """Producer-side lease on a WRITING slot; ``publish`` flips it READY."""
+
+    def __init__(self, ring: "Ring", slot: _Slot, seq: int):
+        self._ring = ring
+        self.slot = slot
+        self.seq = seq
+
+    @property
+    def payload(self) -> memoryview:
+        return self.slot.payload_view
+
+    @property
+    def meta(self) -> memoryview:
+        return self.slot.meta_view
+
+    def publish(self, payload_nbytes: int, meta_nbytes: int = 0) -> None:
+        s = self.slot
+        s.payload_nbytes = payload_nbytes
+        s.meta_nbytes = meta_nbytes
+        s.seq = self.seq
+        s.state = READY            # the publishing store (completion flag)
+        self._ring._produced[0] += 1
+        self._ring.stats.produced += 1
+
+
+class SlotReader:
+    """Consumer-side lease on a READING slot; ``release`` frees it."""
+
+    def __init__(self, ring: "Ring", slot: _Slot):
+        self._ring = ring
+        self.slot = slot
+        self.seq = slot.seq
+        self.payload_nbytes = slot.payload_nbytes
+        self.meta_nbytes = slot.meta_nbytes
+
+    @property
+    def payload(self) -> memoryview:
+        return self.slot.payload_view[:self.payload_nbytes]
+
+    @property
+    def meta(self) -> bytes:
+        return bytes(self.slot.meta_view[:self.meta_nbytes])
+
+    def payload_array(self, offset: int, shape, dtype,
+                      copy: bool = True) -> np.ndarray:
+        """Typed view (or copy) of a sub-range of the payload."""
+        dtype = np.dtype(dtype)
+        nbytes = int(np.prod(shape)) * dtype.itemsize
+        arr = np.frombuffer(self.slot.payload_view, dtype,
+                            count=int(np.prod(shape)),
+                            offset=offset).reshape(shape)
+        return arr.copy() if copy else arr
+
+    def release(self) -> None:
+        self.slot.state = EMPTY
+        self._ring._consumed[0] += 1
+        self._ring.stats.consumed += 1
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.release()
+
+
+class Ring:
+    """One directional ring endpoint (construct with the producer or
+    consumer role; both map the same arena region)."""
+
+    def __init__(self, arena: SharedMemoryArena, offset: int, spec: RingSpec,
+                 policy: Optional[OffloadPolicy] = None,
+                 latency: Optional[LatencyModel] = None,
+                 counter_words: tuple[int, int] = (4, 5)):
+        self.arena = arena
+        self.spec = spec
+        self.policy = policy or OffloadPolicy()
+        self.latency = latency or LatencyModel()
+        self.stats = RingStats()
+        self._slots = [
+            _Slot(arena, offset + i * spec.slot_stride, spec)
+            for i in range(spec.n_slots)
+        ]
+        # shared produced/consumed counters (introspection + wraparound tests)
+        words = arena.control_words()
+        self._produced = words[counter_words[0]:counter_words[0] + 1]
+        self._consumed = words[counter_words[1]:counter_words[1] + 1]
+        self._head = 0             # consumer cursor (local: SPSC)
+        self._tail = 0             # producer cursor (local: SPSC)
+        self._seq = 0
+        self._closed_word: Optional[np.ndarray] = None
+
+    def bind_shutdown_word(self, word: np.ndarray) -> None:
+        """A shared flag checked inside waits: nonzero → peer is gone."""
+        self._closed_word = word
+
+    def _peer_closed(self) -> bool:
+        return self._closed_word is not None and int(self._closed_word[0]) != 0
+
+    @property
+    def produced(self) -> int:
+        return int(self._produced[0])
+
+    @property
+    def consumed(self) -> int:
+        return int(self._consumed[0])
+
+    # -- hybrid polling core --------------------------------------------------
+    def _wait_state(self, slot: _Slot, want: int, timeout_s: float,
+                    hint_nbytes: int = 0) -> bool:
+        """Wait for ``slot.state == want`` with deferral + short waits."""
+        if slot.state == want:
+            return True
+        t0 = time.perf_counter()
+        if hint_nbytes > 0:
+            # size-aware deferral: sleep most of the predicted copy latency
+            defer = self.latency.defer_seconds(hint_nbytes,
+                                               self.policy.defer_fraction)
+            if defer > 0:
+                time.sleep(min(defer, timeout_s))
+                self.stats.deferred_sleep_s += min(defer, timeout_s)
+            if slot.state == want:
+                return True
+        # spin phase: yield-only polls so a streaming peer is caught at
+        # memcpy latency even where sleep() granularity is ~1ms
+        spin_deadline = time.perf_counter() + self.policy.spin_us * 1e-6
+        while time.perf_counter() < spin_deadline:
+            self.stats.polls += 1
+            if slot.state == want:
+                self.stats.blocked_wait_s += time.perf_counter() - t0
+                return True
+            time.sleep(0)
+        quantum = self.policy.poll_interval_us * 1e-6
+        deadline = t0 + timeout_s
+        while slot.state != want:
+            self.stats.polls += 1
+            if self._peer_closed():
+                raise ChannelClosed("peer endpoint closed the transport")
+            if time.perf_counter() > deadline:
+                self.stats.blocked_wait_s += time.perf_counter() - t0
+                return False
+            time.sleep(quantum)      # passive short wait (UMWAIT analogue)
+        self.stats.blocked_wait_s += time.perf_counter() - t0
+        return True
+
+    # -- producer side --------------------------------------------------------
+    def try_acquire(self) -> Optional[SlotWriter]:
+        slot = self._slots[self._tail % self.spec.n_slots]
+        if slot.state != EMPTY:
+            return None
+        slot.state = WRITING
+        self._tail += 1
+        self._seq += 1
+        return SlotWriter(self, slot, self._seq)
+
+    def acquire(self, timeout_s: float = 30.0) -> SlotWriter:
+        """Claim the next slot, blocking while the ring is full
+        (backpressure = the paper's bounded queue-pair depth)."""
+        slot = self._slots[self._tail % self.spec.n_slots]
+        if slot.state != EMPTY:
+            self.stats.full_waits += 1
+            if not self._wait_state(slot, EMPTY, timeout_s):
+                raise TimeoutError(
+                    f"ring full for {timeout_s}s (consumer stalled?)")
+        slot.state = WRITING
+        self._tail += 1
+        self._seq += 1
+        return SlotWriter(self, slot, self._seq)
+
+    # -- consumer side --------------------------------------------------------
+    def try_poll(self) -> Optional[SlotReader]:
+        slot = self._slots[self._head % self.spec.n_slots]
+        if slot.state != READY:
+            return None
+        slot.state = READING
+        self._head += 1
+        return SlotReader(self, slot)
+
+    def wait_recv(self, timeout_s: float = 30.0,
+                  hint_nbytes: int = 0) -> SlotReader:
+        slot = self._slots[self._head % self.spec.n_slots]
+        if not self._wait_state(slot, READY, timeout_s, hint_nbytes):
+            raise TimeoutError(f"no message within {timeout_s}s")
+        slot.state = READING
+        self._head += 1
+        return SlotReader(self, slot)
+
+    def drop_views(self) -> None:
+        for s in self._slots:
+            s.drop_views()
+        self._produced = None
+        self._consumed = None
+        self._closed_word = None

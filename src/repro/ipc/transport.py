@@ -1,0 +1,212 @@
+"""Cross-process shm transport: one arena, four rings, two typed channels.
+
+:class:`ShmTransport` packages a full connection between exactly two
+processes (the paper's client↔server queue-pair setup):
+
+- a **data channel** per direction (large slots, numpy pytrees);
+- a **control channel** per direction (small slots, pickled commands);
+- a geometry descriptor at the head of the arena, written by the creator
+  under a seqlock and read by the attacher — so the attaching process only
+  needs the *name* (connection setup = one validated attach, after which
+  everything is pre-mapped and fault-free);
+- per-endpoint shutdown flags (control words) that turn blocked ring waits
+  into :class:`~repro.ipc.ring.ChannelClosed` instead of deadlocks.
+
+Arena control-word map::
+
+    0  descriptor seqlock        1 creator-closed     2 attacher-closed
+    3  descriptor-ready flag
+    4/5   c2s data produced/consumed        6/7   s2c data produced/consumed
+    8/9   c2s ctrl produced/consumed        10/11 s2c ctrl produced/consumed
+"""
+from __future__ import annotations
+
+import os
+import pickle
+import struct
+import time
+from dataclasses import dataclass
+from typing import Optional
+
+from repro.core.latency import LatencyModel
+from repro.core.policy import OffloadPolicy
+from repro.ipc.channel import ControlChannel, DataChannel
+from repro.ipc.ring import Ring, RingSpec, _align
+from repro.ipc.shm import SharedMemoryArena, attach_retry
+
+_DESCR_BYTES = 4096
+_W_DESCR_LOCK, _W_CREATOR_CLOSED, _W_ATTACHER_CLOSED, _W_READY = 0, 1, 2, 3
+_RING_WORDS = {"c2s_data": (4, 5), "s2c_data": (6, 7),
+               "c2s_ctrl": (8, 9), "s2c_ctrl": (10, 11)}
+
+
+@dataclass(frozen=True)
+class TransportSpec:
+    data_slots: int = 4
+    data_slot_bytes: int = 32 << 20
+    data_meta_bytes: int = 4096
+    ctrl_slots: int = 8
+    ctrl_slot_bytes: int = 64 << 10
+
+    @property
+    def data_ring(self) -> RingSpec:
+        return RingSpec(self.data_slots, self.data_slot_bytes,
+                        self.data_meta_bytes)
+
+    @property
+    def ctrl_ring(self) -> RingSpec:
+        return RingSpec(self.ctrl_slots, self.ctrl_slot_bytes, 64)
+
+    def layout(self) -> dict:
+        """Ring name → arena user-region offset (descriptor block first)."""
+        off = _align(_DESCR_BYTES)
+        out = {}
+        for name, spec in (("c2s_data", self.data_ring),
+                           ("s2c_data", self.data_ring),
+                           ("c2s_ctrl", self.ctrl_ring),
+                           ("s2c_ctrl", self.ctrl_ring)):
+            out[name] = off
+            off = _align(off + spec.region_bytes)
+        out["__total__"] = off
+        return out
+
+
+def _unique_name(prefix: str = "rocket") -> str:
+    return f"{prefix}-{os.getpid()}-{time.monotonic_ns() & 0xFFFFFF:x}"
+
+
+class ShmTransport:
+    """One endpoint of a two-process shared-memory connection."""
+
+    def __init__(self, arena: SharedMemoryArena, spec: TransportSpec,
+                 side: str, policy: Optional[OffloadPolicy] = None,
+                 latency: Optional[LatencyModel] = None):
+        assert side in ("creator", "attacher")
+        self.arena = arena
+        self.spec = spec
+        self.side = side
+        self.policy = policy or OffloadPolicy()
+        self.latency = latency or LatencyModel()
+        self._closed = False
+
+        layout = spec.layout()
+        words = arena.control_words()
+        # my tx is c2s when I created the arena ("server" side of the name)
+        tx_dir, rx_dir = (("c2s", "s2c") if side == "creator"
+                          else ("s2c", "c2s"))
+
+        def ring(direction: str, kind: str) -> Ring:
+            key = f"{direction}_{kind}"
+            rspec = spec.data_ring if kind == "data" else spec.ctrl_ring
+            r = Ring(arena, layout[key], rspec, self.policy, self.latency,
+                     counter_words=_RING_WORDS[key])
+            peer_word = (_W_ATTACHER_CLOSED if side == "creator"
+                         else _W_CREATOR_CLOSED)
+            r.bind_shutdown_word(words[peer_word:peer_word + 1])
+            return r
+
+        self._rings = {
+            "tx_data": ring(tx_dir, "data"), "rx_data": ring(rx_dir, "data"),
+            "tx_ctrl": ring(tx_dir, "ctrl"), "rx_ctrl": ring(rx_dir, "ctrl"),
+        }
+        self.data = DataChannel(self._rings["tx_data"],
+                                self._rings["rx_data"],
+                                self.policy, self.latency)
+        self.ctrl = ControlChannel(self._rings["tx_ctrl"],
+                                   self._rings["rx_ctrl"])
+        mine = (_W_CREATOR_CLOSED if side == "creator"
+                else _W_ATTACHER_CLOSED)
+        self._my_closed_word = words[mine:mine + 1]
+
+    # -- construction ---------------------------------------------------------
+    @classmethod
+    def create(cls, name: Optional[str] = None,
+               spec: TransportSpec = TransportSpec(),
+               policy: Optional[OffloadPolicy] = None,
+               latency: Optional[LatencyModel] = None) -> "ShmTransport":
+        name = name or _unique_name()
+        layout = spec.layout()
+        arena = SharedMemoryArena(name, size=layout["__total__"], create=True)
+        # publish geometry under the descriptor seqlock, then raise READY
+        blob = pickle.dumps(spec, protocol=pickle.HIGHEST_PROTOCOL)
+        if len(blob) + 4 > _DESCR_BYTES:
+            raise ValueError("transport spec descriptor too large")
+        lock = arena.seqlock(_W_DESCR_LOCK)
+        with lock.write():
+            view = arena.view(0, _DESCR_BYTES)
+            struct.pack_into("<I", view, 0, len(blob))
+            view[4:4 + len(blob)] = blob
+        arena.control_words()[_W_READY] = 1
+        return cls(arena, spec, "creator", policy, latency)
+
+    @classmethod
+    def attach(cls, name: str, policy: Optional[OffloadPolicy] = None,
+               latency: Optional[LatencyModel] = None,
+               timeout_s: float = 30.0) -> "ShmTransport":
+        arena = attach_retry(name, timeout_s)
+        words = arena.control_words()
+        deadline = time.perf_counter() + timeout_s
+        while int(words[_W_READY]) == 0:       # creator still writing layout
+            if time.perf_counter() > deadline:
+                arena.close()
+                raise TimeoutError(f"transport {name!r} never became ready")
+            time.sleep(0.001)
+
+        lock = arena.seqlock(_W_DESCR_LOCK)
+
+        def read_spec():
+            view = arena.view(0, _DESCR_BYTES)
+            (n,) = struct.unpack_from("<I", view, 0)
+            return bytes(view[4:4 + n])
+
+        spec = pickle.loads(lock.read(read_spec))
+        return cls(arena, spec, "attacher", policy, latency)
+
+    # -- convenience ----------------------------------------------------------
+    @property
+    def name(self) -> str:
+        return self.arena.name
+
+    def send(self, tree, header: Optional[dict] = None, **kw):
+        return self.data.send(tree, header, **kw)
+
+    def recv(self, **kw):
+        return self.data.recv(**kw)
+
+    def send_msg(self, obj, **kw) -> None:
+        self.ctrl.send_msg(obj, **kw)
+
+    def recv_msg(self, **kw):
+        return self.ctrl.recv_msg(**kw)
+
+    def stats(self) -> dict:
+        return {
+            "data": self.data.stats.snapshot(),
+            "rings": {k: vars(r.stats) for k, r in self._rings.items()},
+        }
+
+    # -- lifecycle ------------------------------------------------------------
+    def announce_close(self) -> None:
+        """Raise this endpoint's closed flag so the peer's blocked ring
+        waits fail fast with ChannelClosed (no deadlock on shutdown)."""
+        if self._my_closed_word is not None:
+            self._my_closed_word[0] = 1
+
+    def close(self, unlink: Optional[bool] = None) -> None:
+        if self._closed:
+            return
+        self._closed = True
+        self.announce_close()
+        self.data.close()
+        self._my_closed_word = None
+        for r in self._rings.values():
+            r.drop_views()
+        self.arena.close()
+        if unlink if unlink is not None else (self.side == "creator"):
+            self.arena.unlink()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()

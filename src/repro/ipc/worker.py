@@ -1,0 +1,310 @@
+"""Process runners over the shm transport: batch producers + RPC bridge.
+
+Two roles:
+
+- :func:`start_producer` spawns a **producer process** that attaches to a
+  transport by name and streams source batches through the data channel —
+  the real-IPC version of the input pipeline's producer side.  The control
+  channel carries ``seek`` / ``stop`` commands back to the producer
+  (checkpoint-restore and shutdown), and the producer marks end-of-stream
+  with an ``eof`` header.
+
+- :class:`DispatcherServer` / :class:`RemoteDispatcherClient` bridge the
+  in-process :class:`~repro.core.dispatcher.RequestDispatcher` across the
+  transport, so clients in *other processes* issue
+  ``request(op, data, mode)`` / ``query(job_id)`` exactly like the paper's
+  Listing 1 — sync blocks for the result, async/pipelined return a job id
+  completed by hybrid polling (reusing :class:`QueryHandler`).
+
+Producer entry points are module-level functions (spawn-safe).
+"""
+from __future__ import annotations
+
+import importlib
+import multiprocessing as mp
+import threading
+import time
+from concurrent.futures import ThreadPoolExecutor
+from dataclasses import dataclass
+from typing import Optional
+
+import numpy as np
+
+from repro.core.dispatcher import QueryHandler, Request, RequestDispatcher
+from repro.core.latency import LatencyModel
+from repro.core.policy import ExecutionMode, OffloadPolicy
+from repro.ipc.ring import ChannelClosed
+from repro.ipc.transport import ShmTransport, TransportSpec
+
+
+# ---------------------------------------------------------------------------
+# source construction inside the producer process
+# ---------------------------------------------------------------------------
+
+def make_source_from_spec(spec: dict):
+    """Build a batch source in the child from a picklable spec dict.
+
+    kinds:
+      ``synthetic_lm``  — repro.data.SyntheticLMSource(cfg, shape, seed, ...)
+      ``factory``       — dotted ``module:function`` called with ``kwargs``
+    """
+    kind = spec.get("kind", "synthetic_lm")
+    if kind == "synthetic_lm":
+        from repro.data.pipeline import SyntheticLMSource
+        return SyntheticLMSource(spec["cfg"], spec["shape"],
+                                 seed=spec.get("seed", 0),
+                                 batch_override=spec.get("batch_override"))
+    if kind == "factory":
+        mod_name, fn_name = spec["path"].split(":")
+        fn = getattr(importlib.import_module(mod_name), fn_name)
+        return fn(**spec.get("kwargs", {}))
+    raise ValueError(f"unknown source kind {kind!r}")
+
+
+def _producer_entry(name: str, source_spec: dict, policy: OffloadPolicy,
+                    n_batches: Optional[int]) -> None:
+    """Child main: attach, stream batches, honor seek/stop commands."""
+    transport = ShmTransport.attach(name, policy=policy)
+    source = make_source_from_spec(source_spec)
+    state = {"it": iter(source), "gen": 0}
+
+    def apply_seek(cmd: dict) -> None:
+        # gen: seek generation, lets the consumer discard stale in-flight
+        # batches published before the restore
+        source.restore({"seed": cmd.get("seed", source.seed),
+                        "step": cmd["step"]})
+        state["it"] = iter(source)
+        state["gen"] = cmd.get("gen", state["gen"] + 1)
+        transport.data.flush()
+
+    try:
+        while True:
+            sent = 0
+            while n_batches is None or sent < n_batches:
+                cmd = transport.ctrl.try_recv_msg()
+                if cmd is not None:
+                    if cmd.get("cmd") == "stop":
+                        return
+                    if cmd.get("cmd") == "seek":
+                        apply_seek(cmd)
+                        continue
+                step = getattr(source, "step", sent)
+                batch = next(state["it"])
+                # mode semantics come from the policy: sync publishes
+                # inline, async/pipelined overlap production with the copy
+                transport.send(batch, header={"step": step,
+                                              "gen": state["gen"]})
+                sent += 1
+            transport.data.flush()
+            transport.send({}, header={"eof": True, "gen": state["gen"]},
+                           mode="sync")
+            # linger: a late stop makes the consumer's close racefree, and a
+            # late seek (restore on a finished stream) restarts production
+            deadline = time.perf_counter() + 30.0
+            resumed = False
+            while time.perf_counter() < deadline:
+                cmd = transport.ctrl.try_recv_msg()
+                if cmd is not None:
+                    if cmd.get("cmd") == "stop":
+                        return
+                    if cmd.get("cmd") == "seek":
+                        apply_seek(cmd)
+                        resumed = True
+                        break
+                time.sleep(0.005)
+            if not resumed:
+                return
+    except ChannelClosed:
+        pass
+    finally:
+        transport.close()
+
+
+@dataclass
+class ProducerHandle:
+    """Consumer-side handle on a spawned producer process."""
+    transport: ShmTransport
+    process: mp.process.BaseProcess
+    gen: int = 0                 # current seek generation (0 = initial stream)
+
+    def recv_batch(self, timeout_s: float = 60.0):
+        """Next (batch, header); header["eof"] marks end of stream."""
+        return self.transport.recv(timeout_s=timeout_s)
+
+    def seek(self, step: int, seed: Optional[int] = None) -> int:
+        """Reposition the producer; returns the new generation.  Batches
+        already in flight carry the old generation — discard headers whose
+        ``gen`` differs (stale data, possibly from a different seed)."""
+        self.gen += 1
+        msg = {"cmd": "seek", "step": step, "gen": self.gen}
+        if seed is not None:
+            msg["seed"] = seed
+        self.transport.send_msg(msg)
+        return self.gen
+
+    def stop(self, timeout_s: float = 10.0) -> None:
+        try:
+            if self.process.is_alive():
+                self.transport.send_msg({"cmd": "stop"}, timeout_s=2.0)
+        except (TimeoutError, ChannelClosed, ValueError):
+            pass
+        # raise our closed flag first: a producer blocked on a full ring
+        # sees ChannelClosed instead of waiting out its acquire timeout
+        self.transport.announce_close()
+        self.process.join(timeout=timeout_s)
+        if self.process.is_alive():
+            self.process.terminate()
+            self.process.join(timeout=5)
+        self.transport.close()
+
+
+def start_producer(source_spec: dict,
+                   policy: Optional[OffloadPolicy] = None,
+                   spec: TransportSpec = TransportSpec(),
+                   n_batches: Optional[int] = None,
+                   name: Optional[str] = None,
+                   ctx: Optional[mp.context.BaseContext] = None
+                   ) -> ProducerHandle:
+    """Create a transport and spawn a producer process streaming into it."""
+    policy = policy or OffloadPolicy()
+    transport = ShmTransport.create(name, spec, policy)
+    ctx = ctx or mp.get_context("spawn")
+    proc = ctx.Process(target=_producer_entry,
+                       args=(transport.name, source_spec, policy, n_batches),
+                       daemon=True)
+    proc.start()
+    return ProducerHandle(transport, proc)
+
+
+# ---------------------------------------------------------------------------
+# cross-process dispatcher bridge (paper Listing 1 across a real boundary)
+# ---------------------------------------------------------------------------
+
+class DispatcherServer:
+    """Serves a :class:`RequestDispatcher`'s handlers to a remote client."""
+
+    def __init__(self, dispatcher: RequestDispatcher,
+                 transport: ShmTransport, workers: int = 2):
+        self.dispatcher = dispatcher
+        self.transport = transport
+        self._pool = ThreadPoolExecutor(max_workers=workers,
+                                        thread_name_prefix="rocket-ipc-srv")
+        self._stop = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+
+    def _reply(self, job_id: int, result, error: Optional[str]) -> None:
+        tree = {} if error is not None else {"result": np.asarray(result)}
+        self.transport.send(tree, header={"job_id": job_id, "error": error},
+                            mode="sync")
+
+    def _handle(self, header: dict, tree) -> None:
+        job_id, op = header["job_id"], header["op"]
+        mode = ExecutionMode(header.get("mode", "sync"))
+        try:
+            # route through the dispatcher so batching/stats apply; sync here
+            # is fine — concurrency comes from the server pool
+            if mode == ExecutionMode.SYNC:
+                result = self.dispatcher.request(op, tree["data"], mode="sync")
+            else:
+                jid = self.dispatcher.request(op, tree["data"], mode=mode)
+                result = self.dispatcher.query(jid)
+            self._reply(job_id, result, None)
+        except Exception as e:                      # surfaced client-side
+            self._reply(job_id, None, f"{type(e).__name__}: {e}")
+
+    def _loop(self) -> None:
+        while not self._stop.is_set():
+            try:
+                tree, header = self.transport.recv(timeout_s=0.05)
+            except TimeoutError:
+                continue
+            except ChannelClosed:
+                break
+            if header.get("shutdown"):
+                break
+            self._pool.submit(self._handle, header, tree)
+
+    def serve_forever(self) -> None:
+        self._loop()
+
+    def start(self) -> "DispatcherServer":
+        self._thread = threading.Thread(target=self._loop, daemon=True,
+                                        name="rocket-ipc-serve")
+        self._thread.start()
+        return self
+
+    def close(self) -> None:
+        self._stop.set()
+        if self._thread is not None:
+            self._thread.join(timeout=5)
+        self._pool.shutdown(wait=True)
+
+
+class RemoteDispatcherClient:
+    """Client-process side: the paper's request/query API over the wire."""
+
+    def __init__(self, transport: ShmTransport,
+                 policy: Optional[OffloadPolicy] = None,
+                 latency: Optional[LatencyModel] = None):
+        self.transport = transport
+        self.policy = policy or transport.policy
+        self.latency = latency or transport.latency
+        self.queries = QueryHandler(self.latency, self.policy)
+        self._ids = iter(range(1, 1 << 62))
+        self._lock = threading.Lock()
+        self._recv_thread: Optional[threading.Thread] = None
+        self._stop = threading.Event()
+
+    def _ensure_receiver(self) -> None:
+        with self._lock:
+            if self._recv_thread is None:
+                self._recv_thread = threading.Thread(
+                    target=self._recv_loop, daemon=True,
+                    name="rocket-ipc-cli")
+                self._recv_thread.start()
+
+    def _recv_loop(self) -> None:
+        while not self._stop.is_set():
+            try:
+                tree, header = self.transport.recv(timeout_s=0.05)
+            except TimeoutError:
+                continue
+            except ChannelClosed:
+                break
+            err = header.get("error")
+            result = RuntimeError(err) if err else tree["result"]
+            self.queries.complete(header["job_id"], result)
+
+    def request(self, op: str, data: np.ndarray,
+                mode: ExecutionMode | str | None = None):
+        mode = ExecutionMode(mode) if mode is not None else self.policy.mode
+        with self._lock:
+            job_id = next(self._ids)
+        data = np.asarray(data)
+        header = {"job_id": job_id, "op": op, "mode": mode.value}
+        # all modes go through the receiver thread + QueryHandler: replies
+        # are matched by job_id, so concurrent client threads can't steal
+        # each other's results off the SPSC rx ring
+        self._ensure_receiver()
+        self.queries.register(Request(job_id, op, None, mode,
+                                      nbytes=int(data.nbytes)))
+        self.transport.send({"data": data}, header=header, mode=mode)
+        if mode == ExecutionMode.SYNC:
+            return self.query(job_id)
+        return job_id
+
+    def query(self, job_id: int, timeout: float = 60.0):
+        out = self.queries.query(job_id, timeout)
+        if isinstance(out, Exception):
+            raise out
+        return out
+
+    def close(self) -> None:
+        self._stop.set()
+        if self._recv_thread is not None:
+            self._recv_thread.join(timeout=5)
+        try:
+            self.transport.send({}, header={"job_id": -1, "shutdown": True},
+                                mode="sync", timeout_s=2.0)
+        except (TimeoutError, ChannelClosed, ValueError):
+            pass

@@ -24,6 +24,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro import compat
+
 LANE = 128          # TPU lane width; last dim of blocks
 
 
@@ -122,7 +124,7 @@ def offload_copy_pallas(x, *, scale: float = 1.0, out_dtype=None,
             pltpu.SemaphoreType.DMA((depth,)),
             pltpu.SMEM((1, 1), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.pallas_tpu_compiler_params(
             dimension_semantics=("arbitrary",)),
         interpret=interpret,
     )(x)

@@ -14,6 +14,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro import compat
+
 
 def _ssd_kernel(x_ref, b_ref, c_ref, dt_ref, da_ref, dsk_ref,
                 y_ref, hout_ref, state, *, q: int, nc: int):
@@ -98,7 +100,7 @@ def ssd_scan_pallas(xh, bm, cm, dt, da, d_skip, *, chunk: int = 256,
             jax.ShapeDtypeStruct((b, nh, n, p), jnp.float32),
         ],
         scratch_shapes=[pltpu.VMEM((n, p), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.pallas_tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(xh, bm, cm, dt, da, dsk)

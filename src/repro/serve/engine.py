@@ -93,6 +93,25 @@ class BatchedServer:
         d.register_handler("generate", single, batch_fn=batched)
         return d
 
+    # -- cross-process serving (repro.ipc) ---------------------------------------
+    def serve_over_ipc(self, name: Optional[str] = None,
+                       latency: Optional[LatencyModel] = None,
+                       data_slot_bytes: int = 8 << 20):
+        """Expose the dispatcher to clients in *other processes* over the
+        shared-memory transport.  Returns ``(server, transport)``; clients
+        attach with :class:`repro.ipc.RemoteDispatcherClient` by
+        ``transport.name`` and use the paper's request/query API.
+        """
+        from repro.ipc import DispatcherServer, ShmTransport
+        from repro.ipc.transport import TransportSpec
+
+        transport = ShmTransport.create(
+            name, TransportSpec(data_slot_bytes=data_slot_bytes),
+            policy=self.policy, latency=latency)
+        dispatcher = self.make_dispatcher(latency)
+        server = DispatcherServer(dispatcher, transport).start()
+        return server, transport
+
     def _pack(self, prompts: list[np.ndarray]) -> dict:
         """Left-align prompts into a fixed (B, S) slab (persistent shape)."""
         s = max(int(p.shape[-1]) for p in prompts)

@@ -1,8 +1,18 @@
 import os
+import sys
 
 # Tests must see the single real CPU device (the dry-run subprocess sets its
 # own device count); keep XLA quiet and deterministic.
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+# hypothesis is an *optional* test dependency: in network-isolated containers
+# it may be missing.  Install the stub (tests/_hypothesis_compat.py) before
+# any test module does `from hypothesis import given, ...` so collection
+# survives and property tests skip instead of erroring.
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+import _hypothesis_compat
+
+_HYPOTHESIS_STUBBED = _hypothesis_compat.install()
 
 import jax
 import numpy as np

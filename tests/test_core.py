@@ -60,15 +60,18 @@ def test_latency_model_matches_paper_constants():
 
 
 def test_calibration_recovers_linear_model():
-    true = LatencyModel(l_fixed_us=50.0, alpha_us_per_mb=20.0)
+    # constants sized well above the host's sleep granularity (containers
+    # can have ~1ms timer quanta, which would flatten a microsecond-scale
+    # fake model into alpha=0)
+    true = LatencyModel(l_fixed_us=1000.0, alpha_us_per_mb=2000.0)
 
     def fake_transfer(buf):
         time.sleep(true.predict_us(buf.nbytes) * 1e-6)
 
-    m = calibrate(fake_transfer, sizes_bytes=(1 << 18, 1 << 20, 1 << 21),
+    m = calibrate(fake_transfer, sizes_bytes=(1 << 19, 1 << 20, 1 << 21),
                   repeats=3)
-    assert abs(m.alpha_us_per_mb - 20.0) < 10.0
-    assert m.l_fixed_us < 200.0
+    assert abs(m.alpha_us_per_mb - 2000.0) < 600.0
+    assert m.l_fixed_us < 3000.0
 
 
 def test_pipeline_depth_from_latency_model():

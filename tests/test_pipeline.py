@@ -40,7 +40,10 @@ SCRIPT = textwrap.dedent("""
 @pytest.mark.slow
 def test_pipeline_matches_sequential_subprocess():
     env = dict(os.environ)
-    env.pop("JAX_PLATFORMS", None)
+    # pin the subprocess to CPU: the fake 8-device mesh is a host-platform
+    # feature, and autodetect hangs probing TPU metadata in network-isolated
+    # containers
+    env["JAX_PLATFORMS"] = "cpu"
     env["PYTHONPATH"] = "src"
     out = subprocess.run([sys.executable, "-c", SCRIPT], capture_output=True,
                          text=True, timeout=300, env=env,

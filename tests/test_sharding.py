@@ -13,8 +13,15 @@ from repro.optim import adamw
 from repro.sharding import api as shard_api
 from repro.sharding import rules
 
-SINGLE = AbstractMesh((16, 16), ("data", "model"))
-MULTI = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+def _abstract_mesh(sizes, names):
+    try:                                   # newer jax: (axis_sizes, axis_names)
+        return AbstractMesh(sizes, names)
+    except TypeError:                      # jax<=0.4.x: ((name, size), ...)
+        return AbstractMesh(tuple(zip(names, sizes)))
+
+
+SINGLE = _abstract_mesh((16, 16), ("data", "model"))
+MULTI = _abstract_mesh((2, 16, 16), ("pod", "data", "model"))
 
 
 def _axis_sizes(mesh):
