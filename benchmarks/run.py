@@ -20,6 +20,7 @@ from benchmarks import (
     fig11_batch_sweep,
     fig12_decomposition,
     fig13_instruction_counts,
+    fig14_multiclient,
     table1_workload_bytes,
 )
 
@@ -35,6 +36,7 @@ MODULES = {
     "fig11": fig11_batch_sweep,
     "fig12": fig12_decomposition,
     "fig13": fig13_instruction_counts,
+    "fig14": fig14_multiclient,
 }
 
 

@@ -33,6 +33,18 @@ class Request:
     mode: ExecutionMode
     submit_t: float = field(default_factory=time.perf_counter)
     nbytes: int = 0
+    # completion callback (multi-client serving): when set, the worker thread
+    # calls ``callback(job_id, result_or_exception)`` instead of parking the
+    # result in the QueryHandler — the IPC fabric uses this to demultiplex
+    # batched results back to the right client transport.
+    callback: Optional[Callable[[int, Any], None]] = None
+
+
+@dataclass
+class _Failure:
+    """Wrapper parking a handler exception in the QueryHandler (so a result
+    that happens to *be* an Exception instance is not misread as an error)."""
+    error: Exception
 
 
 @dataclass
@@ -136,10 +148,37 @@ class RequestDispatcher:
         self._q.put(req)
         return req.job_id
 
+    def submit(self, op: str, data: Any,
+               mode: ExecutionMode | str | None = None,
+               on_complete: Optional[Callable[[int, Any], None]] = None
+               ) -> int:
+        """Enqueue a request without ever blocking the caller.
+
+        Unlike :meth:`request`, sync mode is *not* executed inline: every
+        mode goes through the worker thread (sync/async solo, pipelined
+        batchable), so a polling thread — the IPC reactor — can hand off
+        work from many clients without stalling its sweep.  When
+        ``on_complete`` is given it fires from the worker thread with
+        ``(job_id, result_or_exception)`` and the result bypasses the
+        QueryHandler; otherwise fetch it with :meth:`query`.
+        """
+        mode = ExecutionMode(mode) if mode is not None else self.policy.mode
+        req = Request(next(self._ids), op, data, mode,
+                      nbytes=int(np.asarray(data).nbytes)
+                      if isinstance(data, np.ndarray) else 0,
+                      callback=on_complete)
+        self.stats.requests += 1
+        if on_complete is None:
+            self.queries.register(req)
+        self._q.put(req)
+        return req.job_id
+
     def query(self, job_id: int, timeout: float = 60.0) -> Any:
         self.stats.queries += 1
         out = self.queries.query(job_id, timeout)
         self.stats.query_polls = self.queries.polls
+        if isinstance(out, _Failure):
+            raise out.error
         return out
 
     # -- server loop -----------------------------------------------------------
@@ -181,12 +220,41 @@ class RequestDispatcher:
         self.stats.batched_requests += len(batch)
         self.stats.mean_batch = self.stats.batched_requests / self.stats.batches
         bfn = self._batch_handlers.get(op)
+        # errors are contained per request: a failing handler completes its
+        # job(s) with the exception instead of killing the worker loop
         if bfn is not None and len(batch) > 1:
-            results = bfn([r.data for r in batch])
+            try:
+                results = bfn([r.data for r in batch])
+                if len(results) != len(batch):
+                    # surface the handler bug now — zip truncation would
+                    # leave the tail requests uncompleted forever
+                    raise RuntimeError(
+                        f"batch handler for {op!r} returned {len(results)} "
+                        f"results for {len(batch)} requests")
+            except Exception as e:
+                results = [e] * len(batch)
         else:
-            results = [self._handlers[op](r.data) for r in batch]
+            results = []
+            for r in batch:
+                try:
+                    results.append(self._handlers[op](r.data))
+                except Exception as e:
+                    results.append(e)
         for r, out in zip(batch, results):
-            self.queries.complete(r.job_id, out)
+            self._complete(r, out)
+
+    def _complete(self, req: Request, out: Any) -> None:
+        if req.callback is not None:
+            try:
+                req.callback(req.job_id, out)
+            except Exception:
+                # reply path failed (e.g. client transport already gone);
+                # the job is still settled — don't kill the worker loop
+                pass
+        else:
+            self.queries.complete(
+                req.job_id, _Failure(out) if isinstance(out, Exception)
+                else out)
 
     def close(self) -> None:
         self._running = False

@@ -1,16 +1,23 @@
 """repro.ipc — real cross-process shared-memory IPC with ROCKET modes.
 
-The paper's runtime, made an actual inter-process transport:
+The paper's runtime, made an actual inter-process transport (see
+``docs/ARCHITECTURE.md`` for the layer diagram and control-word maps):
 
-- :mod:`repro.ipc.shm`       — pre-mapped shared-memory arenas + seqlocks
+- :mod:`repro.ipc.shm`       — pre-mapped shared-memory arenas, seqlocks,
+  and the exclusive-creation cross-process mutex
 - :mod:`repro.ipc.ring`      — fixed-slot SPSC rings (queue pairs, §IV-C)
 - :mod:`repro.ipc.channel`   — typed numpy-pytree channels, sync/async/
   pipelined send modes with hybrid-polling completion
 - :mod:`repro.ipc.transport` — one arena + four rings = one connection
-- :mod:`repro.ipc.worker`    — producer processes and the cross-process
-  dispatcher bridge (request/query across a real process boundary)
+- :mod:`repro.ipc.listener`  — multi-client rendezvous: registration
+  mailbox + accept loop minting per-client transports
+- :mod:`repro.ipc.reactor`   — one server thread multiplexing N client
+  transports with round-robin fairness and admission caps
+- :mod:`repro.ipc.worker`    — producer processes, the point-to-point
+  dispatcher bridge, and the multi-client :class:`ServingFabric`
+  (cross-client request batching)
 """
-from repro.ipc.shm import SeqLock, SharedMemoryArena, attach_retry
+from repro.ipc.shm import SeqLock, SharedMemoryArena, ShmMutex, attach_retry
 from repro.ipc.ring import ChannelClosed, Ring, RingSpec, SlotReader, SlotWriter
 from repro.ipc.channel import (
     ChannelStats,
@@ -21,19 +28,23 @@ from repro.ipc.channel import (
     tree_nbytes,
 )
 from repro.ipc.transport import ShmTransport, TransportSpec
+from repro.ipc.listener import Listener, connect
+from repro.ipc.reactor import Connection, Reactor
 from repro.ipc.worker import (
     DispatcherServer,
     ProducerHandle,
     RemoteDispatcherClient,
+    ServingFabric,
     make_source_from_spec,
     start_producer,
 )
 
 __all__ = [
-    "ChannelClosed", "ChannelStats", "ControlChannel", "DataChannel",
-    "DispatcherServer", "ProducerHandle", "RecvLease",
-    "RemoteDispatcherClient", "Ring", "RingSpec", "SendHandle", "SeqLock",
-    "SharedMemoryArena", "ShmTransport", "SlotReader", "SlotWriter",
-    "TransportSpec", "attach_retry", "make_source_from_spec",
-    "start_producer", "tree_nbytes",
+    "ChannelClosed", "ChannelStats", "Connection", "ControlChannel",
+    "DataChannel", "DispatcherServer", "Listener", "ProducerHandle",
+    "Reactor", "RecvLease", "RemoteDispatcherClient", "Ring", "RingSpec",
+    "SendHandle", "SeqLock", "ServingFabric", "SharedMemoryArena",
+    "ShmMutex", "ShmTransport", "SlotReader", "SlotWriter", "TransportSpec",
+    "attach_retry", "connect", "make_source_from_spec", "start_producer",
+    "tree_nbytes",
 ]

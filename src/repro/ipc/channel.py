@@ -99,6 +99,7 @@ def _unpack(descr, payload: memoryview, copy: bool):
 
 
 def tree_nbytes(tree) -> int:
+    """Total payload bytes of every array leaf in a pytree."""
     if isinstance(tree, dict):
         return sum(tree_nbytes(v) for v in tree.values())
     if isinstance(tree, (list, tuple)):
@@ -121,6 +122,7 @@ class SendHandle:
         self._channel = channel
 
     def done(self) -> bool:
+        """True once the copy has been published (never blocks)."""
         return self._future is None or self._future.done()
 
     def wait(self, timeout_s: float = 30.0) -> None:
@@ -161,6 +163,7 @@ class RecvLease:
         self._reader = reader
 
     def release(self) -> None:
+        """Recycle the slot; the leased views become invalid."""
         if self._reader is not None:
             self._reader.release()
             self._reader = None
@@ -177,6 +180,7 @@ class RecvLease:
 
 @dataclass
 class ChannelStats:
+    """Per-channel send/recv counters and wait-time accounting."""
     sends: int = 0
     inline: int = 0
     offloaded: int = 0
@@ -188,6 +192,7 @@ class ChannelStats:
     blocked_wait_s: float = 0.0
 
     def snapshot(self) -> dict:
+        """A plain-dict copy (for logging/benchmark rows)."""
         return dict(self.__dict__)
 
 
@@ -244,6 +249,8 @@ class DataChannel:
     def send(self, tree, header: Optional[dict] = None,
              mode: ExecutionMode | str | None = None,
              timeout_s: float = 30.0) -> SendHandle:
+        """Send one pytree under the given (or policy) mode; see module
+        docstring for the sync/async/pipelined semantics."""
         if self.tx is None:
             raise RuntimeError("receive-only channel")
         mode = ExecutionMode(mode) if mode is not None else self.policy.mode
@@ -320,6 +327,7 @@ class DataChannel:
 
     # -- lifecycle ------------------------------------------------------------
     def close(self, timeout_s: float = 5.0) -> None:
+        """Flush outstanding sends and stop the offload engine thread."""
         try:
             self.flush(timeout_s)
         except (TimeoutError, ChannelClosed):
@@ -338,6 +346,7 @@ class ControlChannel:
         self._lock = threading.Lock()
 
     def send_msg(self, obj: Any, timeout_s: float = 30.0) -> None:
+        """Send one small pickled message (blocks while the ring is full)."""
         blob = pickle.dumps(obj, protocol=pickle.HIGHEST_PROTOCOL)
         if len(blob) > self.tx.spec.slot_bytes:
             raise ValueError(f"control message of {len(blob)} B too large")
@@ -347,10 +356,12 @@ class ControlChannel:
             w.publish(len(blob))
 
     def recv_msg(self, timeout_s: float = 30.0) -> Any:
+        """Blocking receive of one message."""
         with self.rx.wait_recv(timeout_s) as r:
             return pickle.loads(r.payload)
 
     def try_recv_msg(self) -> Any:
+        """Non-blocking receive; None when no message is waiting."""
         r = self.rx.try_poll()
         if r is None:
             return None

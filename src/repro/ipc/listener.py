@@ -1,0 +1,215 @@
+"""Multi-client rendezvous: a listener arena that hands out queue pairs.
+
+:class:`ShmTransport` is strictly point-to-point, so serving *N* client
+processes needs connection setup machinery — the paper's server-side
+"connection setup" generalized from one peer to many (and the explicit
+registration/discovery step the shared-memory-ROS literature shows
+one-to-many topologies need).  The protocol:
+
+- the server creates one small **rendezvous arena** whose *name* is the only
+  thing clients must know (like a listening socket's address);
+- a client takes the **registration mutex** (:class:`~repro.ipc.shm.ShmMutex`
+  — exclusive shm creation is the only cross-process atomic we have, and the
+  rings are SPSC, so registrations must be serialized), writes its request
+  into the seqlock-protected **request mailbox**, and bumps the REQ counter;
+- the server's accept loop sees ``REQ > ACK``, creates a dedicated
+  :class:`~repro.ipc.transport.ShmTransport` arena for that client, writes
+  the transport's name into the **reply mailbox**, and bumps ACK;
+- the client reads the name, attaches, releases the mutex, and from then on
+  talks over its private pre-mapped queue pair — the rendezvous arena is
+  never touched again on the data path.
+
+Rendezvous control-word map::
+
+    0  alive flag (0 = listener gone: connects fail fast)
+    1  REQ — registrations posted        2  ACK — registrations answered
+    3  request-mailbox seqlock           4  reply-mailbox seqlock
+    5  accepted-client count (stats)
+
+User region: ``[request mailbox | reply mailbox]``, each a length-prefixed
+pickled blob under its seqlock.
+"""
+from __future__ import annotations
+
+import os
+import pickle
+import struct
+import threading
+import time
+from typing import Callable, Optional
+
+from repro.core.latency import LatencyModel
+from repro.core.policy import OffloadPolicy
+from repro.ipc.shm import SharedMemoryArena, ShmMutex, attach_retry
+from repro.ipc.transport import ShmTransport, TransportSpec, _unique_name
+
+_MAILBOX_BYTES = 4096
+_W_ALIVE, _W_REQ, _W_ACK, _W_REQ_LOCK, _W_REP_LOCK, _W_ACCEPTED = range(6)
+_REQ_OFF, _REP_OFF = 0, _MAILBOX_BYTES
+
+
+def _write_mailbox(arena: SharedMemoryArena, lock_word: int, offset: int,
+                   obj) -> None:
+    """Publish one pickled blob into a mailbox under its seqlock."""
+    blob = pickle.dumps(obj, protocol=pickle.HIGHEST_PROTOCOL)
+    if len(blob) + 4 > _MAILBOX_BYTES:
+        raise ValueError(f"mailbox message of {len(blob)} B too large")
+    with arena.seqlock(lock_word).write():
+        view = arena.view(offset, _MAILBOX_BYTES)
+        struct.pack_into("<I", view, 0, len(blob))
+        view[4:4 + len(blob)] = blob
+
+
+def _read_mailbox(arena: SharedMemoryArena, lock_word: int, offset: int):
+    """Read one pickled blob from a mailbox under torn-read protection."""
+    def read():
+        view = arena.view(offset, _MAILBOX_BYTES)
+        (n,) = struct.unpack_from("<I", view, 0)
+        return bytes(view[4:4 + n])
+    return pickle.loads(arena.seqlock(lock_word).read(read))
+
+
+class Listener:
+    """Accept loop: turns registrations into dedicated per-client transports.
+
+    The server side of the rendezvous protocol.  ``accept_once`` handles at
+    most one pending registration (create arena → reply with its name) and
+    returns the new server-side :class:`ShmTransport`, or ``None``; ``start``
+    runs that in a background thread with hybrid-quantum idle sleeps, handing
+    each accepted transport to ``on_accept``.
+
+    ``max_clients`` caps *total registrations over the listener's lifetime*
+    (client ids double as arena-name suffixes, so they are never reused);
+    size it for churn, not just concurrency.
+    """
+
+    def __init__(self, name: Optional[str] = None,
+                 spec: TransportSpec = TransportSpec(),
+                 policy: Optional[OffloadPolicy] = None,
+                 latency: Optional[LatencyModel] = None,
+                 max_clients: int = 64,
+                 on_accept: Optional[Callable[[ShmTransport], None]] = None):
+        self.name = name or _unique_name("rocket-lsn")
+        self.spec = spec
+        self.policy = policy or OffloadPolicy()
+        self.latency = latency
+        self.max_clients = max_clients
+        self.on_accept = on_accept
+        self.accepted = 0
+        self._arena = SharedMemoryArena(self.name, size=2 * _MAILBOX_BYTES,
+                                        create=True)
+        self._words = self._arena.control_words()
+        self._words[_W_ALIVE] = 1
+        self._thread: Optional[threading.Thread] = None
+        self._stop = threading.Event()
+        self._closed = False
+
+    # -- accept side ----------------------------------------------------------
+    def pending(self) -> bool:
+        """True when a client has posted a registration we haven't answered."""
+        return int(self._words[_W_REQ]) > int(self._words[_W_ACK])
+
+    def accept_once(self) -> Optional[ShmTransport]:
+        """Answer at most one pending registration; None when there is none."""
+        if not self.pending():
+            return None
+        record = _read_mailbox(self._arena, _W_REQ_LOCK, _REQ_OFF)
+        if self.accepted >= self.max_clients:
+            reply = {"error": f"listener full ({self.max_clients} clients)"}
+            transport = None
+        else:
+            cid = self.accepted
+            transport = ShmTransport.create(
+                f"{self.name}.c{cid}-{record.get('pid', 0)}",
+                self.spec, policy=self.policy, latency=self.latency)
+            reply = {"name": transport.name, "client_id": cid}
+        _write_mailbox(self._arena, _W_REP_LOCK, _REP_OFF, reply)
+        if transport is not None:
+            self.accepted += 1
+            self._words[_W_ACCEPTED] = self.accepted
+        self._words[_W_ACK] += 1          # publishes the reply to the client
+        if transport is not None and self.on_accept is not None:
+            self.on_accept(transport)
+        return transport
+
+    def _accept_loop(self) -> None:
+        quantum = self.policy.poll_interval_us * 1e-6
+        while not self._stop.is_set():
+            if self.accept_once() is None:
+                time.sleep(quantum)
+
+    def start(self) -> "Listener":
+        """Run the accept loop in a daemon thread."""
+        self._thread = threading.Thread(target=self._accept_loop, daemon=True,
+                                        name="rocket-listener")
+        self._thread.start()
+        return self
+
+    # -- lifecycle ------------------------------------------------------------
+    def close(self) -> None:
+        """Stop accepting, mark the rendezvous dead, destroy its arena."""
+        if self._closed:
+            return
+        self._closed = True
+        self._stop.set()
+        if self._thread is not None:
+            self._thread.join(timeout=5)
+            self._thread = None
+        self._words[_W_ALIVE] = 0
+        self._words = None
+        self._arena.close()
+        self._arena.unlink()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
+
+def connect(listener_name: str, policy: Optional[OffloadPolicy] = None,
+            latency: Optional[LatencyModel] = None,
+            timeout_s: float = 30.0) -> ShmTransport:
+    """Client side: register with a listener, get a dedicated transport.
+
+    Serializes with other connecting clients through the registration mutex,
+    posts a request, waits for the server's ACK with short passive waits, and
+    attaches to the transport the server created for us.
+    """
+    deadline = time.perf_counter() + timeout_s
+
+    def register(arena: SharedMemoryArena) -> dict:
+        # inner frame so the numpy control-word view dies before arena.close()
+        words = arena.control_words()
+        if int(words[_W_ALIVE]) == 0:
+            raise ConnectionError(f"listener {listener_name!r} is shut down")
+        # under the mutex the mailbox is ours; post and await the answer
+        _write_mailbox(arena, _W_REQ_LOCK, _REQ_OFF, {"pid": os.getpid()})
+        ticket = int(words[_W_REQ]) + 1
+        words[_W_REQ] = ticket
+        while int(words[_W_ACK]) < ticket:
+            if int(words[_W_ALIVE]) == 0:
+                raise ConnectionError(
+                    f"listener {listener_name!r} died mid-registration")
+            if time.perf_counter() > deadline:
+                raise TimeoutError(
+                    f"listener {listener_name!r} never answered")
+            time.sleep(0.0005)
+        return _read_mailbox(arena, _W_REP_LOCK, _REP_OFF)
+
+    arena = attach_retry(listener_name, timeout_s)
+    lock = ShmMutex(f"{listener_name}.lk")
+    try:
+        lock.acquire(timeout_s=max(deadline - time.perf_counter(), 0.001))
+        try:
+            reply = register(arena)
+        finally:
+            lock.release()
+    finally:
+        arena.close()
+    if "error" in reply:
+        raise ConnectionError(f"listener {listener_name!r} refused: "
+                              f"{reply['error']}")
+    return ShmTransport.attach(reply["name"], policy=policy, latency=latency,
+                               timeout_s=max(deadline - time.perf_counter(),
+                                             1.0))

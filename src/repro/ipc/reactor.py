@@ -1,0 +1,220 @@
+"""Reactor: one server thread multiplexing N client transports fairly.
+
+The serving side of the multi-client fabric.  One thread sweeps all
+registered connections round-robin, draining at most
+``max_drain_per_sweep`` messages from each per pass, so a chatty client
+cannot monopolize the sweep; a per-connection ``max_inflight`` admission
+cap stops a flooding client from stuffing the shared dispatcher queue —
+once its replies lag, its requests stay in its *own* ring and the ring's
+bounded depth backpressures the sender (the paper's bounded queue pairs,
+now doing double duty as a fairness mechanism).  Replies — which run on
+the shared dispatcher worker — use a short timeout, and a timed-out or
+closed reply path marks the connection dead for reaping, so a vanished
+client costs one bounded stall rather than a 30s head-of-line block per
+outstanding reply.
+
+Idle behaviour is the repo-wide hybrid policy: after an empty sweep the
+reactor spins (yield-only) for ``policy.spin_us`` so a streaming client is
+picked up at memcpy latency, then falls back to ``poll_interval_us``
+quantum sleeps — the UMWAIT analogue, now amortized over *all* clients
+instead of one blocking ``recv`` per connection.
+
+Disconnects are part of the sweep: a connection whose peer raised its
+closed flag (and whose ring is fully drained) is reaped — its transport
+closed, its arena unlinked — and reported through ``on_disconnect``, so
+client churn cannot leak arenas.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+from repro.core.policy import OffloadPolicy
+from repro.ipc.ring import ChannelClosed
+from repro.ipc.transport import ShmTransport
+
+
+@dataclass
+class Connection:
+    """One registered client: its transport plus fairness accounting."""
+    cid: int
+    transport: ShmTransport
+    received: int = 0          # messages drained from this client
+    replied: int = 0           # replies sent back to this client
+    inflight: int = 0          # dispatched, reply not yet sent (admission cap)
+    dead: bool = False         # reply path failed: reap at the next sweep
+    _lock: threading.Lock = field(default_factory=threading.Lock, repr=False)
+
+    def begin(self) -> None:
+        """Count one message as dispatched (reactor thread)."""
+        with self._lock:
+            self.received += 1
+            self.inflight += 1
+
+    def done(self) -> None:
+        """Count one reply as sent (any completion thread)."""
+        with self._lock:
+            self.replied += 1
+            self.inflight -= 1
+
+    def reply(self, tree, header: dict, timeout_s: float = 5.0) -> None:
+        """Send a reply on this client's transport and settle accounting.
+
+        The timeout is deliberately short and a failure marks the
+        connection dead: replies run on the *shared* dispatcher worker
+        thread, so a vanished client whose reply ring filled up must cost
+        at most one bounded stall — not a 30s head-of-line block per
+        reply while every other client starves.
+        """
+        try:
+            self.transport.send(tree, header=header, mode="sync",
+                                timeout_s=timeout_s)
+        except (TimeoutError, ChannelClosed):
+            self.dead = True        # unresponsive or vanished: reap it
+            raise
+        finally:
+            self.done()
+
+
+@dataclass
+class ReactorStats:
+    """Aggregate sweep counters (per-connection detail lives on Connection)."""
+    sweeps: int = 0
+    messages: int = 0
+    idle_sleeps: int = 0
+    throttled: int = 0         # sweeps that skipped a conn at max_inflight
+    disconnects: int = 0
+    errors: int = 0            # on_message raised (message dropped, loop lives)
+
+
+class Reactor:
+    """Round-robin poller over many transports in a single thread."""
+
+    def __init__(self, policy: Optional[OffloadPolicy] = None,
+                 on_message: Optional[Callable[[Connection, dict, dict],
+                                               None]] = None,
+                 on_disconnect: Optional[Callable[[Connection], None]] = None,
+                 max_drain_per_sweep: int = 8,
+                 max_inflight: int = 16):
+        self.policy = policy or OffloadPolicy()
+        self.on_message = on_message
+        self.on_disconnect = on_disconnect
+        self.max_drain_per_sweep = max_drain_per_sweep
+        self.max_inflight = max_inflight
+        self.stats = ReactorStats()
+        self._conns: dict[int, Connection] = {}
+        self._lock = threading.Lock()
+        self._next_cid = 0
+        self._stop = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+
+    # -- registry -------------------------------------------------------------
+    def add(self, transport: ShmTransport) -> Connection:
+        """Register a transport; it is polled from the next sweep on."""
+        with self._lock:
+            conn = Connection(self._next_cid, transport)
+            self._conns[conn.cid] = conn
+            self._next_cid += 1
+        return conn
+
+    def connections(self) -> list[Connection]:
+        """Snapshot of live connections (stable order by client id)."""
+        with self._lock:
+            return [self._conns[k] for k in sorted(self._conns)]
+
+    def __len__(self) -> int:
+        return len(self._conns)
+
+    def _reap(self, conn: Connection) -> None:
+        with self._lock:
+            self._conns.pop(conn.cid, None)
+        self.stats.disconnects += 1
+        if self.on_disconnect is not None:
+            self.on_disconnect(conn)
+        conn.transport.close()          # creator side: unlinks the arena
+
+    # -- the sweep ------------------------------------------------------------
+    def _drain(self, conn: Connection) -> int:
+        """Pull up to the fairness quantum from one connection's rx ring."""
+        drained = 0
+        while drained < self.max_drain_per_sweep and not conn.dead:
+            if conn.inflight >= self.max_inflight:
+                self.stats.throttled += 1
+                return drained          # admission cap: leave rest in its ring
+            try:
+                item = conn.transport.data.try_recv(copy=True)
+            except ChannelClosed:
+                item = None
+            if item is None:
+                break
+            tree, header = item
+            drained += 1
+            conn.begin()
+            if self.on_message is not None:
+                try:
+                    self.on_message(conn, tree, header)
+                except Exception:
+                    # one malformed message must not kill the sweep thread
+                    # (which serves every client); drop it, settle accounting
+                    conn.done()
+                    self.stats.errors += 1
+        return drained
+
+    def poll_once(self) -> int:
+        """One fair sweep over every connection; returns messages drained."""
+        self.stats.sweeps += 1
+        total = 0
+        for conn in self.connections():
+            n = self._drain(conn)
+            total += n
+            # reap only after an *empty* drain: a closing peer's in-flight
+            # messages are still delivered before the connection is torn
+            # down.  A dead connection (reply path failed) is reaped
+            # unconditionally — late callbacks hitting its closed transport
+            # are swallowed by the dispatcher's completion containment.
+            if conn.dead or (n == 0 and conn.inflight == 0
+                             and conn.transport.peer_closed):
+                self._reap(conn)
+        self.stats.messages += total
+        return total
+
+    def _loop(self) -> None:
+        quantum = self.policy.poll_interval_us * 1e-6
+        spin_s = self.policy.spin_us * 1e-6
+        spin_deadline = time.perf_counter() + spin_s
+        while not self._stop.is_set():
+            if self.poll_once() > 0:
+                spin_deadline = time.perf_counter() + spin_s
+                continue
+            if time.perf_counter() < spin_deadline:
+                time.sleep(0)           # spin phase: catch streamers fast
+            else:
+                self.stats.idle_sleeps += 1
+                time.sleep(quantum)     # quantum phase: stay CPU-polite
+
+    # -- lifecycle ------------------------------------------------------------
+    def start(self) -> "Reactor":
+        """Run the sweep loop in a daemon thread."""
+        self._thread = threading.Thread(target=self._loop, daemon=True,
+                                        name="rocket-reactor")
+        self._thread.start()
+        return self
+
+    def close(self) -> None:
+        """Stop the loop and close every registered transport."""
+        self._stop.set()
+        if self._thread is not None:
+            self._thread.join(timeout=5)
+            self._thread = None
+        with self._lock:
+            conns, self._conns = list(self._conns.values()), {}
+        for conn in conns:
+            conn.transport.close()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()

@@ -58,16 +58,19 @@ class RingSpec:
 
     @property
     def slot_stride(self) -> int:
+        """Bytes from one slot's header to the next (64B-aligned regions)."""
         return SLOT_HEADER_BYTES + _align(self.meta_bytes) + \
             _align(self.slot_bytes)
 
     @property
     def region_bytes(self) -> int:
+        """Total arena bytes this ring occupies."""
         return self.n_slots * self.slot_stride
 
 
 @dataclass
 class RingStats:
+    """Per-endpoint ring counters (local; shared counts live in the arena)."""
     produced: int = 0
     consumed: int = 0
     polls: int = 0
@@ -136,13 +139,16 @@ class SlotWriter:
 
     @property
     def payload(self) -> memoryview:
+        """Writable view over the slot's full payload region."""
         return self.slot.payload_view
 
     @property
     def meta(self) -> memoryview:
+        """Writable view over the slot's metadata region."""
         return self.slot.meta_view
 
     def publish(self, payload_nbytes: int, meta_nbytes: int = 0) -> None:
+        """Flip the slot READY — the paper's completion-flag store."""
         s = self.slot
         s.payload_nbytes = payload_nbytes
         s.meta_nbytes = meta_nbytes
@@ -164,10 +170,12 @@ class SlotReader:
 
     @property
     def payload(self) -> memoryview:
+        """Read-only view of the published payload bytes (zero-copy)."""
         return self.slot.payload_view[:self.payload_nbytes]
 
     @property
     def meta(self) -> bytes:
+        """The published metadata bytes (copied out; they are small)."""
         return bytes(self.slot.meta_view[:self.meta_nbytes])
 
     def payload_array(self, offset: int, shape, dtype,
@@ -181,6 +189,7 @@ class SlotReader:
         return arr.copy() if copy else arr
 
     def release(self) -> None:
+        """Recycle the slot (EMPTY): any payload views become invalid."""
         self.slot.state = EMPTY
         self._ring._consumed[0] += 1
         self._ring.stats.consumed += 1
@@ -227,10 +236,12 @@ class Ring:
 
     @property
     def produced(self) -> int:
+        """Messages published into this ring (shared counter)."""
         return int(self._produced[0])
 
     @property
     def consumed(self) -> int:
+        """Messages released from this ring (shared counter)."""
         return int(self._consumed[0])
 
     # -- hybrid polling core --------------------------------------------------
@@ -273,6 +284,7 @@ class Ring:
 
     # -- producer side --------------------------------------------------------
     def try_acquire(self) -> Optional[SlotWriter]:
+        """Claim the next slot without blocking; None while the ring is full."""
         slot = self._slots[self._tail % self.spec.n_slots]
         if slot.state != EMPTY:
             return None
@@ -297,6 +309,7 @@ class Ring:
 
     # -- consumer side --------------------------------------------------------
     def try_poll(self) -> Optional[SlotReader]:
+        """Take the next READY slot without blocking; None when empty."""
         slot = self._slots[self._head % self.spec.n_slots]
         if slot.state != READY:
             return None
@@ -306,6 +319,7 @@ class Ring:
 
     def wait_recv(self, timeout_s: float = 30.0,
                   hint_nbytes: int = 0) -> SlotReader:
+        """Block (hybrid polling) until a message is READY and lease it."""
         slot = self._slots[self._head % self.spec.n_slots]
         if not self._wait_state(slot, READY, timeout_s, hint_nbytes):
             raise TimeoutError(f"no message within {timeout_s}s")
@@ -314,6 +328,7 @@ class Ring:
         return SlotReader(self, slot)
 
     def drop_views(self) -> None:
+        """Release every buffer export so the arena can be closed."""
         for s in self._slots:
             s.drop_views()
         self._produced = None

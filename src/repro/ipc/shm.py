@@ -23,6 +23,7 @@ observes an odd sequence or the sequence changed across its read (torn read).
 """
 from __future__ import annotations
 
+import os
 import struct
 import time
 from multiprocessing import shared_memory
@@ -55,15 +56,18 @@ class SeqLock:
 
     @property
     def sequence(self) -> int:
+        """Current sequence value (odd = a write is in progress)."""
         return int(self._word[0])
 
     def write_begin(self) -> None:
+        """Make the sequence odd: readers retry until write_end."""
         seq = int(self._word[0])
         if seq % 2:
             raise RuntimeError("seqlock already held by a writer")
         self._word[0] = seq + 1           # odd: write in progress
 
     def write_end(self) -> None:
+        """Make the sequence even again: the payload is stable."""
         seq = int(self._word[0])
         if seq % 2 == 0:
             raise RuntimeError("seqlock write_end without write_begin")
@@ -81,6 +85,7 @@ class SeqLock:
             self._lock.write_end()
 
     def write(self) -> "SeqLock._WriteCtx":
+        """Context manager bracketing a payload write with begin/end."""
         return SeqLock._WriteCtx(self)
 
     def read(self, fn, max_retries: int = 1_000_000,
@@ -97,6 +102,109 @@ class SeqLock:
                 return out
             time.sleep(spin_sleep_s)      # torn: payload changed underneath
         raise TimeoutError("seqlock read retries exhausted")
+
+
+class ShmMutex:
+    """Cross-process mutex built on *exclusive* shm-segment creation.
+
+    ``shm_open(O_CREAT|O_EXCL)`` is the one atomic test-and-set the OS gives
+    us without extra dependencies: creating a named segment fails with
+    ``FileExistsError`` when it already exists.  Acquire = create the segment
+    (stamping owner pid + wall-clock time into it); release = unlink it.
+
+    Used by the listener's registration handshake, where multiple client
+    processes that share nothing but a name must take turns writing the
+    rendezvous mailbox (our rings are strictly SPSC).
+
+    A holder that dies without releasing would wedge everyone, so contenders
+    break locks older than ``stale_s``.  ``shm_unlink`` removes *by name*,
+    so a breaker re-reads the stamp from a freshly attached handle right
+    before unlinking and only proceeds if it still matches the stale stamp
+    it decided on — a segment some other breaker just re-created (fresh
+    stamp) is left alone.  A residual race remains (two breakers can pass
+    the re-check before either unlinks; POSIX shm has no compare-and-unlink)
+    but it needs a holder death *plus* two simultaneous breakers, and its
+    worst case is bounded: the registration mailbox writer raises (seqlock
+    write_begin refuses a second writer) or a registration times out and
+    can be retried — never silent corruption.
+    """
+
+    _STAMP_FMT = "<qd"          # owner pid, wall-clock acquire time
+
+    def __init__(self, name: str, stale_s: float = 30.0):
+        self.name = name
+        self.stale_s = stale_s
+        self._held: shared_memory.SharedMemory | None = None
+
+    def acquire(self, timeout_s: float = 10.0,
+                poll_s: float = 0.002) -> None:
+        """Take the lock, breaking stale holders; TimeoutError on contention."""
+        deadline = time.perf_counter() + timeout_s
+        while True:
+            try:
+                seg = shared_memory.SharedMemory(
+                    self.name, create=True,
+                    size=struct.calcsize(self._STAMP_FMT))
+                struct.pack_into(self._STAMP_FMT, seg.buf, 0,
+                                 os.getpid(), time.time())
+                self._held = seg
+                return
+            except FileExistsError:
+                self._break_if_stale()
+            if time.perf_counter() > deadline:
+                raise TimeoutError(f"lock {self.name!r} contended for "
+                                   f"{timeout_s}s")
+            time.sleep(poll_s)
+
+    def _read_stamp(self):
+        """(pid, acquire-time) from the current segment, or None if gone."""
+        try:
+            seg = shared_memory.SharedMemory(self.name, create=False)
+        except FileNotFoundError:
+            return None                 # holder released between our attempts
+        try:
+            return struct.unpack_from(self._STAMP_FMT, seg.buf, 0)
+        except struct.error:
+            return None
+        finally:
+            seg.close()
+
+    def _break_if_stale(self) -> None:
+        stamp = self._read_stamp()
+        if stamp is None or not stamp[1] or \
+                time.time() - stamp[1] <= self.stale_s:
+            return
+        # revalidate on a fresh handle right before unlinking: the name may
+        # now belong to a segment another breaker just re-created (unlink
+        # removes by NAME, not the inode we inspected)
+        try:
+            seg = shared_memory.SharedMemory(self.name, create=False)
+        except FileNotFoundError:
+            return
+        try:
+            if struct.unpack_from(self._STAMP_FMT, seg.buf, 0) == stamp:
+                seg.unlink()            # holder presumed dead
+        except (struct.error, FileNotFoundError):
+            pass
+        finally:
+            seg.close()
+
+    def release(self) -> None:
+        """Drop the lock (idempotent)."""
+        if self._held is not None:
+            held, self._held = self._held, None
+            held.close()
+            try:
+                held.unlink()
+            except FileNotFoundError:
+                pass
+
+    def __enter__(self):
+        self.acquire()
+        return self
+
+    def __exit__(self, *exc):
+        self.release()
 
 
 class SharedMemoryArena:
@@ -134,6 +242,7 @@ class SharedMemoryArena:
     # -- views ---------------------------------------------------------------
     @property
     def buf(self) -> memoryview:
+        """The raw mapped segment (header + control words + user region)."""
         return self._shm.buf
 
     @property
@@ -147,6 +256,7 @@ class SharedMemoryArena:
                              count=N_CONTROL_WORDS, offset=64)
 
     def seqlock(self, word_index: int) -> SeqLock:
+        """A :class:`SeqLock` over the given control word."""
         words = self.control_words()
         return SeqLock(words[word_index:word_index + 1])
 
@@ -167,6 +277,7 @@ class SharedMemoryArena:
 
     # -- lifecycle -----------------------------------------------------------
     def close(self) -> None:
+        """Unmap the segment from this process (unlink destroys it)."""
         if self._closed:
             return
         self._closed = True

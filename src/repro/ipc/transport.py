@@ -42,6 +42,8 @@ _RING_WORDS = {"c2s_data": (4, 5), "s2c_data": (6, 7),
 
 @dataclass(frozen=True)
 class TransportSpec:
+    """Geometry of one connection: slot counts/sizes for both ring kinds
+    (embedded in the arena descriptor so only the creator chooses it)."""
     data_slots: int = 4
     data_slot_bytes: int = 32 << 20
     data_meta_bytes: int = 4096
@@ -50,11 +52,13 @@ class TransportSpec:
 
     @property
     def data_ring(self) -> RingSpec:
+        """Ring geometry for the two data directions."""
         return RingSpec(self.data_slots, self.data_slot_bytes,
                         self.data_meta_bytes)
 
     @property
     def ctrl_ring(self) -> RingSpec:
+        """Ring geometry for the two control directions."""
         return RingSpec(self.ctrl_slots, self.ctrl_slot_bytes, 64)
 
     def layout(self) -> dict:
@@ -124,6 +128,7 @@ class ShmTransport:
                spec: TransportSpec = TransportSpec(),
                policy: Optional[OffloadPolicy] = None,
                latency: Optional[LatencyModel] = None) -> "ShmTransport":
+        """Allocate the arena, publish the geometry descriptor, raise READY."""
         name = name or _unique_name()
         layout = spec.layout()
         arena = SharedMemoryArena(name, size=layout["__total__"], create=True)
@@ -143,6 +148,7 @@ class ShmTransport:
     def attach(cls, name: str, policy: Optional[OffloadPolicy] = None,
                latency: Optional[LatencyModel] = None,
                timeout_s: float = 30.0) -> "ShmTransport":
+        """Open a peer's arena by name, reading geometry from its descriptor."""
         arena = attach_retry(name, timeout_s)
         words = arena.control_words()
         deadline = time.perf_counter() + timeout_s
@@ -165,21 +171,37 @@ class ShmTransport:
     # -- convenience ----------------------------------------------------------
     @property
     def name(self) -> str:
+        """Arena name — the address a peer attaches by."""
         return self.arena.name
 
+    @property
+    def peer_closed(self) -> bool:
+        """True once the other endpoint announced shutdown (its closed
+        flag is up); in-flight ring messages may still be drainable."""
+        if self._closed:
+            return True
+        word = (_W_ATTACHER_CLOSED if self.side == "creator"
+                else _W_CREATOR_CLOSED)
+        return int(self.arena.control_words()[word]) != 0
+
     def send(self, tree, header: Optional[dict] = None, **kw):
+        """Send a pytree on the data channel (mode semantics from policy)."""
         return self.data.send(tree, header, **kw)
 
     def recv(self, **kw):
+        """Receive ``(tree, header)`` — or a RecvLease with ``copy=False``."""
         return self.data.recv(**kw)
 
     def send_msg(self, obj, **kw) -> None:
+        """Send a small pickled command on the control channel."""
         self.ctrl.send_msg(obj, **kw)
 
     def recv_msg(self, **kw):
+        """Blocking receive of one control message."""
         return self.ctrl.recv_msg(**kw)
 
     def stats(self) -> dict:
+        """Channel- and ring-level counters for this endpoint."""
         return {
             "data": self.data.stats.snapshot(),
             "rings": {k: vars(r.stats) for k, r in self._rings.items()},
@@ -193,6 +215,7 @@ class ShmTransport:
             self._my_closed_word[0] = 1
 
     def close(self, unlink: Optional[bool] = None) -> None:
+        """Announce shutdown, drop all views, unmap (creator also unlinks)."""
         if self._closed:
             return
         self._closed = True

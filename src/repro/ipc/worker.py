@@ -16,6 +16,13 @@ Two roles:
   Listing 1 — sync blocks for the result, async/pipelined return a job id
   completed by hybrid polling (reusing :class:`QueryHandler`).
 
+- :class:`ServingFabric` is the multi-client generalization: a listener
+  accepts any number of clients, a reactor multiplexes their transports in
+  one thread, and pipelined requests from *different processes* are packed
+  into single dispatcher batches (cross-client batch formation), replies
+  demultiplexed by completion callback.  Clients reach it with
+  :meth:`RemoteDispatcherClient.connect`.
+
 Producer entry points are module-level functions (spawn-safe).
 """
 from __future__ import annotations
@@ -143,6 +150,7 @@ class ProducerHandle:
         return self.gen
 
     def stop(self, timeout_s: float = 10.0) -> None:
+        """Stop the producer (command, then closed-flag, then terminate)."""
         try:
             if self.process.is_alive():
                 self.transport.send_msg({"cmd": "stop"}, timeout_s=2.0)
@@ -225,19 +233,137 @@ class DispatcherServer:
             self._pool.submit(self._handle, header, tree)
 
     def serve_forever(self) -> None:
+        """Serve on the caller's thread until shutdown/close."""
         self._loop()
 
     def start(self) -> "DispatcherServer":
+        """Serve from a background daemon thread."""
         self._thread = threading.Thread(target=self._loop, daemon=True,
                                         name="rocket-ipc-serve")
         self._thread.start()
         return self
 
     def close(self) -> None:
+        """Stop the serve loop and drain the handler pool."""
         self._stop.set()
         if self._thread is not None:
             self._thread.join(timeout=5)
         self._pool.shutdown(wait=True)
+
+
+class ServingFabric:
+    """Multi-client serving: listener + reactor + one shared dispatcher.
+
+    The paper's server generalized from one queue pair to N (§IV-C at
+    fleet scale): a :class:`~repro.ipc.listener.Listener` accepts client
+    registrations and mints each one a dedicated transport; a
+    :class:`~repro.ipc.reactor.Reactor` multiplexes all of them in one
+    thread with round-robin fairness; and every drained request is fed to
+    *one* :class:`RequestDispatcher`, so pipelined requests arriving from
+    **different processes** inside the batching window are packed into a
+    single handler call (cross-client batch formation) and the results are
+    demultiplexed back to the right transports by completion callbacks.
+
+    Teardown order matters and is owned by :meth:`close` (one ``with``
+    block instead of a tuple of things to unwind): stop accepting, stop
+    the sweep, flag every client, close transports, then the dispatcher.
+    """
+
+    def __init__(self, dispatcher: RequestDispatcher,
+                 name: Optional[str] = None,
+                 spec: TransportSpec = TransportSpec(),
+                 policy: Optional[OffloadPolicy] = None,
+                 latency: Optional[LatencyModel] = None,
+                 max_clients: int = 64,
+                 max_drain_per_sweep: int = 8,
+                 max_inflight: int = 16,
+                 reply_timeout_s: float = 5.0,
+                 own_dispatcher: bool = False):
+        from repro.ipc.listener import Listener
+        from repro.ipc.reactor import Reactor
+
+        self.dispatcher = dispatcher
+        self.policy = policy or dispatcher.policy
+        self.reply_timeout_s = reply_timeout_s
+        self._own_dispatcher = own_dispatcher
+        self.reactor = Reactor(self.policy, on_message=self._on_message,
+                               max_drain_per_sweep=max_drain_per_sweep,
+                               max_inflight=max_inflight)
+        self.listener = Listener(name, spec, self.policy, latency,
+                                 max_clients=max_clients,
+                                 on_accept=self.reactor.add)
+        self._closed = False
+
+    @property
+    def name(self) -> str:
+        """The rendezvous name clients connect to."""
+        return self.listener.name
+
+    def _on_message(self, conn, tree, header: dict) -> None:
+        """Reactor thread: route one client request into the dispatcher."""
+        if header.get("shutdown"):
+            conn.done()     # settle accounting; reaped once its flag is seen
+            return
+        job_id = header.get("job_id", -1)
+        op, mode = header.get("op"), header.get("mode", "sync")
+
+        def reply(_jid: int, out) -> None:
+            if isinstance(out, Exception):
+                conn.reply({}, {"job_id": job_id,
+                                "error": f"{type(out).__name__}: {out}"},
+                           timeout_s=self.reply_timeout_s)
+            else:
+                conn.reply({"result": np.asarray(out)},
+                           {"job_id": job_id, "error": None},
+                           timeout_s=self.reply_timeout_s)
+
+        try:
+            self.dispatcher.submit(op, tree["data"], mode=mode,
+                                   on_complete=reply)
+        except Exception as e:
+            # malformed request (missing data, bad mode string, ...): tell
+            # the client instead of letting it time out.  reply() settles
+            # the connection accounting in its finally, so swallow any
+            # send failure here rather than re-settling in the reactor.
+            try:
+                reply(job_id, e)
+            except Exception:
+                pass
+
+    def start(self) -> "ServingFabric":
+        """Begin accepting and serving (both in daemon threads)."""
+        self.reactor.start()
+        self.listener.start()
+        return self
+
+    def stats(self) -> dict:
+        """Fabric-level counters: listener, reactor, per-client, dispatcher."""
+        return {
+            "accepted": self.listener.accepted,
+            "reactor": vars(self.reactor.stats),
+            "clients": {c.cid: {"received": c.received, "replied": c.replied,
+                                "inflight": c.inflight}
+                        for c in self.reactor.connections()},
+            "dispatcher": vars(self.dispatcher.stats),
+        }
+
+    def close(self) -> None:
+        """Tear down in dependency order; safe to call twice."""
+        if self._closed:
+            return
+        self._closed = True
+        self.listener.close()               # no new clients
+        for conn in self.reactor.connections():
+            conn.transport.announce_close()  # unblock client-side waits
+        self.reactor.close()                # stop sweeps, close transports
+        if self._own_dispatcher:
+            self.dispatcher.close()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
 
 
 class RemoteDispatcherClient:
@@ -245,15 +371,30 @@ class RemoteDispatcherClient:
 
     def __init__(self, transport: ShmTransport,
                  policy: Optional[OffloadPolicy] = None,
-                 latency: Optional[LatencyModel] = None):
+                 latency: Optional[LatencyModel] = None,
+                 own_transport: bool = False):
         self.transport = transport
         self.policy = policy or transport.policy
         self.latency = latency or transport.latency
         self.queries = QueryHandler(self.latency, self.policy)
+        self._own_transport = own_transport
         self._ids = iter(range(1, 1 << 62))
         self._lock = threading.Lock()
         self._recv_thread: Optional[threading.Thread] = None
         self._stop = threading.Event()
+
+    @classmethod
+    def connect(cls, listener_name: str,
+                policy: Optional[OffloadPolicy] = None,
+                latency: Optional[LatencyModel] = None,
+                timeout_s: float = 30.0) -> "RemoteDispatcherClient":
+        """Register with a :class:`ServingFabric` by rendezvous name and
+        return a ready client owning its dedicated transport."""
+        from repro.ipc.listener import connect as fabric_connect
+        transport = fabric_connect(listener_name, policy=policy,
+                                   latency=latency, timeout_s=timeout_s)
+        return cls(transport, policy=policy, latency=latency,
+                   own_transport=True)
 
     def _ensure_receiver(self) -> None:
         with self._lock:
@@ -277,6 +418,8 @@ class RemoteDispatcherClient:
 
     def request(self, op: str, data: np.ndarray,
                 mode: ExecutionMode | str | None = None):
+        """Paper Listing 1: sync returns the result, async/pipelined a
+        job id for :meth:`query`."""
         mode = ExecutionMode(mode) if mode is not None else self.policy.mode
         with self._lock:
             job_id = next(self._ids)
@@ -294,12 +437,16 @@ class RemoteDispatcherClient:
         return job_id
 
     def query(self, job_id: int, timeout: float = 60.0):
+        """Hybrid-polling wait for one job's result (raises server errors)."""
         out = self.queries.query(job_id, timeout)
         if isinstance(out, Exception):
             raise out
         return out
 
     def close(self) -> None:
+        """Stop the receiver, tell the server we're leaving, and (when the
+        client owns its transport, i.e. it came from :meth:`connect`) close
+        it — the server reaps the connection and unlinks the arena."""
         self._stop.set()
         if self._recv_thread is not None:
             self._recv_thread.join(timeout=5)
@@ -308,3 +455,11 @@ class RemoteDispatcherClient:
                                 mode="sync", timeout_s=2.0)
         except (TimeoutError, ChannelClosed, ValueError):
             pass
+        if self._own_transport:
+            self.transport.close()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()

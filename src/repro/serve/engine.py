@@ -96,21 +96,28 @@ class BatchedServer:
     # -- cross-process serving (repro.ipc) ---------------------------------------
     def serve_over_ipc(self, name: Optional[str] = None,
                        latency: Optional[LatencyModel] = None,
-                       data_slot_bytes: int = 8 << 20):
-        """Expose the dispatcher to clients in *other processes* over the
-        shared-memory transport.  Returns ``(server, transport)``; clients
-        attach with :class:`repro.ipc.RemoteDispatcherClient` by
-        ``transport.name`` and use the paper's request/query API.
+                       data_slot_bytes: int = 8 << 20,
+                       max_clients: int = 64):
+        """Expose the dispatcher to any number of client *processes* over
+        the multi-client shared-memory fabric.
+
+        Returns a started :class:`repro.ipc.ServingFabric` — use it as a
+        context manager (one ``with`` tears down listener, reactor,
+        per-client transports, and the dispatcher in order).  Clients join
+        with ``RemoteDispatcherClient.connect(fabric.name)`` and use the
+        paper's request/query API; pipelined requests from different
+        clients are batched into single model calls.
         """
-        from repro.ipc import DispatcherServer, ShmTransport
+        from repro.ipc import ServingFabric
         from repro.ipc.transport import TransportSpec
 
-        transport = ShmTransport.create(
-            name, TransportSpec(data_slot_bytes=data_slot_bytes),
-            policy=self.policy, latency=latency)
         dispatcher = self.make_dispatcher(latency)
-        server = DispatcherServer(dispatcher, transport).start()
-        return server, transport
+        fabric = ServingFabric(
+            dispatcher, name=name,
+            spec=TransportSpec(data_slot_bytes=data_slot_bytes),
+            policy=self.policy, latency=latency, max_clients=max_clients,
+            own_dispatcher=True)
+        return fabric.start()
 
     def _pack(self, prompts: list[np.ndarray]) -> dict:
         """Left-align prompts into a fixed (B, S) slab (persistent shape)."""

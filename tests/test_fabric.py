@@ -1,0 +1,335 @@
+"""Multi-client serving fabric: listener, reactor, cross-client batching.
+
+In-process tests drive the real shared-memory protocol with both endpoints
+mapped into one address space (identical memory semantics, deterministic
+scheduling); the spawn tests then put clients in real processes: gated
+concurrent submission so cross-client batch formation is provable, and a
+full BatchedServer round trip through ``serve_over_ipc``.
+"""
+import multiprocessing as mp
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.dispatcher import RequestDispatcher
+from repro.core.policy import OffloadPolicy
+from repro.ipc import (
+    Listener,
+    RemoteDispatcherClient,
+    ServingFabric,
+    ShmMutex,
+    TransportSpec,
+    connect,
+)
+
+TIGHT = OffloadPolicy(offload_threshold_bytes=1, poll_interval_us=50.0)
+SMALL = TransportSpec(data_slots=4, data_slot_bytes=1 << 20,
+                      ctrl_slots=4, ctrl_slot_bytes=4 << 10)
+
+
+def _echo_dispatcher(policy=TIGHT, **kw) -> RequestDispatcher:
+    d = RequestDispatcher(policy, **kw)
+    d.register_handler("double", lambda x: x * 2,
+                       batch_fn=lambda xs: [x * 2 for x in xs])
+    return d
+
+
+# ---------------------------------------------------------------------------
+# cross-process mutex (the registration lock primitive)
+# ---------------------------------------------------------------------------
+
+def test_shm_mutex_mutual_exclusion():
+    a = ShmMutex("rocket-test-mutex")
+    b = ShmMutex("rocket-test-mutex")
+    a.acquire(timeout_s=2)
+    try:
+        with pytest.raises(TimeoutError):
+            b.acquire(timeout_s=0.2)
+    finally:
+        a.release()
+    b.acquire(timeout_s=2)          # free again after release
+    b.release()
+    a.release()                     # idempotent
+
+
+def test_shm_mutex_breaks_stale_holder():
+    dead = ShmMutex("rocket-test-stale", stale_s=0.1)
+    dead.acquire(timeout_s=2)
+    dead._held.close()
+    dead._held = None               # holder "dies": segment left behind
+    time.sleep(0.15)
+    survivor = ShmMutex("rocket-test-stale", stale_s=0.1)
+    survivor.acquire(timeout_s=2)   # breaks the stale lock instead of hanging
+    survivor.release()
+
+
+# ---------------------------------------------------------------------------
+# dispatcher: submit/callback path + error containment
+# ---------------------------------------------------------------------------
+
+def test_dispatcher_submit_callbacks_all_modes():
+    with _echo_dispatcher() as d:
+        done = {}
+        ev = threading.Event()
+
+        def cb(jid, out):
+            done[jid] = out
+            if len(done) == 3:
+                ev.set()
+
+        jids = [d.submit("double", np.full((4,), i, np.float32),
+                         mode=m, on_complete=cb)
+                for i, m in enumerate(["sync", "async", "pipelined"])]
+        assert ev.wait(timeout=10)
+        for i, jid in enumerate(jids):
+            np.testing.assert_array_equal(done[jid],
+                                          np.full((4,), 2.0 * i, np.float32))
+
+
+def test_dispatcher_handler_error_contained():
+    with RequestDispatcher(TIGHT) as d:
+        d.register_handler("boom", lambda x: 1 / 0)
+        d.register_handler("ok", lambda x: x + 1)
+        jid = d.request("boom", np.zeros(2), mode="async")
+        with pytest.raises(ZeroDivisionError):
+            d.query(jid, timeout=10)
+        # the worker loop survived the handler failure
+        jid = d.request("ok", np.zeros(2), mode="async")
+        np.testing.assert_array_equal(d.query(jid, timeout=10), np.ones(2))
+        # the callback path carries the exception object
+        got = {}
+        ev = threading.Event()
+        d.submit("boom", np.zeros(2), mode="async",
+                 on_complete=lambda j, out: (got.update(out=out), ev.set()))
+        assert ev.wait(timeout=10)
+        assert isinstance(got["out"], ZeroDivisionError)
+
+
+def test_dispatcher_batch_length_mismatch_surfaces():
+    with RequestDispatcher(TIGHT, max_batch_wait_s=0.2) as d:
+        d.register_handler("bad", lambda x: x, batch_fn=lambda xs: xs[:-1])
+        jids = [d.request("bad", np.zeros(2), mode="pipelined")
+                for _ in range(3)]
+        # every request in the batch fails loudly (no silent zip truncation
+        # leaving the tail uncompleted until its query times out)
+        for j in jids:
+            with pytest.raises(RuntimeError, match="returned 2 results"):
+                d.query(j, timeout=10)
+
+
+# ---------------------------------------------------------------------------
+# listener: registration handshake, refusal, dead-listener connects
+# ---------------------------------------------------------------------------
+
+def test_listener_accept_and_refuse():
+    with Listener(spec=SMALL, policy=TIGHT, max_clients=1) as lsn:
+        got = []
+        lsn.on_accept = got.append
+        t = threading.Thread(
+            target=lambda: got.append(connect(lsn.name, policy=TIGHT)))
+        t.start()
+        deadline = time.perf_counter() + 10
+        while not lsn.pending() and time.perf_counter() < deadline:
+            time.sleep(0.001)
+        assert lsn.accept_once() is not None
+        t.join(timeout=10)
+        server_side, client_side = got
+        # the pair really is connected: ping across it
+        client_side.send({"x": np.arange(8)}, mode="sync")
+        tree, _ = server_side.recv(timeout_s=10)
+        np.testing.assert_array_equal(tree["x"], np.arange(8))
+
+        lsn.start()                     # accept loop for the refusal path
+        with pytest.raises(ConnectionError, match="full"):
+            connect(lsn.name, policy=TIGHT, timeout_s=10)
+        client_side.close()
+        server_side.close()
+    with pytest.raises((ConnectionError, TimeoutError, FileNotFoundError)):
+        connect(lsn.name, policy=TIGHT, timeout_s=0.5)
+
+
+# ---------------------------------------------------------------------------
+# reactor fairness + churn (in-process endpoints, real protocol)
+# ---------------------------------------------------------------------------
+
+def test_reactor_fairness_flood_does_not_starve():
+    d = RequestDispatcher(TIGHT)
+    d.register_handler("work", lambda x: (time.sleep(0.003), x * 2)[1])
+    with ServingFabric(d, spec=SMALL, policy=TIGHT, own_dispatcher=True,
+                       max_inflight=4).start() as fab:
+        flooder = RemoteDispatcherClient.connect(fab.name, policy=TIGHT)
+        slow = RemoteDispatcherClient.connect(fab.name, policy=TIGHT)
+        n_flood, flood_jids = 60, []
+
+        def flood():
+            for i in range(n_flood):
+                flood_jids.append(flooder.request(
+                    "work", np.full((64,), i, np.float32), mode="pipelined"))
+
+        t = threading.Thread(target=flood)
+        t.start()
+        time.sleep(0.03)                       # flood is well underway
+        t0 = time.perf_counter()
+        out = slow.request("work", np.ones((64,), np.float32), mode="sync")
+        slow_latency = time.perf_counter() - t0
+        np.testing.assert_array_equal(out, 2 * np.ones((64,), np.float32))
+        # round-robin + admission cap: the slow client was served while the
+        # flooder still had a backlog, not behind its entire queue
+        conns = {c.cid: c for c in fab.reactor.connections()}
+        assert conns[0].replied < n_flood, \
+            f"slow client waited out the whole flood ({slow_latency:.3f}s)"
+        t.join(timeout=30)
+        for j in flood_jids:
+            flooder.query(j, timeout=30)
+        assert fab.reactor.stats.throttled > 0    # admission cap engaged
+        flooder.close()
+        slow.close()
+
+
+def test_client_churn_reaps_connections_and_arenas():
+    from multiprocessing import shared_memory
+
+    d = _echo_dispatcher()
+    with ServingFabric(d, spec=SMALL, policy=TIGHT,
+                       own_dispatcher=True).start() as fab:
+        names = []
+        for i in range(3):                     # attach/detach, serially
+            c = RemoteDispatcherClient.connect(fab.name, policy=TIGHT)
+            names.append(c.transport.name)
+            out = c.request("double", np.full((16,), i, np.float32),
+                            mode="sync")
+            assert float(out[0]) == 2.0 * i
+            c.close()
+            deadline = time.perf_counter() + 10
+            while len(fab.reactor) and time.perf_counter() < deadline:
+                time.sleep(0.005)
+            assert len(fab.reactor) == 0       # reaped, not leaked
+        assert fab.listener.accepted == 3
+        assert fab.reactor.stats.disconnects == 3
+    for name in names:                         # arenas are unlinked
+        with pytest.raises(FileNotFoundError):
+            shared_memory.SharedMemory(name, create=False).close()
+
+
+# ---------------------------------------------------------------------------
+# cross-client batching across real processes
+# ---------------------------------------------------------------------------
+
+N_PER_CLIENT = 8
+
+
+def _batching_client_entry(name: str, marker: int) -> None:
+    client = RemoteDispatcherClient.connect(name, policy=TIGHT, timeout_s=60)
+    # gate: wait until the server says every client is connected, so the
+    # pipelined bursts below genuinely overlap across processes
+    while int(client.request("gate", np.zeros(1, np.float32),
+                             mode="sync")[0]) == 0:
+        time.sleep(0.002)
+    sent = [np.full((512,), marker * 100 + i, np.float32)
+            for i in range(N_PER_CLIENT)]
+    jids = [client.request("double", a, mode="pipelined") for a in sent]
+    for a, jid in zip(sent, jids):
+        out = client.query(jid, timeout=60)
+        assert out.tobytes() == (a * 2).tobytes()      # byte-identical, mine
+    client.close()
+
+
+def test_cross_client_batching_byte_identical():
+    gate = [0.0]
+    seen_batches: list[set] = []
+
+    def batch_double(xs):
+        seen_batches.append({int(x[0]) // 100 for x in xs})
+        time.sleep(0.002)
+        return [x * 2 for x in xs]
+
+    # max_batch must exceed one client's burst or its own requests fill
+    # every batch before the other client's can mix in
+    policy = OffloadPolicy(offload_threshold_bytes=1, poll_interval_us=50.0,
+                           max_batch=2 * N_PER_CLIENT)
+    # a wide window only bounds the *worst* case: the batch executes as soon
+    # as max_batch requests are in, so the wait stays short when both client
+    # bursts arrive promptly — but a loaded CI box gets 300ms of slack
+    d = RequestDispatcher(policy, max_batch_wait_s=0.3)
+    d.register_handler("gate", lambda x: np.float32(gate[0]) + x)
+    d.register_handler("double", lambda x: x * 2, batch_fn=batch_double)
+    with ServingFabric(d, spec=SMALL, policy=TIGHT,
+                       own_dispatcher=True).start() as fab:
+        ctx = mp.get_context("spawn")
+        procs = [ctx.Process(target=_batching_client_entry,
+                             args=(fab.name, m)) for m in (1, 2)]
+        for p in procs:
+            p.start()
+        deadline = time.perf_counter() + 120
+        while fab.listener.accepted < 2:
+            assert time.perf_counter() < deadline
+            time.sleep(0.01)
+        gate[0] = 1.0                          # release both clients at once
+        for p in procs:
+            p.join(timeout=120)
+            assert p.exitcode == 0
+        stats = fab.dispatcher.stats
+        assert stats.batched_requests >= 2 * N_PER_CLIENT
+        # requests from *different processes* were packed into one call
+        assert any(len(s) > 1 for s in seen_batches), seen_batches
+        assert stats.mean_batch > 1.0
+
+
+# ---------------------------------------------------------------------------
+# docs gate: repro.ipc docstring coverage cannot rot silently
+# ---------------------------------------------------------------------------
+
+def test_ipc_docstring_coverage_gate():
+    import subprocess
+    import sys
+    from pathlib import Path
+
+    root = Path(__file__).resolve().parent.parent
+    out = subprocess.run(
+        [sys.executable, str(root / "tools" / "check_docstrings.py"),
+         str(root / "src" / "repro" / "ipc"), "--fail-under", "95"],
+        capture_output=True, text=True, timeout=60)
+    assert out.returncode == 0, out.stdout + out.stderr
+
+
+# ---------------------------------------------------------------------------
+# serve_over_ipc: one with-block, real model, client in another process
+# ---------------------------------------------------------------------------
+
+def _serve_client_entry(name: str, vocab: int) -> None:
+    client = RemoteDispatcherClient.connect(
+        name, policy=OffloadPolicy(offload_threshold_bytes=1), timeout_s=60)
+    prompts = [np.arange(1, 6, dtype=np.int32) * (i + 1) % vocab
+               for i in range(3)]
+    jids = [client.request("generate", p, mode="pipelined") for p in prompts]
+    outs = [client.query(j, timeout=300) for j in jids]
+    assert all(o.shape == (4,) for o in outs)
+    client.close()
+
+
+@pytest.mark.slow
+def test_serve_over_ipc_context_manager(rng_key):
+    from repro.configs import get_smoke_config
+    from repro.models.registry import build_model
+    from repro.serve import BatchedServer, ServeConfig
+
+    cfg = get_smoke_config("qwen3-32b")
+    model = build_model(cfg)
+    params = model.init(rng_key)
+    srv = BatchedServer(model, params,
+                        ServeConfig(max_len=32, max_new_tokens=4),
+                        OffloadPolicy(max_batch=4))
+    with srv.serve_over_ipc(data_slot_bytes=1 << 20) as fabric:
+        proc = mp.get_context("spawn").Process(
+            target=_serve_client_entry, args=(fabric.name, cfg.vocab_size))
+        proc.start()
+        proc.join(timeout=300)
+        assert proc.exitcode == 0
+        assert srv.stats["requests"] == 3
+        name = fabric.name
+    # one with-block tore everything down: the rendezvous is gone
+    with pytest.raises((ConnectionError, TimeoutError, FileNotFoundError)):
+        connect(name, timeout_s=0.5)
+    srv.close()

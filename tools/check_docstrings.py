@@ -1,0 +1,107 @@
+"""Docstring-coverage gate: a stdlib `interrogate --fail-under` analogue.
+
+Walks a package directory with `ast` and counts docstrings on modules,
+classes, and public functions/methods.  Exempt (mirroring interrogate's
+``--ignore-init-method --ignore-nested-functions`` defaults we want):
+single-underscore and dunder names (``__init__`` included — construction is
+the class docstring's job), functions nested inside functions,
+``@property`` setters, and ``...`` overload stubs.  Exits nonzero when
+coverage falls below the threshold, listing every undocumented definition —
+so the IPC layer's documentation cannot rot silently in CI.
+
+Usage::
+
+    python tools/check_docstrings.py src/repro/ipc --fail-under 95
+"""
+from __future__ import annotations
+
+import argparse
+import ast
+import sys
+from pathlib import Path
+
+
+def _is_exempt(node: ast.AST) -> bool:
+    """Private names, non-init dunders, setters, and `...` stubs are skipped."""
+    if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef, ast.ClassDef)):
+        if node.name.startswith("_"):       # private and dunder (incl __init__)
+            return True
+    if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+        for deco in node.decorator_list:
+            if (isinstance(deco, ast.Attribute) and deco.attr == "setter"):
+                return True
+        body = node.body
+        if len(body) == 1 and isinstance(body[0], ast.Expr) and \
+                isinstance(body[0].value, ast.Constant) and \
+                body[0].value.value is Ellipsis:
+            return True
+    return False
+
+
+def scan_file(path: Path) -> tuple[list[str], list[str]]:
+    """Return (documented, undocumented) definition labels for one file."""
+    tree = ast.parse(path.read_text(), filename=str(path))
+    documented, missing = [], []
+
+    def visit(node: ast.AST, prefix: str) -> None:
+        kinds = (ast.Module, ast.ClassDef, ast.FunctionDef,
+                 ast.AsyncFunctionDef)
+        if isinstance(node, kinds):
+            if isinstance(node, ast.Module):
+                label = f"{path}:module"
+            else:
+                if _is_exempt(node):
+                    return
+                label = f"{path}:{prefix}{node.name}"
+            (documented if ast.get_docstring(node) else missing).append(label)
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                return                      # nested defs are implementation
+            child_prefix = ("" if isinstance(node, ast.Module)
+                            else f"{prefix}{node.name}.")
+            for child in node.body:
+                visit(child, child_prefix)
+
+    visit(tree, "")
+    return documented, missing
+
+
+def scan(root: Path) -> tuple[list[str], list[str]]:
+    """Scan every ``*.py`` under ``root`` (or just ``root`` if a file)."""
+    files = [root] if root.is_file() else sorted(root.rglob("*.py"))
+    documented, missing = [], []
+    for f in files:
+        d, m = scan_file(f)
+        documented += d
+        missing += m
+    return documented, missing
+
+
+def main(argv=None) -> int:
+    """CLI entry; returns the process exit code."""
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("paths", nargs="+", type=Path,
+                    help="package directories or files to scan")
+    ap.add_argument("--fail-under", type=float, default=95.0,
+                    help="minimum coverage percentage (default 95)")
+    args = ap.parse_args(argv)
+    documented, missing = [], []
+    for p in args.paths:
+        d, m = scan(p)
+        documented += d
+        missing += m
+    total = len(documented) + len(missing)
+    cov = 100.0 * len(documented) / total if total else 100.0
+    print(f"docstring coverage: {len(documented)}/{total} = {cov:.1f}% "
+          f"(fail-under {args.fail_under:g}%)")
+    if missing:
+        print("undocumented:")
+        for label in missing:
+            print(f"  {label}")
+    if cov < args.fail_under:
+        print("FAIL: coverage below threshold", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
