@@ -1,0 +1,222 @@
+"""Fig. 13 copy-path analogue: counted copies-per-request + zero-copy wins.
+
+Two measurements of the single-copy serving datapath, both against the
+same cross-client serving workload (k client processes streaming ≥1 MB
+pipelined requests at fixed depth into one fabric):
+
+- **copies per request** — read from the process-wide CopyEngine's tagged
+  counters (counted, not timed): the zero-copy reactor + batch-formation
+  gather should show exactly 1 payload memcpy per request server-side
+  (``gather``), where the copy-out baseline (``zero_copy_serving=False``,
+  the PR 2 datapath) pays ``recv_copy`` + ``gather`` = 2;
+- **throughput** — requests/s of the same sweep, zero-copy vs baseline
+  (expect ≥1.3x at 1 MB where the eliminated memcpy dominates), plus an
+  in-process microbench of the descriptor cache (steady-state sends skip
+  the per-message ``pickle.dumps`` of the tree descriptor).
+
+Run: ``PYTHONPATH=src python -m benchmarks.run --only fig13copy``
+"""
+from __future__ import annotations
+
+import multiprocessing as mp
+import threading
+import time
+import traceback
+from collections import deque
+
+import numpy as np
+
+
+def fmt_row(name: str, us: float, derived: str) -> str:
+    """Local copy of benchmarks.common.fmt_row: this module must stay
+    jax-free so the measurement server process (a spawn child importing
+    only this module) never pays jax's thread pools — a loaded jax in
+    the serving process measurably skews the 2-thread copy pipeline."""
+    return f"{name},{us:.1f},{derived}"
+
+CLIENTS = 2
+N_PER_CLIENT = 12
+CLIENT_DEPTH = 6                 # flood-ish: keep the server saturated so
+                                 # throughput reflects server copy work, not
+                                 # client round-trip pacing
+ROW_ELEMS = 1 << 20              # 4 MB float32 request payload (≥1MB)
+REPLY_ELEMS = 8                  # tiny reply: the request path is under test
+REPEATS = 3                      # best-of per mode: CI boxes are noisy
+_POLL_US = {"server": 100.0, "client": 500.0}
+
+
+def _client_entry(name: str, n: int, out_q) -> None:
+    """One client process: gate, then stream depth-bounded 1MB requests."""
+    from repro.core.policy import OffloadPolicy
+    from repro.ipc import RemoteDispatcherClient
+
+    # inline sync copies into the ring: the fastest client send path, so
+    # the measured delta is the *server-side* copy work under test
+    policy = OffloadPolicy(poll_interval_us=_POLL_US["client"],
+                           offload_threshold_bytes=1 << 60)
+    client = RemoteDispatcherClient.connect(name, policy=policy, timeout_s=60)
+    while int(client.request("gate", np.zeros(1, np.float32),
+                             mode="sync")[0]) == 0:
+        time.sleep(0.002)
+    row = np.arange(ROW_ELEMS, dtype=np.float32)
+    t0 = time.time()
+    outstanding: deque = deque()
+    for _ in range(n):
+        outstanding.append(client.request("fold", row, mode="pipelined"))
+        if len(outstanding) >= CLIENT_DEPTH:
+            client.query(outstanding.popleft(), timeout=60)
+    while outstanding:
+        client.query(outstanding.popleft(), timeout=60)
+    out_q.put((t0, time.time()))
+    client.close()
+
+
+def _serve(zero_copy: bool):
+    """One sweep point; returns (wall_s, tag_deltas, mean_batch)."""
+    from repro.core.copyengine import get_engine
+    from repro.core.dispatcher import RequestDispatcher
+    from repro.core.policy import OffloadPolicy
+    from repro.ipc import ServingFabric, TransportSpec
+
+    gate = [0.0]
+
+    def fold_slab(slab: np.ndarray, shapes):
+        # consume the gathered batch buffer without copying the payload
+        return [np.array(slab[i, :REPLY_ELEMS])
+                for i in range(len(shapes))]
+
+    policy = OffloadPolicy(offload_threshold_bytes=1,
+                           max_batch=8,
+                           poll_interval_us=_POLL_US["server"],
+                           zero_copy_serving=zero_copy)
+    dispatcher = RequestDispatcher(policy, max_batch_wait_s=0.002)
+    dispatcher.register_handler("gate", lambda x: np.float32(gate[0]) + x)
+    dispatcher.register_handler("fold",
+                                lambda x: np.array(x[:REPLY_ELEMS]),
+                                slab_fn=fold_slab)
+    spec = TransportSpec(data_slots=12, data_slot_bytes=(ROW_ELEMS * 4) + (1 << 16),
+                         ctrl_slots=4, ctrl_slot_bytes=16 << 10)
+    eng = get_engine()
+    before = eng.tagged_snapshot()
+    ctx = mp.get_context("spawn")
+    out_q = ctx.Queue()
+    with ServingFabric(dispatcher, spec=spec, policy=policy,
+                       own_dispatcher=True).start() as fabric:
+        procs = [ctx.Process(target=_client_entry,
+                             args=(fabric.name, N_PER_CLIENT, out_q),
+                             daemon=True)
+                 for _ in range(CLIENTS)]
+        for p in procs:
+            p.start()
+        while fabric.listener.accepted < CLIENTS:
+            time.sleep(0.005)
+        gate[0] = 1.0
+        spans = [out_q.get(timeout=180) for _ in procs]
+        for p in procs:
+            p.join(timeout=60)
+        mean_batch = fabric.dispatcher.stats.mean_batch
+    after = eng.tagged_snapshot()
+    deltas = {k: after["copies"].get(k, 0) - before["copies"].get(k, 0)
+              for k in set(after["copies"]) | set(before["copies"])}
+    dbytes = {k: after["bytes"].get(k, 0) - before["bytes"].get(k, 0)
+              for k in set(after["bytes"]) | set(before["bytes"])}
+    wall = max(t1 for _, t1 in spans) - min(t0 for t0, _ in spans)
+    return wall, deltas, dbytes, mean_batch
+
+
+def _bench_descr_cache(enabled: bool, n_msgs: int = 200) -> float:
+    """In-process channel pair: µs/message for a 32-leaf tree with the
+    structure-keyed descriptor cache on vs off."""
+    from repro.core.policy import OffloadPolicy
+    from repro.ipc import ShmTransport, TransportSpec
+
+    policy = OffloadPolicy()                     # sync sends (inline copy)
+    spec = TransportSpec(data_slots=8, data_slot_bytes=1 << 20,
+                         data_meta_bytes=16 << 10,
+                         ctrl_slots=4, ctrl_slot_bytes=4 << 10)
+    a = ShmTransport.create(spec=spec, policy=policy)
+    b = ShmTransport.attach(a.name, policy=policy)
+    if not enabled:                              # benchmark-only A/B poke
+        for ch in (a.data, b.data):
+            ch._cache_enabled = False
+            ch._tx_descr_cache.clear()
+            ch._rx_descr_cache.clear()
+    tree = {f"leaf{i:02d}": np.ones(512, np.float32) for i in range(32)}
+    stop = threading.Event()
+
+    def consume():
+        while not stop.is_set():
+            item = b.data.try_recv(copy=False)
+            if item is None:
+                time.sleep(0)
+                continue
+            item.release()
+
+    t = threading.Thread(target=consume, daemon=True)
+    t.start()
+    for _ in range(10):                          # warmup
+        a.send(tree, mode="sync")
+    t0 = time.perf_counter()
+    for _ in range(n_msgs):
+        a.send(tree, mode="sync")
+    dt = time.perf_counter() - t0
+    a.data.flush()
+    time.sleep(0.05)                             # let the consumer drain
+    stop.set()
+    t.join(timeout=5)
+    b.close()
+    a.close()
+    return dt / n_msgs * 1e6
+
+
+def _measure_entry(out_q) -> None:
+    """Spawn-child main: run the whole serving sweep in a process that has
+    imported nothing but numpy + repro (in particular: no jax from the
+    harness), so the measured 2-thread copy pipeline is clean."""
+    try:
+        _serve(True)                       # warmup: page cache, spawn tails
+        best: dict = {}
+        for _ in range(REPEATS):           # alternate modes, best-of each:
+            for zero_copy in (True, False):   # scheduling noise on small
+                run_out = _serve(zero_copy)   # CI boxes swamps any one run
+                if zero_copy not in best or run_out[0] < best[zero_copy][0]:
+                    best[zero_copy] = run_out
+        cache_us = {on: min(_bench_descr_cache(on) for _ in range(REPEATS))
+                    for on in (True, False)}
+        out_q.put(("ok", (best, cache_us)))
+    except BaseException:
+        out_q.put(("err", traceback.format_exc()))
+
+
+def run():
+    """Yield CSV rows: per-mode copies/req + req/s, then the speedups."""
+    total = CLIENTS * N_PER_CLIENT
+    ctx = mp.get_context("spawn")
+    out_q = ctx.Queue()
+    # not daemonic: the measurement server spawns its own client processes
+    proc = ctx.Process(target=_measure_entry, args=(out_q,))
+    proc.start()
+    status, payload = out_q.get(timeout=600)
+    proc.join(timeout=60)
+    if status != "ok":
+        raise RuntimeError(f"fig13copy measurement child failed:\n{payload}")
+    best, cache_us = payload
+    rps = {}
+    for zero_copy, tag in ((True, "zerocopy"), (False, "baseline")):
+        wall, copies, dbytes, mean_batch = best[zero_copy]
+        server_copies = copies.get("gather", 0) + copies.get("recv_copy", 0)
+        server_mb = (dbytes.get("gather", 0)
+                     + dbytes.get("recv_copy", 0)) / (1 << 20)
+        rps[tag] = total / wall
+        yield fmt_row(
+            f"fig13copy/{tag}", wall / total * 1e6,
+            f"{rps[tag]:.0f}req/s;"
+            f"copies/req={server_copies / total:.2f};"
+            f"MBcopied/req={server_mb / total:.2f};"
+            f"batch{mean_batch:.1f}")
+    yield fmt_row("fig13copy/zerocopy_speedup", 0.0,
+                  f"{rps['zerocopy'] / rps['baseline']:.2f}x")
+    yield fmt_row("fig13copy/descr_cache_on", cache_us[True], "32-leaf tree")
+    yield fmt_row("fig13copy/descr_cache_off", cache_us[False], "32-leaf tree")
+    yield fmt_row("fig13copy/descr_cache_speedup", 0.0,
+                  f"{cache_us[False] / cache_us[True]:.2f}x")

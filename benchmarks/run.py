@@ -2,11 +2,21 @@
 
 Prints ``name,us_per_call,derived`` CSV rows.  Usage:
   PYTHONPATH=src python -m benchmarks.run [--only fig10]
+  PYTHONPATH=src python -m benchmarks.run --only fig2,fig13copy,fig14 \\
+      --record BENCH_IPC.json     # machine-readable perf snapshot
+
+``--record`` writes every produced row plus host metadata to a JSON file
+(the CI uploads it as an artifact), seeding a benchmark trajectory that
+later PRs can diff against.
 """
 from __future__ import annotations
 
 import argparse
+import json
+import os
+import platform
 import sys
+import time
 import traceback
 
 from benchmarks import (
@@ -20,6 +30,7 @@ from benchmarks import (
     fig11_batch_sweep,
     fig12_decomposition,
     fig13_instruction_counts,
+    fig13_copy_path,
     fig14_multiclient,
     table1_workload_bytes,
 )
@@ -36,17 +47,50 @@ MODULES = {
     "fig11": fig11_batch_sweep,
     "fig12": fig12_decomposition,
     "fig13": fig13_instruction_counts,
+    "fig13copy": fig13_copy_path,
     "fig14": fig14_multiclient,
 }
+
+
+def _record(path: str, rows: list[str], failures: list[str]) -> None:
+    """Write the collected rows as a machine-readable snapshot."""
+    parsed = []
+    for row in rows:
+        name, us, derived = (row.split(",", 2) + ["", ""])[:3]
+        try:
+            us_val = float(us)
+        except ValueError:
+            us_val = None
+        parsed.append({"bench": name, "us_per_call": us_val,
+                       "derived": derived})
+    snapshot = {
+        "schema": 1,
+        "created_unix": int(time.time()),
+        "host": {
+            "platform": platform.platform(),
+            "machine": platform.machine(),
+            "python": platform.python_version(),
+            "cpus": os.cpu_count(),
+        },
+        "rows": parsed,
+        "failures": failures,
+    }
+    with open(path, "w") as f:
+        json.dump(snapshot, f, indent=2)
+        f.write("\n")
+    print(f"# recorded {len(parsed)} rows -> {path}", file=sys.stderr)
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    help="comma-separated subset, e.g. fig10,fig13")
+                    help="comma-separated subset, e.g. fig10,fig13copy")
     ap.add_argument("--dry-run", action="store_true",
                     help="import and list the selected modules, run nothing "
                          "(CI smoke: catches import/registration breakage)")
+    ap.add_argument("--record", metavar="PATH", default=None,
+                    help="also write the rows as a JSON perf snapshot "
+                         "(e.g. BENCH_IPC.json; uploaded as a CI artifact)")
     args = ap.parse_args()
     names = args.only.split(",") if args.only else list(MODULES)
     unknown = [n for n in names if n not in MODULES]
@@ -60,15 +104,19 @@ def main() -> None:
             print(f"{name},DRY,{mod.__name__}")
         return
     print("name,us_per_call,derived")
-    failures = 0
+    collected: list[str] = []
+    failures: list[str] = []
     for name in names:
         try:
             for row in MODULES[name].run():
                 print(row, flush=True)
+                collected.append(row)
         except Exception:
-            failures += 1
+            failures.append(name)
             print(f"{name},ERROR,", flush=True)
             traceback.print_exc(file=sys.stderr)
+    if args.record:
+        _record(args.record, collected, failures)
     if failures:
         raise SystemExit(1)
 

@@ -2,6 +2,8 @@
 
 - :mod:`repro.core.policy`    — execution modes / offload control / injection
 - :mod:`repro.core.latency`   — size-aware latency model + calibration
+- :mod:`repro.core.copyengine`— process-wide software-DSA copy engine
+  (SG descriptors, work queues, batched doorbells, completion records)
 - :mod:`repro.core.engine`    — tier-1 async transfer engine (host→device)
 - :mod:`repro.core.queuepair` — persistent buffer pools / queue pairs
 - :mod:`repro.core.dispatcher`— serving request dispatcher / query handler
@@ -16,13 +18,23 @@ from repro.core.policy import (
     SYNC_OFFLOAD,
 )
 from repro.core.latency import LatencyModel, calibrate
+from repro.core.copyengine import (
+    CopyEngine,
+    CopyJob,
+    Descriptor,
+    HybridPollStats,
+    SGList,
+    get_engine,
+    set_engine,
+)
 from repro.core.engine import AsyncTransferEngine, EngineStats, TransferJob
 from repro.core.queuepair import BufferPool, QueuePair
 from repro.core.dispatcher import QueryHandler, RequestDispatcher
 
 __all__ = [
-    "ASYNC_OFFLOAD", "AsyncTransferEngine", "BufferPool", "Device",
-    "EngineStats", "ExecutionMode", "LatencyModel", "OffloadPolicy",
-    "PIPELINED_OFFLOAD", "QueryHandler", "QueuePair", "RequestDispatcher",
-    "SYNC_INLINE", "SYNC_OFFLOAD", "TransferJob", "calibrate",
+    "ASYNC_OFFLOAD", "AsyncTransferEngine", "BufferPool", "CopyEngine",
+    "CopyJob", "Descriptor", "Device", "EngineStats", "ExecutionMode",
+    "HybridPollStats", "LatencyModel", "OffloadPolicy", "PIPELINED_OFFLOAD",
+    "QueryHandler", "QueuePair", "RequestDispatcher", "SGList", "SYNC_INLINE",
+    "SYNC_OFFLOAD", "TransferJob", "calibrate", "get_engine", "set_engine",
 ]

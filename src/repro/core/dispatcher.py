@@ -9,6 +9,18 @@ Mirrors the paper's server architecture (Fig. 7 / Listing 1):
   request batching, §IV-C) before the handler runs;
 - a :class:`QueryHandler` tracks completions; ``query(job_id)`` applies the
   hybrid polling strategy (size-aware deferral + short passive waits).
+
+**Zero-copy batch formation** (the single-copy serving datapath): a request
+may arrive carrying a :class:`~repro.ipc.channel.RecvLease` — its ``data``
+is then a numpy view straight into the client's shared-memory ring slot.
+During batch formation the dispatcher *gathers* those views into a pooled
+batch buffer (one scatter-gather descriptor per batch on the process-wide
+:class:`~repro.core.copyengine.CopyEngine` — the only server-side payload
+memcpy per request) and releases every lease immediately after the gather,
+before the handler runs, so ring slots recycle at copy speed rather than
+model speed.  Handlers registered with ``slab_fn`` receive the pooled
+batch buffer directly (no second per-row packing copy); plain ``batch_fn``
+handlers receive row views into it.
 """
 from __future__ import annotations
 
@@ -17,12 +29,14 @@ import queue
 import threading
 import time
 from dataclasses import dataclass, field
-from typing import Any, Callable, Optional
+from typing import Any, Callable, Optional, Sequence
 
 import numpy as np
 
+from repro.core.copyengine import SGList, get_engine
 from repro.core.latency import LatencyModel
 from repro.core.policy import ExecutionMode, OffloadPolicy
+from repro.core.queuepair import BufferPool
 
 
 @dataclass
@@ -38,6 +52,22 @@ class Request:
     # result in the QueryHandler — the IPC fabric uses this to demultiplex
     # batched results back to the right client transport.
     callback: Optional[Callable[[int, Any], None]] = None
+    # zero-copy serving: the ring-slot lease backing ``data``.  The
+    # dispatcher owns its release: after the batch gather (pipelined), or
+    # after completion for solo execution.  Anything with a ``release()``
+    # and a ``held`` attribute qualifies (tests pass stubs).
+    lease: Optional[Any] = None
+
+    def _release_lease(self) -> None:
+        if self.lease is not None:
+            lease, self.lease = self.lease, None
+            try:
+                lease.release()
+            except Exception:
+                # the client's transport may already be reaped (client died
+                # mid-batch): a stale lease has nothing left to recycle, and
+                # a release failure must never kill the serving worker loop
+                pass
 
 
 @dataclass
@@ -55,6 +85,9 @@ class DispatcherStats:
     queries: int = 0
     query_polls: int = 0
     mean_batch: float = 0.0
+    gathers: int = 0             # batch-formation gathers (SG submissions)
+    gathered_requests: int = 0   # requests copied slot → batch buffer
+    slab_batches: int = 0        # batches handed to a slab_fn handler
 
 
 class QueryHandler:
@@ -119,6 +152,8 @@ class RequestDispatcher:
         self.stats = DispatcherStats()
         self._handlers: dict[str, Callable] = {}
         self._batch_handlers: dict[str, Callable] = {}
+        self._slab_handlers: dict[str, Callable] = {}
+        self._pool = BufferPool(max_per_key=4)   # pooled batch buffers
         self._q: "queue.Queue[Optional[Request]]" = queue.Queue()
         self._ids = itertools.count()
         self._max_wait = max_batch_wait_s
@@ -128,11 +163,18 @@ class RequestDispatcher:
 
     # -- handler registration (paper: workload-specific handlers) ------------
     def register_handler(self, op: str, fn: Callable,
-                         batch_fn: Optional[Callable] = None) -> None:
-        """``fn(data) -> result``; optional ``batch_fn(list[data]) -> list``."""
+                         batch_fn: Optional[Callable] = None,
+                         slab_fn: Optional[Callable] = None) -> None:
+        """``fn(data) -> result``; optional ``batch_fn(list[data]) -> list``;
+        optional ``slab_fn(slab, shapes) -> list`` receiving the pooled
+        gather buffer directly — ``slab[i]``'s leading ``shapes[i]`` region
+        holds request *i*'s payload (zero-padded to the batch max), so the
+        handler consumes the batch with **no additional packing copy**."""
         self._handlers[op] = fn
         if batch_fn is not None:
             self._batch_handlers[op] = batch_fn
+        if slab_fn is not None:
+            self._slab_handlers[op] = slab_fn
 
     # -- client API (paper Listing 1) -----------------------------------------
     def request(self, op: str, data: Any,
@@ -150,8 +192,8 @@ class RequestDispatcher:
 
     def submit(self, op: str, data: Any,
                mode: ExecutionMode | str | None = None,
-               on_complete: Optional[Callable[[int, Any], None]] = None
-               ) -> int:
+               on_complete: Optional[Callable[[int, Any], None]] = None,
+               lease: Optional[Any] = None) -> int:
         """Enqueue a request without ever blocking the caller.
 
         Unlike :meth:`request`, sync mode is *not* executed inline: every
@@ -161,12 +203,16 @@ class RequestDispatcher:
         ``on_complete`` is given it fires from the worker thread with
         ``(job_id, result_or_exception)`` and the result bypasses the
         QueryHandler; otherwise fetch it with :meth:`query`.
+
+        ``lease`` is the zero-copy ring-slot lease backing ``data`` (views
+        into shared memory); the dispatcher releases it after batch gather
+        or solo completion — never before the payload has been consumed.
         """
         mode = ExecutionMode(mode) if mode is not None else self.policy.mode
         req = Request(next(self._ids), op, data, mode,
                       nbytes=int(np.asarray(data).nbytes)
                       if isinstance(data, np.ndarray) else 0,
-                      callback=on_complete)
+                      callback=on_complete, lease=lease)
         self.stats.requests += 1
         if on_complete is None:
             self.queries.register(req)
@@ -212,6 +258,47 @@ class RequestDispatcher:
             else:
                 self._execute([req])
 
+    # -- batch formation: slot views → pooled batch buffer ---------------------
+    def _gatherable(self, batch: list[Request]) -> bool:
+        datas = [r.data for r in batch]
+        return (all(isinstance(d, np.ndarray) and d.ndim >= 1 for d in datas)
+                and len({d.dtype for d in datas}) == 1
+                and len({d.ndim for d in datas}) == 1)
+
+    def _gather(self, batch: list[Request]):
+        """One SG gather per batch: copy every request's payload view into
+        a pooled slab (THE server-side payload memcpy), zero the padding,
+        then release every lease — the slots recycle before the handler
+        runs.  Returns ``(slab, shapes, rows)``."""
+        datas = [r.data for r in batch]
+        ndim = datas[0].ndim
+        maxdims = tuple(max(d.shape[k] for d in datas) for k in range(ndim))
+        slab = self._pool.acquire((len(batch),) + maxdims, datas[0].dtype)
+        sg = SGList()
+        rows = []
+        for i, d in enumerate(datas):
+            if d.shape != maxdims:
+                slab[i].fill(0)          # pad region (memset, not a copy)
+            dst = slab[i][tuple(slice(0, s) for s in d.shape)]
+            sg.add_array(d, dst)
+            rows.append(dst)
+        get_engine().run_sg(sg, injection=self.policy.injection_enabled(),
+                            tag="gather")
+        self.stats.gathers += 1
+        self.stats.gathered_requests += len(batch)
+        for r in batch:
+            r._release_lease()           # released right after the gather
+        return slab, [d.shape for d in datas], rows
+
+    def _recycle_slab(self, slab: np.ndarray, results: Sequence) -> None:
+        # a handler may legally return views into the slab (echo-style);
+        # recycling it would let the next batch overwrite live results, so
+        # only pooled-reuse when nothing aliases it
+        for out in results:
+            if isinstance(out, np.ndarray) and np.may_share_memory(out, slab):
+                return
+        self._pool.release(slab)
+
     def _execute(self, batch: list[Request]) -> None:
         if not batch:
             return
@@ -219,29 +306,67 @@ class RequestDispatcher:
         self.stats.batches += 1
         self.stats.batched_requests += len(batch)
         self.stats.mean_batch = self.stats.batched_requests / self.stats.batches
+        sfn = self._slab_handlers.get(op)
         bfn = self._batch_handlers.get(op)
+        leased = any(r.lease is not None for r in batch)
+        pipelined = batch[0].mode == ExecutionMode.PIPELINED
+        slab = None
         # errors are contained per request: a failing handler completes its
         # job(s) with the exception instead of killing the worker loop
-        if bfn is not None and len(batch) > 1:
-            try:
-                results = bfn([r.data for r in batch])
-                if len(results) != len(batch):
-                    # surface the handler bug now — zip truncation would
-                    # leave the tail requests uncompleted forever
-                    raise RuntimeError(
-                        f"batch handler for {op!r} returned {len(results)} "
-                        f"results for {len(batch)} requests")
-            except Exception as e:
-                results = [e] * len(batch)
-        else:
-            results = []
-            for r in batch:
+        try:
+            if (pipelined and (sfn is not None or bfn is not None)
+                    and (leased or sfn is not None)
+                    and self._gatherable(batch)):
                 try:
-                    results.append(self._handlers[op](r.data))
+                    slab, shapes, rows = self._gather(batch)
+                    if sfn is not None:
+                        self.stats.slab_batches += 1
+                        results = sfn(slab, shapes)
+                    else:
+                        results = bfn(rows)
+                    if len(results) != len(batch):
+                        # surface the handler bug now — zip truncation would
+                        # leave the tail requests uncompleted forever
+                        raise RuntimeError(
+                            f"batch handler for {op!r} returned "
+                            f"{len(results)} results for {len(batch)} "
+                            f"requests")
                 except Exception as e:
-                    results.append(e)
-        for r, out in zip(batch, results):
-            self._complete(r, out)
+                    results = [e] * len(batch)
+            elif bfn is not None and len(batch) > 1:
+                try:
+                    results = bfn([r.data for r in batch])
+                    if len(results) != len(batch):
+                        raise RuntimeError(
+                            f"batch handler for {op!r} returned "
+                            f"{len(results)} results for {len(batch)} "
+                            f"requests")
+                except Exception as e:
+                    results = [e] * len(batch)
+            else:
+                results = []
+                for r in batch:
+                    try:
+                        results.append(self._handlers[op](r.data))
+                    except Exception as e:
+                        results.append(e)
+            for r, out in zip(batch, results):
+                # a query-path result computed from a still-leased view (or
+                # the recyclable slab) must not alias memory about to be
+                # reused — copy it out before the lease/slab goes away
+                if (r.callback is None and isinstance(out, np.ndarray)
+                        and r.lease is not None and isinstance(r.data,
+                                                               np.ndarray)
+                        and np.may_share_memory(out, r.data)):
+                    out = np.array(out)
+                self._complete(r, out)
+        finally:
+            # solo/fallback paths executed on the leased views directly:
+            # release only now, after replies/results are materialized
+            for r in batch:
+                r._release_lease()
+            if slab is not None:
+                self._recycle_slab(slab, results)
 
     def _complete(self, req: Request, out: Any) -> None:
         if req.callback is not None:

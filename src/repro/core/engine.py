@@ -5,11 +5,14 @@ onto the host side of a JAX program:
 
 - *submission*   = handing a host batch to the engine (returns a job id
   immediately in async/pipelined modes — ENQCMD analogue);
-- *the engine*   = a dedicated transfer thread pool performing staging-copy +
-  ``jax.device_put`` off the critical path (the CPU cycles the paper frees);
+- *the engine*   = the process-wide :class:`~repro.core.copyengine.CopyEngine`
+  performing staging-copy (one scatter-gather descriptor per pytree) +
+  ``jax.device_put`` off the critical path — the same engine every IPC
+  channel submits to, so one runtime coordinates all movement;
 - *completion*   = hybrid polling (§IV-C): size-aware deferral (sleep
   0.95·L_predicted) followed by short-interval passive waits (the UMWAIT
-  quantum analogue);
+  quantum analogue), implemented once in
+  :class:`~repro.core.copyengine.CopyJob`;
 - *queue pairs*  = persistent staging buffers from :mod:`repro.core.queuepair`.
 
 Instrumented (submissions, polls, wait time, overlap) so the benchmark
@@ -17,18 +20,24 @@ harness can reproduce the paper's Figs. 3/10/12/13 counters.
 """
 from __future__ import annotations
 
-import itertools
 import threading
 import time
-from concurrent.futures import Future, ThreadPoolExecutor
-from concurrent.futures import TimeoutError as FuturesTimeout
-from dataclasses import dataclass, field
+from collections import deque
+from dataclasses import dataclass
 from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.copyengine import (
+    CopyEngine,
+    CopyJob,
+    Descriptor,
+    HybridPollStats,
+    SGList,
+    get_engine,
+)
 from repro.core.latency import LatencyModel
 from repro.core.policy import Device, ExecutionMode, OffloadPolicy
 from repro.core.queuepair import BufferPool, drain_to_depth
@@ -40,73 +49,52 @@ def _nbytes(tree) -> int:
 
 
 @dataclass
-class EngineStats:
+class EngineStats(HybridPollStats):
+    """Tier-1 counters: the shared hybrid-polling fields plus submission
+    and byte totals."""
     submitted: int = 0
-    inline: int = 0                  # below-threshold transfers kept on CPU path
-    offloaded: int = 0
-    polls: int = 0                   # completion-flag checks after deferral
-    deferred_sleep_s: float = 0.0    # predicted-latency sleeps (hidden time)
-    blocked_wait_s: float = 0.0      # residual synchronous waiting
     bytes_moved: int = 0
-
-    def snapshot(self) -> dict:
-        return dict(self.__dict__)
 
 
 class TransferJob:
-    """Completion handle (the paper's completion flag + job id)."""
-
-    _ids = itertools.count()
+    """Completion handle (the paper's completion flag + job id), backed by
+    a copy-engine :class:`~repro.core.copyengine.CopyJob` when offloaded."""
 
     def __init__(self, nbytes: int, engine: "AsyncTransferEngine",
-                 future: Optional[Future] = None, value: Any = None):
-        self.job_id = next(self._ids)
+                 job: Optional[CopyJob] = None, value: Any = None):
         self.nbytes = nbytes
         self.submit_t = time.perf_counter()
-        self._future = future
+        self._job = job
         self._value = value
-        self._engine = engine
+        self.job_id = job.job_id if job is not None else -1
 
     def done(self) -> bool:
-        return self._future is None or self._future.done()
+        """True once the transfer's completion record is posted."""
+        return self._job is None or self._job.done()
 
-    def get(self) -> Any:
-        """Hybrid-polling completion (deferral + short-interval waits)."""
-        if self._future is None:
-            return self._value
-        eng = self._engine
-        if not self._future.done():
-            # size-aware deferral: sleep the *remaining* predicted latency
-            pred = eng.latency.defer_seconds(self.nbytes, eng.policy.defer_fraction)
-            elapsed = time.perf_counter() - self.submit_t
-            remain = pred - elapsed
-            if remain > 0:
-                time.sleep(remain)
-                eng.stats.deferred_sleep_s += remain
-            quantum = eng.policy.poll_interval_us * 1e-6
-            t0 = time.perf_counter()
-            while not self._future.done():      # passive short waits (UMWAIT)
-                eng.stats.polls += 1
-                try:
-                    self._value = self._future.result(timeout=quantum)
-                    self._future = None
-                    eng.stats.blocked_wait_s += time.perf_counter() - t0
-                    return self._value
-                except (TimeoutError, FuturesTimeout):
-                    continue
-            eng.stats.blocked_wait_s += time.perf_counter() - t0
-        self._value = self._future.result()
-        self._future = None
+    def get(self, timeout_s: float = 600.0) -> Any:
+        """Hybrid-polling completion (deferral + short passive waits)."""
+        if self._job is not None:
+            self._value = self._job.wait(timeout_s)
+            self._job = None
         return self._value
 
 
 class AsyncTransferEngine:
-    """ROCKET tier-1 engine: modes sync / async / pipelined for host→device."""
+    """ROCKET tier-1 engine: modes sync / async / pipelined for host→device.
+
+    The staging copy and device transfer run on the shared
+    :class:`~repro.core.copyengine.CopyEngine` (one SG descriptor per
+    pytree, unordered work queues so independent transfers overlap);
+    ``copy_engine`` overrides the shared instance for tests.
+    """
 
     def __init__(self, policy: OffloadPolicy = OffloadPolicy(),
                  latency: Optional[LatencyModel] = None,
                  put_fn: Optional[Callable] = None,
-                 workers: int = 2, stage: bool = True):
+                 workers: int = 2, stage: bool = True,
+                 copy_engine: Optional[CopyEngine] = None):
+        del workers                      # engine pool is process-wide now
         self.policy = policy
         self.latency = latency or LatencyModel()
         self.pool = BufferPool()
@@ -114,20 +102,9 @@ class AsyncTransferEngine:
         self._put = put_fn or jax.device_put
         self._custom_put = put_fn is not None
         self._stage = stage
-        self._executor = ThreadPoolExecutor(max_workers=workers,
-                                            thread_name_prefix="rocket-dma")
-        self._inflight: list[TransferJob] = []
+        self._copyeng = copy_engine or get_engine()
+        self._inflight: deque[TransferJob] = deque()
         self._lock = threading.Lock()
-
-    def _stage_copy(self, batch):
-        """Copy into persistent pinned staging buffers (the shared-memory
-        write of the paper's IPC path; pre-mapped, so no first-touch cost)."""
-        def one(x):
-            arr = np.asarray(x)
-            buf = self.pool.acquire(arr.shape, arr.dtype)
-            np.copyto(buf, arr)
-            return buf
-        return jax.tree.map(one, batch)
 
     def _device_copy(self, staged, sharding):
         # on the CPU backend device_put may alias host memory; force a real
@@ -144,29 +121,58 @@ class AsyncTransferEngine:
         jax.block_until_ready(out)
         return out
 
+    def _make_descriptor(self, batch, sharding, nbytes: int) -> Descriptor:
+        """One SG descriptor per pytree: gather every leaf into persistent
+        staging buffers (the pre-mapped shared-memory write of the paper's
+        IPC path), then the device transfer as the completion callback."""
+
+        def build() -> SGList:
+            sg = SGList()
+            if not self._stage:
+                sg.ctx = batch
+                return sg
+
+            def one(x):
+                arr = np.asarray(x)
+                buf = self.pool.acquire(arr.shape, arr.dtype)
+                sg.add_array(arr, buf)
+                return buf
+
+            sg.ctx = jax.tree.map(one, batch)
+            return sg
+
+        def complete(sg: SGList):
+            out = self._device_copy(sg.ctx, sharding)
+            if self._stage:
+                jax.tree.map(self.pool.release, sg.ctx)
+            return out
+
+        return Descriptor(build=build, complete=complete, nbytes=nbytes,
+                          injection=self.policy.injection_enabled(),
+                          tag="stage")
+
     # -- submission ----------------------------------------------------------
     def submit(self, batch, sharding=None) -> TransferJob:
         nbytes = _nbytes(batch)
         self.stats.submitted += 1
         self.stats.bytes_moved += nbytes
-
-        def do_move():
-            # offload path: the *engine thread* performs the staging copy and
-            # the device transfer — the caller's cycles are freed (the DSA
-            # model); inline path: the caller runs this synchronously.
-            staged = self._stage_copy(batch) if self._stage else batch
-            out = self._device_copy(staged, sharding)
-            if self._stage:
-                jax.tree.map(self.pool.release, staged)
-            return out
+        descr = self._make_descriptor(batch, sharding, nbytes)
 
         if (self.policy.mode == ExecutionMode.SYNC
                 or not self.policy.should_offload(nbytes)):
+            # inline path: the caller's thread performs the (counted) SG
+            # copies and the device transfer synchronously
             self.stats.inline += 1
-            return TransferJob(nbytes, self, value=do_move())
+            sg = descr.build()
+            if len(sg):
+                self._copyeng.run_sg(sg, injection=descr.injection,
+                                     tag=descr.tag)
+            return TransferJob(nbytes, self, value=descr.complete(sg))
 
         self.stats.offloaded += 1
-        job = TransferJob(nbytes, self, future=self._executor.submit(do_move))
+        cj = self._copyeng.submit(descr, wq=None, policy=self.policy,
+                                  latency=self.latency, stats=self.stats)
+        job = TransferJob(nbytes, self, job=cj)
         if self.policy.mode == ExecutionMode.PIPELINED:
             with self._lock:
                 self._inflight.append(job)
@@ -178,12 +184,13 @@ class AsyncTransferEngine:
     # -- batch-level completion (pipelined mode defers checks to here) --------
     def drain(self) -> list:
         with self._lock:
-            jobs, self._inflight = self._inflight, []
+            jobs, self._inflight = list(self._inflight), deque()
         return [j.get() for j in jobs]
 
     def close(self) -> None:
+        """Complete outstanding transfers (the shared copy engine itself
+        stays up — it serves every other datapath in the process)."""
         self.drain()
-        self._executor.shutdown(wait=True)
 
     def __enter__(self):
         return self

@@ -46,6 +46,12 @@ class OffloadPolicy:
     # timer granularity (sleep(25us) can cost ~1ms) a short spin keeps
     # streaming paths at memcpy speed while staying CPU-polite when idle
     spin_us: float = 200.0
+    # single-copy serving datapath: the reactor receives requests as
+    # zero-copy leases and the dispatcher gathers slot views straight into
+    # pooled batch buffers (one payload memcpy per request server-side);
+    # False restores the copy-out receive path (the pre-CopyEngine
+    # behaviour, kept for fig13_copy_path A/B measurement)
+    zero_copy_serving: bool = True
 
     def should_offload(self, nbytes: int) -> bool:
         if self.device == Device.INLINE:

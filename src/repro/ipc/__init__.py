@@ -25,6 +25,7 @@ from repro.ipc.channel import (
     DataChannel,
     RecvLease,
     SendHandle,
+    TxSlot,
     tree_nbytes,
 )
 from repro.ipc.transport import ShmTransport, TransportSpec
@@ -45,6 +46,6 @@ __all__ = [
     "Reactor", "RecvLease", "RemoteDispatcherClient", "Ring", "RingSpec",
     "SendHandle", "SeqLock", "ServingFabric", "SharedMemoryArena",
     "ShmMutex", "ShmTransport", "SlotReader", "SlotWriter", "TransportSpec",
-    "attach_retry", "connect", "make_source_from_spec", "start_producer",
-    "tree_nbytes",
+    "TxSlot", "attach_retry", "connect", "make_source_from_spec",
+    "start_producer", "tree_nbytes",
 ]

@@ -3,45 +3,72 @@
 A :class:`DataChannel` sends pytrees (nested dict/list/tuple) of numpy
 arrays through one :class:`~repro.ipc.ring.Ring`.  The wire format is
 
-- **meta**: a pickled descriptor mirroring the tree structure with each
-  array leaf replaced by ``(offset, shape, dtype)`` — plus an optional
-  user header dict (op names, job ids, seeds...);
+- **meta**: ``[u32 descriptor length | descriptor pickle | header pickle]``
+  where the descriptor mirrors the tree structure with each array leaf
+  replaced by ``(offset, shape, dtype)``.  Descriptors are **cached by
+  structural signature** (tree shape + leaf shapes/dtypes) on the sender
+  and by descriptor bytes on the receiver, so steady-state sends of a
+  stable structure skip ``pickle.dumps``/``loads`` of the descriptor
+  entirely — only the small per-message header is pickled;
 - **payload**: the arrays' bytes packed back-to-back at 64-byte-aligned
-  offsets inside the slot — a single memcpy per leaf into pre-mapped
-  shared memory, and *zero* copies on the receive side when the caller
-  asks for views (``copy=False``).
+  offsets inside the slot — one scatter-gather descriptor per tree,
+  executed by the process-wide :class:`~repro.core.copyengine.CopyEngine`
+  (a single counted memcpy per leaf into pre-mapped shared memory), and
+  *zero* copies on the receive side when the caller asks for views
+  (``copy=False``).
 
 Send modes follow :class:`~repro.core.policy.OffloadPolicy` exactly like
 the tier-1 engine (the paper's Table III):
 
 - ``sync``       — the caller performs the copy inline and the handle is
   complete on return (cpu/DTO);
-- ``async``      — a dedicated channel thread (the DSA-engine analogue)
-  performs slot acquire + copy + publish; ``send`` returns a handle
-  immediately and ``handle.wait()`` applies hybrid polling;
+- ``async``      — the shared copy engine (one work queue per channel, so
+  FIFO order holds without a per-channel thread) performs slot acquire +
+  copy + publish; ``send`` returns a handle immediately and
+  ``handle.wait()`` applies hybrid polling;
 - ``pipelined``  — async plus bounded in-flight depth: when more than
   ``pipeline_depth`` sends are outstanding the oldest is completed first
   (backpressure), with the blocking wait held *outside* the channel lock.
 
 Small below-threshold messages stay inline in every mode (size-based
 offload control).
+
+The **reserve-then-fill** path (:meth:`DataChannel.reserve`) exposes the
+ring's :class:`~repro.ipc.ring.SlotWriter` as a typed :class:`TxSlot`:
+the caller claims the destination slot first and packs the message
+directly into it (e.g. a serving reply written straight into the
+client's tx slot), eliminating the staging copy a ``send`` of an
+already-materialized tree would add.
 """
 from __future__ import annotations
 
 import pickle
+import struct
 import threading
 import time
-from concurrent.futures import Future, ThreadPoolExecutor
-from concurrent.futures import TimeoutError as FuturesTimeout
-from dataclasses import dataclass
+from collections import OrderedDict, deque
 from typing import Any, Optional
 
 import numpy as np
 
+from repro.core.copyengine import (
+    CopyEngine,
+    CopyJob,
+    Descriptor,
+    HybridPollStats,
+    SGList,
+    WouldBlock,
+    get_engine,
+)
 from repro.core.latency import LatencyModel
 from repro.core.policy import ExecutionMode, OffloadPolicy
 from repro.core.queuepair import drain_to_depth
-from repro.ipc.ring import ChannelClosed, Ring, SlotReader, _align
+from repro.ipc.ring import ChannelClosed, Ring, SlotReader, SlotWriter, _align
+
+from dataclasses import dataclass
+
+_U32 = struct.Struct("<I")
+_DESCR_CACHE_MAX = 64
 
 
 # ---------------------------------------------------------------------------
@@ -70,19 +97,47 @@ def _pack_descr(tree, cursor: list[int]):
     return leaf
 
 
-def _copy_leaves(tree, descr, payload: memoryview) -> None:
+# structure-signature markers (distinct from any dict key / dtype string)
+_SIG_DICT, _SIG_LIST, _SIG_TUPLE = 0, 1, 2
+
+
+def _signature(tree, out: list) -> None:
+    """Flatten the tree's *structure* (container shape, keys, leaf
+    shapes/dtypes) into a hashable token list — the descriptor-cache key.
+    Any structural change (new key, reordered keys, different shape or
+    dtype) yields a different signature, which is the cache invalidation."""
+    if isinstance(tree, dict):
+        out.append(_SIG_DICT)
+        out.append(len(tree))
+        for k, v in tree.items():
+            out.append(k)
+            _signature(v, out)
+        return
+    if isinstance(tree, (list, tuple)):
+        out.append(_SIG_LIST if isinstance(tree, list) else _SIG_TUPLE)
+        out.append(len(tree))
+        for v in tree:
+            _signature(v, out)
+        return
+    arr = np.asarray(tree)
+    out.append(arr.dtype.str)
+    out.append(arr.shape)
+
+
+def _gather_sg(tree, descr, payload: memoryview, sg: SGList) -> None:
+    """Append one SG entry per leaf: leaf bytes → its slot placement."""
     if isinstance(descr, dict):
         for k, d in descr.items():
-            _copy_leaves(tree[k], d, payload)
+            _gather_sg(tree[k], d, payload, sg)
         return
     if isinstance(descr, (list, tuple)):
         for v, d in zip(tree, descr):
-            _copy_leaves(v, d, payload)
+            _gather_sg(v, d, payload, sg)
         return
-    arr = np.ascontiguousarray(np.asarray(tree))
+    arr = np.asarray(tree)
     dst = np.frombuffer(payload, np.uint8, count=arr.nbytes,
                         offset=descr.offset)
-    np.copyto(dst, arr.reshape(-1).view(np.uint8))
+    sg.add(arr, dst)
 
 
 def _unpack(descr, payload: memoryview, copy: bool):
@@ -98,6 +153,14 @@ def _unpack(descr, payload: memoryview, copy: bool):
     return arr.copy() if copy else arr
 
 
+def _count_leaves(descr) -> int:
+    if isinstance(descr, dict):
+        return sum(_count_leaves(d) for d in descr.values())
+    if isinstance(descr, (list, tuple)):
+        return sum(_count_leaves(d) for d in descr)
+    return 1
+
+
 def tree_nbytes(tree) -> int:
     """Total payload bytes of every array leaf in a pytree."""
     if isinstance(tree, dict):
@@ -108,59 +171,48 @@ def tree_nbytes(tree) -> int:
 
 
 # ---------------------------------------------------------------------------
-# completion handles
+# completion handles / leases
 # ---------------------------------------------------------------------------
 
 class SendHandle:
-    """Completion flag for one send (the job-id side of the paper's API)."""
+    """Completion flag for one send (the job-id side of the paper's API);
+    offloaded sends are backed by a copy-engine completion record."""
 
     def __init__(self, channel: "DataChannel", nbytes: int,
-                 future: Optional[Future] = None):
+                 job: Optional[CopyJob] = None):
         self.nbytes = nbytes
         self.submit_t = time.perf_counter()
-        self._future = future
-        self._channel = channel
+        self._job = job
 
     def done(self) -> bool:
         """True once the copy has been published (never blocks)."""
-        return self._future is None or self._future.done()
+        return self._job is None or self._job.done()
+
+    def failed(self) -> bool:
+        """True when the offloaded send completed with an exception."""
+        return self._job is not None and self._job.failed()
 
     def wait(self, timeout_s: float = 30.0) -> None:
-        """Hybrid-polling completion: size-aware deferral + short waits."""
-        if self._future is None:
-            return
-        ch = self._channel
-        if not self._future.done():
-            pred = ch.latency.defer_seconds(self.nbytes,
-                                            ch.policy.defer_fraction)
-            remain = pred - (time.perf_counter() - self.submit_t)
-            if remain > 0:
-                time.sleep(min(remain, timeout_s))
-                ch.stats.deferred_sleep_s += min(remain, timeout_s)
-            quantum = ch.policy.poll_interval_us * 1e-6
-            deadline = time.perf_counter() + timeout_s
-            t0 = time.perf_counter()
-            while not self._future.done():
-                ch.stats.polls += 1
-                if time.perf_counter() > deadline:
-                    ch.stats.blocked_wait_s += time.perf_counter() - t0
-                    raise TimeoutError("send not complete within timeout")
-                try:
-                    self._future.result(timeout=quantum)
-                except (TimeoutError, FuturesTimeout):
-                    continue
-            ch.stats.blocked_wait_s += time.perf_counter() - t0
-        self._future.result()          # surface worker exceptions
-        self._future = None
+        """Hybrid-polling completion: size-aware deferral + short waits;
+        re-raises engine-side exceptions (e.g. a timed-out slot acquire)."""
+        if self._job is not None:
+            self._job.wait(timeout_s)
+            self._job = None
 
 
 class RecvLease:
     """Zero-copy receive: tree views stay valid until ``release``."""
 
-    def __init__(self, tree, header: dict, reader: SlotReader):
+    def __init__(self, tree, header: dict, reader: Optional[SlotReader]):
         self.tree = tree
         self.header = header
         self._reader = reader
+
+    @property
+    def held(self) -> bool:
+        """True while the lease still occupies its ring slot (a lease made
+        from an already-copied message reports False)."""
+        return self._reader is not None
 
     def release(self) -> None:
         """Recycle the slot; the leased views become invalid."""
@@ -178,22 +230,65 @@ class RecvLease:
         self.release()
 
 
+class TxSlot:
+    """A reserved tx slot with typed writable views (reserve-then-fill).
+
+    ``tree`` mirrors the template pytree with numpy views *into the slot
+    payload*; write results straight into them, then :meth:`publish`.
+    :meth:`abort` gives an unfillable slot back as a skip sentinel the
+    receive path ignores.  As a context manager it publishes on clean
+    exit and aborts if the block raised.
+    """
+
+    def __init__(self, tree, writer: SlotWriter, meta: bytes, nbytes: int,
+                 channel: "DataChannel"):
+        self.tree = tree
+        self._writer = writer
+        self._meta = meta
+        self._nbytes = nbytes
+        self._channel = channel
+
+    def publish(self) -> None:
+        """Write the (cached) descriptor meta and ring the doorbell."""
+        if self._writer is None:
+            return
+        w, ch = self._writer, self._channel
+        self._writer = None
+        w.meta[:len(self._meta)] = self._meta
+        w.publish(self._nbytes, len(self._meta))
+        ch.stats.sends += 1
+        ch.stats.inline += 1
+        ch.stats.bytes_sent += self._nbytes
+        self.tree = None
+
+    def abort(self) -> None:
+        """Give the slot back unfilled (publishes the skip sentinel)."""
+        if self._writer is None:
+            return
+        self._writer.abort()
+        self._writer = None
+        self.tree = None
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, exc_type, *exc):
+        if exc_type is not None:
+            self.abort()
+        else:
+            self.publish()
+
+
 @dataclass
-class ChannelStats:
-    """Per-channel send/recv counters and wait-time accounting."""
+class ChannelStats(HybridPollStats):
+    """Per-channel counters: the shared hybrid-polling fields plus
+    send/recv/byte totals and descriptor-cache effectiveness."""
     sends: int = 0
-    inline: int = 0
-    offloaded: int = 0
     recvs: int = 0
     bytes_sent: int = 0
     bytes_recv: int = 0
-    polls: int = 0
-    deferred_sleep_s: float = 0.0
-    blocked_wait_s: float = 0.0
-
-    def snapshot(self) -> dict:
-        """A plain-dict copy (for logging/benchmark rows)."""
-        return dict(self.__dict__)
+    descr_cache_hits: int = 0
+    descr_cache_misses: int = 0
 
 
 # ---------------------------------------------------------------------------
@@ -205,32 +300,52 @@ class DataChannel:
 
     def __init__(self, tx: Optional[Ring], rx: Optional[Ring],
                  policy: Optional[OffloadPolicy] = None,
-                 latency: Optional[LatencyModel] = None):
+                 latency: Optional[LatencyModel] = None,
+                 copy_engine: Optional[CopyEngine] = None,
+                 descr_cache: bool = True):
         self.tx = tx
         self.rx = rx
         self.policy = policy or OffloadPolicy()
         self.latency = latency or LatencyModel()
         self.stats = ChannelStats()
+        self._engine = copy_engine or get_engine()
         self._send_lock = threading.Lock()      # slot-order serialization
-        self._inflight: list[SendHandle] = []
+        self._inflight: deque[SendHandle] = deque()
         self._inflight_lock = threading.Lock()
-        self._executor: Optional[ThreadPoolExecutor] = None
+        self._cache_enabled = descr_cache
+        self._tx_descr_cache: OrderedDict = OrderedDict()
+        self._rx_descr_cache: OrderedDict = OrderedDict()
 
-    def _engine(self) -> ThreadPoolExecutor:
-        # one worker: the single offload engine; also guarantees slot order
-        if self._executor is None:
-            self._executor = ThreadPoolExecutor(
-                max_workers=1, thread_name_prefix="rocket-ipc")
-        return self._executor
-
-    # -- send -----------------------------------------------------------------
-    def _do_send(self, tree, header: Optional[dict],
-                 timeout_s: float) -> None:
-        cursor = [0]
-        descr = _pack_descr(tree, cursor)
-        nbytes = cursor[0]
-        meta = pickle.dumps((header or {}, descr),
-                            protocol=pickle.HIGHEST_PROTOCOL)
+    # -- wire encoding (descriptor cache) -------------------------------------
+    def _encode(self, tree, header: Optional[dict]):
+        """Build (meta bytes, descriptor, payload nbytes); the descriptor
+        and its pickle are cached by structural signature, so steady-state
+        sends pickle only the small header."""
+        sig: Optional[tuple] = None
+        hit = None
+        if self._cache_enabled:
+            toks: list = []
+            _signature(tree, toks)
+            sig = tuple(toks)
+            hit = self._tx_descr_cache.get(sig)
+        if hit is not None:
+            descr, descr_bytes, nbytes = hit
+            self._tx_descr_cache.move_to_end(sig)
+            self.stats.descr_cache_hits += 1
+        else:
+            cursor = [0]
+            descr = _pack_descr(tree, cursor)
+            nbytes = cursor[0]
+            descr_bytes = pickle.dumps(descr,
+                                       protocol=pickle.HIGHEST_PROTOCOL)
+            self.stats.descr_cache_misses += 1
+            if self._cache_enabled:
+                self._tx_descr_cache[sig] = (descr, descr_bytes, nbytes)
+                while len(self._tx_descr_cache) > _DESCR_CACHE_MAX:
+                    self._tx_descr_cache.popitem(last=False)
+        header_bytes = pickle.dumps(header or {},
+                                    protocol=pickle.HIGHEST_PROTOCOL)
+        meta = _U32.pack(len(descr_bytes)) + descr_bytes + header_bytes
         if nbytes > self.tx.spec.slot_bytes:
             raise ValueError(
                 f"message of {nbytes} B exceeds slot capacity "
@@ -240,11 +355,62 @@ class DataChannel:
             raise ValueError(
                 f"meta of {len(meta)} B exceeds meta capacity "
                 f"{self.tx.spec.meta_bytes} B")
+        return meta, descr, nbytes
+
+    def _decode_meta(self, raw: bytes):
+        """(header, descriptor) from wire meta; descriptors are cached by
+        their pickled bytes so a stable stream skips ``pickle.loads``."""
+        (dlen,) = _U32.unpack_from(raw, 0)
+        descr_bytes = raw[4:4 + dlen]
+        descr = self._rx_descr_cache.get(descr_bytes)
+        if descr is None:
+            descr = pickle.loads(descr_bytes)
+            if self._cache_enabled:
+                self._rx_descr_cache[descr_bytes] = descr
+                while len(self._rx_descr_cache) > _DESCR_CACHE_MAX:
+                    self._rx_descr_cache.popitem(last=False)
+        else:
+            self._rx_descr_cache.move_to_end(descr_bytes)
+        header = pickle.loads(raw[4 + dlen:])
+        return header, descr
+
+    # -- send -----------------------------------------------------------------
+    def _fill_and_publish(self, sg: SGList, meta: bytes, nbytes: int) -> None:
+        w: SlotWriter = sg.ctx
+        w.meta[:len(meta)] = meta
+        w.publish(nbytes, len(meta))
+
+    def _acquire_sg(self, tree, descr, timeout_s: float) -> SGList:
         with self._send_lock:
             writer = self.tx.acquire(timeout_s)
-            _copy_leaves(tree, descr, writer.payload)
-            writer.meta[:len(meta)] = meta
-            writer.publish(nbytes, len(meta))
+        sg = SGList()
+        _gather_sg(tree, descr, writer.payload, sg)
+        sg.ctx = writer
+        return sg
+
+    def _acquire_sg_nonblocking(self, tree, descr, timeout_s: float,
+                                state: dict) -> SGList:
+        """Engine-thread slot acquire: never blocks a shared copy-engine
+        worker.  A full ring raises :class:`WouldBlock` so the engine parks
+        this channel's work queue and retries at quantum cadence — other
+        channels keep copying meanwhile; the blocking-path semantics
+        (ChannelClosed on peer shutdown, TimeoutError after ``timeout_s``)
+        are preserved."""
+        if state.get("deadline") is None:
+            state["deadline"] = time.perf_counter() + timeout_s
+        with self._send_lock:
+            writer = self.tx.try_acquire()
+        if writer is None:
+            if self.tx.peer_closed:
+                raise ChannelClosed("peer endpoint closed the transport")
+            if time.perf_counter() > state["deadline"]:
+                raise TimeoutError(
+                    f"ring full for {timeout_s}s (consumer stalled?)")
+            raise WouldBlock(self.policy.poll_interval_us * 1e-6)
+        sg = SGList()
+        _gather_sg(tree, descr, writer.payload, sg)
+        sg.ctx = writer
+        return sg
 
     def send(self, tree, header: Optional[dict] = None,
              mode: ExecutionMode | str | None = None,
@@ -254,27 +420,39 @@ class DataChannel:
         if self.tx is None:
             raise RuntimeError("receive-only channel")
         mode = ExecutionMode(mode) if mode is not None else self.policy.mode
-        nbytes = tree_nbytes(tree)
+        meta, descr, nbytes = self._encode(tree, header)   # raises on oversize
         self.stats.sends += 1
         self.stats.bytes_sent += nbytes
 
         if mode == ExecutionMode.SYNC or not self.policy.should_offload(nbytes):
             self.stats.inline += 1
             self.flush(timeout_s)      # FIFO: inline never overtakes offloads
-            self._do_send(tree, header, timeout_s)
+            sg = self._acquire_sg(tree, descr, timeout_s)
+            self._engine.run_sg(sg, injection=self.policy.injection_enabled(),
+                                tag="send")
+            self._fill_and_publish(sg, meta, nbytes)
             return SendHandle(self, nbytes)
 
         self.stats.offloaded += 1
-        fut = self._engine().submit(self._do_send, tree, header, timeout_s)
-        handle = SendHandle(self, nbytes, future=fut)
+        acquire_state: dict = {}       # deadline anchored at first attempt
+        job = self._engine.submit(
+            Descriptor(build=lambda: self._acquire_sg_nonblocking(
+                           tree, descr, timeout_s, acquire_state),
+                       complete=lambda sg: self._fill_and_publish(
+                           sg, meta, nbytes),
+                       nbytes=nbytes,
+                       injection=self.policy.injection_enabled(),
+                       tag="send"),
+            wq=self, policy=self.policy, latency=self.latency,
+            stats=self.stats)
+        handle = SendHandle(self, nbytes, job=job)
         with self._inflight_lock:
             # track every offloaded send so flush() orders later sync sends
             # after it; prune cleanly-completed ones so async stays bounded
             # (a failed handle is kept: flush must surface its exception)
-            while (self._inflight and self._inflight[0]._future is not None
-                   and self._inflight[0]._future.done()
-                   and self._inflight[0]._future.exception() is None):
-                self._inflight.pop(0)._future = None
+            while (self._inflight and self._inflight[0].done()
+                   and not self._inflight[0].failed()):
+                self._inflight.popleft()
             self._inflight.append(handle)
         if mode == ExecutionMode.PIPELINED:
             # bounded in-flight depth (the engine's backpressure, same shape)
@@ -283,62 +461,92 @@ class DataChannel:
                            lambda h: h.wait(timeout_s))
         return handle
 
+    def reserve(self, template, header: Optional[dict] = None,
+                timeout_s: float = 30.0) -> TxSlot:
+        """Reserve-then-fill: claim the next tx slot, lay it out for
+        ``template`` (a pytree of arrays — shapes/dtypes only, nothing is
+        copied), and return a :class:`TxSlot` of writable views.  The
+        caller packs the message directly into the destination slot and
+        calls ``publish()`` — no staging copy, and the descriptor meta
+        comes from the same structure-keyed cache as ``send``."""
+        if self.tx is None:
+            raise RuntimeError("receive-only channel")
+        meta, descr, nbytes = self._encode(template, header)
+        self.flush(timeout_s)          # FIFO wrt earlier offloaded sends
+        with self._send_lock:
+            writer = self.tx.acquire(timeout_s)
+        tree = _unpack(descr, writer.payload, copy=False)
+        return TxSlot(tree, writer, meta, nbytes, self)
+
     def flush(self, timeout_s: float = 30.0) -> None:
         """Complete all outstanding pipelined sends (batch-level check)."""
         with self._inflight_lock:
-            pending, self._inflight = self._inflight, []
+            pending, self._inflight = self._inflight, deque()
         for h in pending:
             h.wait(timeout_s)
 
     # -- recv -----------------------------------------------------------------
+    def _lease_from_reader(self, reader: SlotReader, copy: bool):
+        header, descr = self._decode_meta(reader.meta)
+        self.stats.recvs += 1
+        self.stats.bytes_recv += reader.payload_nbytes
+        payload = reader.slot.payload_view
+        if copy:
+            tree = _unpack(descr, payload, copy=True)
+            # counted staging copy: the receive-side memcpy the zero-copy
+            # serving path exists to eliminate
+            self._engine.count("recv_copy", _count_leaves(descr),
+                               reader.payload_nbytes)
+            reader.release()
+            return tree, header
+        return RecvLease(_unpack(descr, payload, copy=False), header, reader)
+
     def recv(self, timeout_s: float = 30.0, copy: bool = True,
              hint_nbytes: int = 0):
         """Receive one pytree; ``copy=False`` returns a :class:`RecvLease`
         whose arrays are zero-copy views into the slot."""
         if self.rx is None:
             raise RuntimeError("send-only channel")
-        reader = self.rx.wait_recv(timeout_s, hint_nbytes)
-        header, descr = pickle.loads(reader.meta)
-        self.stats.recvs += 1
-        self.stats.bytes_recv += reader.payload_nbytes
-        payload = reader.slot.payload_view
-        if copy:
-            tree = _unpack(descr, payload, copy=True)
-            reader.release()
-            return tree, header
-        return RecvLease(_unpack(descr, payload, copy=False), header, reader)
+        deadline = time.perf_counter() + timeout_s
+        while True:
+            reader = self.rx.wait_recv(
+                max(1e-3, deadline - time.perf_counter()), hint_nbytes)
+            if reader.meta_nbytes == 0:     # aborted reserve: skip sentinel
+                reader.release()
+                hint_nbytes = 0
+                continue
+            return self._lease_from_reader(reader, copy)
 
     def try_recv(self, copy: bool = True):
         """Non-blocking receive; None when no message is ready."""
         if self.rx is None:
             raise RuntimeError("send-only channel")
-        reader = self.rx.try_poll()
-        if reader is None:
-            return None
-        header, descr = pickle.loads(reader.meta)
-        self.stats.recvs += 1
-        self.stats.bytes_recv += reader.payload_nbytes
-        if copy:
-            tree = _unpack(descr, reader.slot.payload_view, copy=True)
-            reader.release()
-            return tree, header
-        return RecvLease(_unpack(descr, reader.slot.payload_view,
-                                 copy=False), header, reader)
+        while True:
+            reader = self.rx.try_poll()
+            if reader is None:
+                return None
+            if reader.meta_nbytes == 0:     # aborted reserve: skip sentinel
+                reader.release()
+                continue
+            return self._lease_from_reader(reader, copy)
 
     # -- lifecycle ------------------------------------------------------------
     def close(self, timeout_s: float = 5.0) -> None:
-        """Flush outstanding sends and stop the offload engine thread."""
+        """Flush outstanding sends (the shared copy engine stays up — it
+        serves every other channel in the process)."""
         try:
             self.flush(timeout_s)
         except (TimeoutError, ChannelClosed):
             pass
-        if self._executor is not None:
-            self._executor.shutdown(wait=True)
-            self._executor = None
 
 
 class ControlChannel:
-    """Small pickled-object messages (commands, acks) over tiny slots."""
+    """Small pickled-object messages (commands, acks) over tiny slots.
+
+    Both receive paths surface :class:`~repro.ipc.ring.ChannelClosed`
+    consistently once the peer endpoint announced shutdown (after the
+    ring is drained), so callers never have to poke ring internals to
+    distinguish "no message yet" from "peer is gone"."""
 
     def __init__(self, tx: Optional[Ring], rx: Optional[Ring]):
         self.tx = tx
@@ -356,14 +564,21 @@ class ControlChannel:
             w.publish(len(blob))
 
     def recv_msg(self, timeout_s: float = 30.0) -> Any:
-        """Blocking receive of one message."""
+        """Blocking receive of one message; raises
+        :class:`~repro.ipc.ring.ChannelClosed` when the peer shut down
+        while we were waiting (in-flight messages are delivered first)."""
         with self.rx.wait_recv(timeout_s) as r:
             return pickle.loads(r.payload)
 
     def try_recv_msg(self) -> Any:
-        """Non-blocking receive; None when no message is waiting."""
+        """Non-blocking receive; None when no message is waiting, and
+        :class:`~repro.ipc.ring.ChannelClosed` once the peer announced
+        shutdown and the ring is fully drained."""
         r = self.rx.try_poll()
         if r is None:
+            if self.rx.peer_closed:
+                raise ChannelClosed(
+                    "control peer closed and the ring is drained")
             return None
         with r:
             return pickle.loads(r.payload)

@@ -13,6 +13,22 @@ closed reply path marks the connection dead for reaping, so a vanished
 client costs one bounded stall rather than a 30s head-of-line block per
 outstanding reply.
 
+**Zero-copy drain** (default, ``policy.zero_copy_serving``): requests are
+received as :class:`~repro.ipc.channel.RecvLease` views into the shared
+slot — no receive-side staging copy — and handed to ``on_message`` still
+leased; the consumer (the fabric → dispatcher) releases each lease once
+the payload has been gathered into a batch buffer.  A held lease keeps
+its ring slot occupied, so the ring depth bounds how far a client can run
+ahead of batch formation (backpressure, not a copy).  With
+``zero_copy_serving=False`` the reactor copies each payload out
+immediately (the pre-CopyEngine datapath, kept for A/B measurement) and
+delivers a pre-released lease.
+
+Replies go back **reserve-then-fill**: :meth:`Connection.reply` claims
+the client's tx slot first and packs the result array straight into it
+(one counted memcpy, no staging tree, descriptor meta from the channel's
+structure cache).
+
 Idle behaviour is the repo-wide hybrid policy: after an empty sweep the
 reactor spins (yield-only) for ``policy.spin_us`` so a streaming client is
 picked up at memcpy latency, then falls back to ``poll_interval_us``
@@ -31,7 +47,11 @@ import time
 from dataclasses import dataclass, field
 from typing import Callable, Optional
 
+import numpy as np
+
+from repro.core.copyengine import SGList, get_engine
 from repro.core.policy import OffloadPolicy
+from repro.ipc.channel import RecvLease
 from repro.ipc.ring import ChannelClosed
 from repro.ipc.transport import ShmTransport
 
@@ -62,6 +82,12 @@ class Connection:
     def reply(self, tree, header: dict, timeout_s: float = 5.0) -> None:
         """Send a reply on this client's transport and settle accounting.
 
+        A reply whose payload is a single ``result`` array takes the
+        reserve-then-fill fast path: the destination tx slot is claimed
+        first and the array packed straight into it (one counted memcpy,
+        no staging tree, no per-send descriptor pickle).  Anything else
+        (error replies, odd shapes) falls back to a plain sync send.
+
         The timeout is deliberately short and a failure marks the
         connection dead: replies run on the *shared* dispatcher worker
         thread, so a vanished client whose reply ring filled up must cost
@@ -69,8 +95,17 @@ class Connection:
         reply while every other client starves.
         """
         try:
-            self.transport.send(tree, header=header, mode="sync",
-                                timeout_s=timeout_s)
+            arr = tree.get("result") if isinstance(tree, dict) else None
+            if (isinstance(arr, np.ndarray) and len(tree) == 1):
+                slot = self.transport.data.reserve(
+                    {"result": arr}, header=header, timeout_s=timeout_s)
+                with slot:
+                    sg = SGList()
+                    sg.add_array(arr, slot.tree["result"])
+                    get_engine().run_sg(sg, tag="reply_fill")
+            else:
+                self.transport.send(tree, header=header, mode="sync",
+                                    timeout_s=timeout_s)
         except (TimeoutError, ChannelClosed):
             self.dead = True        # unresponsive or vanished: reap it
             raise
@@ -87,22 +122,33 @@ class ReactorStats:
     throttled: int = 0         # sweeps that skipped a conn at max_inflight
     disconnects: int = 0
     errors: int = 0            # on_message raised (message dropped, loop lives)
+    zero_copy_recvs: int = 0   # requests delivered as held leases (no copy)
 
 
 class Reactor:
-    """Round-robin poller over many transports in a single thread."""
+    """Round-robin poller over many transports in a single thread.
+
+    ``on_message(conn, lease)`` receives a
+    :class:`~repro.ipc.channel.RecvLease`: ``lease.tree``/``lease.header``
+    carry the request, and when ``lease.held`` the views point into the
+    client's ring slot — the consumer must ``release()`` it once the
+    payload is consumed (the fabric does this after batch gather).
+    """
 
     def __init__(self, policy: Optional[OffloadPolicy] = None,
-                 on_message: Optional[Callable[[Connection, dict, dict],
+                 on_message: Optional[Callable[[Connection, RecvLease],
                                                None]] = None,
                  on_disconnect: Optional[Callable[[Connection], None]] = None,
                  max_drain_per_sweep: int = 8,
-                 max_inflight: int = 16):
+                 max_inflight: int = 16,
+                 zero_copy: Optional[bool] = None):
         self.policy = policy or OffloadPolicy()
         self.on_message = on_message
         self.on_disconnect = on_disconnect
         self.max_drain_per_sweep = max_drain_per_sweep
         self.max_inflight = max_inflight
+        self.zero_copy = (self.policy.zero_copy_serving if zero_copy is None
+                          else zero_copy)
         self.stats = ReactorStats()
         self._conns: dict[int, Connection] = {}
         self._lock = threading.Lock()
@@ -144,22 +190,29 @@ class Reactor:
                 self.stats.throttled += 1
                 return drained          # admission cap: leave rest in its ring
             try:
-                item = conn.transport.data.try_recv(copy=True)
+                item = conn.transport.data.try_recv(copy=not self.zero_copy)
             except ChannelClosed:
                 item = None
             if item is None:
                 break
-            tree, header = item
+            if isinstance(item, RecvLease):
+                lease = item
+                self.stats.zero_copy_recvs += 1
+            else:                       # copy-out mode: already released
+                lease = RecvLease(item[0], item[1], None)
             drained += 1
             conn.begin()
             if self.on_message is not None:
                 try:
-                    self.on_message(conn, tree, header)
+                    self.on_message(conn, lease)
                 except Exception:
                     # one malformed message must not kill the sweep thread
                     # (which serves every client); drop it, settle accounting
+                    lease.release()
                     conn.done()
                     self.stats.errors += 1
+            else:
+                lease.release()
         return drained
 
     def poll_once(self) -> int:

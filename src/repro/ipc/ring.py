@@ -130,7 +130,16 @@ class _Slot:
 
 
 class SlotWriter:
-    """Producer-side lease on a WRITING slot; ``publish`` flips it READY."""
+    """Producer-side lease on a WRITING slot; ``publish`` flips it READY.
+
+    This is the ring's **reserve-then-fill** primitive: ``Ring.acquire``
+    reserves the slot, the caller fills ``payload``/``meta`` in place
+    (e.g. packing a reply straight into the destination slot with no
+    staging copy), and ``publish`` is the doorbell.  ``abort`` releases a
+    reserved slot that cannot be filled: it publishes a zero-meta
+    sentinel the data-channel receive path silently skips, so the SPSC
+    cursor chain stays intact (a plain state rollback would strand the
+    consumer, which waits on slots strictly in order)."""
 
     def __init__(self, ring: "Ring", slot: _Slot, seq: int):
         self._ring = ring
@@ -156,6 +165,10 @@ class SlotWriter:
         s.state = READY            # the publishing store (completion flag)
         self._ring._produced[0] += 1
         self._ring.stats.produced += 1
+
+    def abort(self) -> None:
+        """Give the reserved slot back as a skip sentinel (zero meta)."""
+        self.publish(0, 0)
 
 
 class SlotReader:
@@ -189,9 +202,18 @@ class SlotReader:
         return arr.copy() if copy else arr
 
     def release(self) -> None:
-        """Recycle the slot (EMPTY): any payload views become invalid."""
-        self.slot.state = EMPTY
-        self._ring._consumed[0] += 1
+        """Recycle the slot (EMPTY): any payload views become invalid.
+
+        Safe after transport teardown: if the endpoint was closed while
+        this lease was still held (a reaped connection whose requests were
+        queued in the dispatcher), the slot views are already dropped and
+        there is nothing to recycle — releasing is a no-op rather than a
+        crash in whoever held the lease."""
+        try:
+            self.slot.state = EMPTY
+            self._ring._consumed[0] += 1
+        except TypeError:              # drop_views() ran: slot/counters gone
+            return
         self._ring.stats.consumed += 1
 
     def __enter__(self):
@@ -233,6 +255,13 @@ class Ring:
 
     def _peer_closed(self) -> bool:
         return self._closed_word is not None and int(self._closed_word[0]) != 0
+
+    @property
+    def peer_closed(self) -> bool:
+        """True once the bound shutdown word says the peer endpoint is gone
+        (public so channel layers can surface :class:`ChannelClosed`
+        consistently instead of poking ring internals)."""
+        return self._peer_closed()
 
     @property
     def produced(self) -> int:

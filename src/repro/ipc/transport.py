@@ -224,7 +224,15 @@ class ShmTransport:
         self._my_closed_word = None
         for r in self._rings.values():
             r.drop_views()
-        self.arena.close()
+        try:
+            self.arena.close()
+        except BufferError:
+            # a zero-copy lease somewhere still pins a slot view (e.g. a
+            # request drained from a connection that died mid-batch); the
+            # mapping drops when the lease holder releases or the process
+            # exits — unlinking below is still safe (POSIX destroys the
+            # segment at last unmap), so a stuck lease cannot leak shm
+            pass
         if unlink if unlink is not None else (self.side == "creator"):
             self.arena.unlink()
 

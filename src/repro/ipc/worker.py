@@ -299,13 +299,23 @@ class ServingFabric:
         """The rendezvous name clients connect to."""
         return self.listener.name
 
-    def _on_message(self, conn, tree, header: dict) -> None:
-        """Reactor thread: route one client request into the dispatcher."""
+    def _on_message(self, conn, lease) -> None:
+        """Reactor thread: route one client request into the dispatcher.
+
+        ``lease`` is a :class:`~repro.ipc.channel.RecvLease`; under the
+        zero-copy datapath its ``tree["data"]`` is a view straight into
+        the client's ring slot, and the *dispatcher* releases the lease
+        once the payload has been gathered into a batch buffer (or the
+        solo execution completed) — the reactor never copies it.
+        """
+        header = lease.header
         if header.get("shutdown"):
+            lease.release()
             conn.done()     # settle accounting; reaped once its flag is seen
             return
         job_id = header.get("job_id", -1)
         op, mode = header.get("op"), header.get("mode", "sync")
+        tree = lease.tree
 
         def reply(_jid: int, out) -> None:
             if isinstance(out, Exception):
@@ -318,13 +328,15 @@ class ServingFabric:
                            timeout_s=self.reply_timeout_s)
 
         try:
-            self.dispatcher.submit(op, tree["data"], mode=mode,
-                                   on_complete=reply)
+            data = tree["data"] if isinstance(tree, dict) else None
+            self.dispatcher.submit(op, data, mode=mode, on_complete=reply,
+                                   lease=lease if lease.held else None)
         except Exception as e:
             # malformed request (missing data, bad mode string, ...): tell
             # the client instead of letting it time out.  reply() settles
             # the connection accounting in its finally, so swallow any
             # send failure here rather than re-settling in the reactor.
+            lease.release()
             try:
                 reply(job_id, e)
             except Exception:

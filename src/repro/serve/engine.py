@@ -90,7 +90,17 @@ class BatchedServer:
             out = self.generate_batch(self._pack(datas))
             return [out[i] for i in range(len(datas))]
 
-        d.register_handler("generate", single, batch_fn=batched)
+        def batched_slab(slab: np.ndarray, shapes) -> list[np.ndarray]:
+            # single-copy datapath: the dispatcher's batch-formation gather
+            # already left-aligned + zero-padded every prompt into ``slab``
+            # — exactly what _pack would build — so wrap it without another
+            # per-row packing copy
+            self.stats["requests"] += len(shapes)
+            out = self.generate_batch(self._wrap(slab))
+            return [out[i] for i in range(len(shapes))]
+
+        d.register_handler("generate", single, batch_fn=batched,
+                           slab_fn=batched_slab)
         return d
 
     # -- cross-process serving (repro.ipc) ---------------------------------------
@@ -126,6 +136,12 @@ class BatchedServer:
         toks = np.zeros((b, s), np.int32)
         for i, p in enumerate(prompts):
             toks[i, : p.shape[-1]] = p
+        return self._wrap(toks)
+
+    def _wrap(self, toks: np.ndarray) -> dict:
+        """Model-input dict around an already-packed (B, S) token slab."""
+        toks = np.ascontiguousarray(toks.astype(np.int32, copy=False))
+        b, s = toks.shape
         batch = {"tokens": toks}
         cfg = self.model.cfg
         if cfg.family == "audio":

@@ -1,0 +1,560 @@
+"""Unified copy engine + single-copy serving datapath.
+
+Covers the CopyEngine itself (SG descriptors, work-queue FIFO, batched
+doorbells, injection selection), the channel descriptor cache (hit/miss,
+mid-stream invalidation), reserve-then-fill tx slots (including abort
+sentinels), ControlChannel ChannelClosed consistency, and — the
+acceptance assertion — the counted copies-per-request of the pipelined
+serving path: exactly one payload memcpy server-side per request
+(slot → batch buffer) and zero receive-side staging copies, read from the
+process-wide engine counters rather than timed.
+"""
+import multiprocessing as mp
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.copyengine import (
+    CopyEngine,
+    Descriptor,
+    HybridPollStats,
+    SGList,
+    WouldBlock,
+    get_engine,
+)
+from repro.core.dispatcher import RequestDispatcher
+from repro.core.engine import EngineStats
+from repro.core.policy import ExecutionMode, OffloadPolicy
+from repro.ipc import (
+    ChannelClosed,
+    ChannelStats,
+    RemoteDispatcherClient,
+    ServingFabric,
+    ShmTransport,
+    TransportSpec,
+)
+
+TIGHT = OffloadPolicy(offload_threshold_bytes=1, poll_interval_us=50.0)
+SMALL = TransportSpec(data_slots=4, data_slot_bytes=1 << 20,
+                      ctrl_slots=4, ctrl_slot_bytes=4 << 10)
+
+
+def _pair(spec=SMALL, policy=TIGHT):
+    a = ShmTransport.create(spec=spec, policy=policy)
+    b = ShmTransport.attach(a.name, policy=policy)
+    return a, b
+
+
+def _tag_delta(before: dict, after: dict) -> dict:
+    return {k: after.get(k, 0) - before.get(k, 0)
+            for k in set(before) | set(after)}
+
+
+# ---------------------------------------------------------------------------
+# copy engine: descriptors, work queues, doorbells, injection
+# ---------------------------------------------------------------------------
+
+def test_copyengine_sg_submission_and_completion():
+    with CopyEngine(workers=2) as eng:
+        src = np.arange(4096, dtype=np.int64)
+        dst = np.zeros_like(src)
+        sg = SGList()
+        sg.add_array(src, dst)
+        stats = HybridPollStats()
+        job = eng.submit(Descriptor(sg=sg, nbytes=src.nbytes, tag="t"),
+                         policy=TIGHT, stats=stats)
+        assert job.wait(timeout_s=10) is None
+        np.testing.assert_array_equal(dst, src)
+        assert eng.stats.tagged["t"] == 1
+        assert eng.stats.tagged_bytes["t"] == src.nbytes
+        assert eng.stats.submitted == eng.stats.completed == 1
+
+
+def test_copyengine_wq_fifo_order_and_unordered_keys():
+    with CopyEngine(workers=3) as eng:
+        order = []
+        lock = threading.Lock()
+
+        def make(i, delay):
+            def complete(_sg):
+                time.sleep(delay)
+                with lock:
+                    order.append(i)
+            return Descriptor(complete=complete)
+
+        # same wq: strictly FIFO even though the first item is slowest
+        jobs = [eng.submit(make(0, 0.05), wq="q"),
+                eng.submit(make(1, 0.0), wq="q"),
+                eng.submit(make(2, 0.0), wq="q")]
+        for j in jobs:
+            j.wait(timeout_s=10)
+        assert order == [0, 1, 2]
+
+        # a slow descriptor on one key must not block another key
+        t0 = time.perf_counter()
+        slow = eng.submit(make(9, 0.25), wq="slow")
+        fast = eng.submit(make(8, 0.0), wq="fast")
+        fast.wait(timeout_s=10)
+        assert time.perf_counter() - t0 < 0.2    # did not wait for "slow"
+        slow.wait(timeout_s=10)
+
+
+def test_copyengine_batched_doorbells():
+    with CopyEngine(workers=1) as eng:
+        gate = threading.Event()
+        first = eng.submit(Descriptor(complete=lambda sg: gate.wait(5)),
+                           wq="q")
+        # these land behind the busy worker: no extra doorbell rings
+        rest = [eng.submit(Descriptor(complete=lambda sg: None), wq="q")
+                for _ in range(5)]
+        gate.set()
+        for j in [first] + rest:
+            j.wait(timeout_s=10)
+        assert eng.stats.submitted == 6
+        assert eng.stats.doorbells == 1          # one ring served all six
+
+
+def test_copyengine_injection_selects_temporal_vs_streaming():
+    with CopyEngine(workers=1) as eng:
+        big = np.ones(1 << 19, np.uint8)          # > streaming chunk
+        for inject in (True, False):
+            sg = SGList()
+            sg.add(big, np.zeros(1 << 19, np.uint8))
+            eng.run_sg(sg, injection=inject, tag="x")
+        assert eng.stats.temporal == 1
+        assert eng.stats.streaming == 1
+        assert eng.stats.tagged["x"] == 2
+
+
+def test_copyengine_error_contained_in_completion():
+    with CopyEngine(workers=1) as eng:
+        def boom():
+            raise RuntimeError("no slot")
+        bad = eng.submit(Descriptor(build=boom), wq="q")
+        good = eng.submit(Descriptor(complete=lambda sg: 7), wq="q")
+        with pytest.raises(RuntimeError, match="no slot"):
+            bad.wait(timeout_s=10)
+        assert good.wait(timeout_s=10) == 7      # queue survived the failure
+        assert eng.stats.failed == 1
+
+
+def test_copyengine_wouldblock_parks_instead_of_blocking():
+    """A stalled queue (build raises WouldBlock) must not occupy a worker:
+    with a SINGLE worker, another queue's work still completes while the
+    stalled one retries, and the stalled job finishes once its resource
+    frees — no head-of-line blocking across channels."""
+    with CopyEngine(workers=1) as eng:
+        ready = threading.Event()
+        attempts = []
+
+        def build():
+            attempts.append(time.perf_counter())
+            if not ready.is_set():
+                raise WouldBlock(0.001)
+            return SGList()
+
+        stalled = eng.submit(Descriptor(build=build, complete=lambda sg: "s"),
+                             wq="stalled")
+        other = eng.submit(Descriptor(complete=lambda sg: "o"), wq="other")
+        # the single worker serves "other" while "stalled" is parked
+        assert other.wait(timeout_s=5) == "o"
+        assert not stalled.done()
+        assert len(attempts) >= 1
+        ready.set()
+        assert stalled.wait(timeout_s=5) == "s"
+        assert eng.stats.parked >= 1
+
+
+def test_offloaded_send_full_ring_does_not_block_other_channels():
+    """Channel integration of the parking path: channel A's consumer stalls
+    with async sends outstanding; channel B (same shared engine) still
+    streams at full speed, and A completes once its consumer drains."""
+    eng = CopyEngine(workers=1)
+    policy = OffloadPolicy(offload_threshold_bytes=1, poll_interval_us=50.0,
+                           mode=ExecutionMode.ASYNC)
+    a_tx = ShmTransport.create(spec=SMALL, policy=policy)
+    a_rx = ShmTransport.attach(a_tx.name, policy=policy)
+    b_tx = ShmTransport.create(spec=SMALL, policy=policy)
+    b_rx = ShmTransport.attach(b_tx.name, policy=policy)
+    for t in (a_tx, a_rx, b_tx, b_rx):
+        t.data._engine = eng
+    try:
+        payload = {"x": np.arange(8192, dtype=np.int64)}
+        # stall channel A: fill every slot plus extras queued in the engine
+        handles = [a_tx.send(payload, mode="async")
+                   for _ in range(SMALL.data_slots + 2)]
+        # channel B must make progress despite A's parked queue (1 worker!)
+        for i in range(6):
+            b_tx.send({"i": np.full((64,), i, np.int32)}, mode="async")
+            tree, _ = b_rx.recv(timeout_s=10)
+            assert int(tree["i"][0]) == i
+        # drain A: its parked sends now complete in order
+        for _ in handles:
+            a_rx.recv(timeout_s=10)
+        for h in handles:
+            h.wait(timeout_s=10)
+        assert eng.stats.parked >= 1
+    finally:
+        for t in (a_rx, a_tx, b_rx, b_tx):
+            t.close()
+        eng.close()
+
+
+def test_lease_release_after_transport_reaped_is_safe():
+    """Regression: releasing a RecvLease after its transport was closed
+    (reaped connection with requests still queued) must be a no-op, not a
+    TypeError that would kill the dispatcher's serve loop."""
+    a, b = _pair()
+    a.send({"x": np.arange(1024, dtype=np.int32)}, mode="sync")
+    lease = b.recv(copy=False)
+    assert lease.held
+    b.close()          # teardown while the lease is still held
+    a.close()
+    lease.release()    # must not raise
+    # and the dispatcher funnel survives a hostile lease too
+    class Hostile:
+        held = True
+        def release(self):
+            raise RuntimeError("transport gone")
+    from repro.core.dispatcher import Request
+    req = Request(0, "op", None, ExecutionMode.SYNC, lease=Hostile())
+    req._release_lease()               # swallowed, not fatal
+
+
+def test_shared_stats_dataclass_deduplicates_counters():
+    # the satellite: Engine/Channel stats share one hybrid-polling base
+    assert issubclass(EngineStats, HybridPollStats)
+    assert issubclass(ChannelStats, HybridPollStats)
+    snap = ChannelStats().snapshot()
+    for field in ("inline", "offloaded", "polls", "deferred_sleep_s",
+                  "blocked_wait_s"):
+        assert field in snap and field in EngineStats().snapshot()
+
+
+# ---------------------------------------------------------------------------
+# descriptor cache: steady-state sends skip descriptor pickling
+# ---------------------------------------------------------------------------
+
+def test_descriptor_cache_hits_and_midstream_invalidation():
+    a, b = _pair()
+    try:
+        tree_a = {"x": np.arange(2048, dtype=np.int64),
+                  "y": (np.ones((3, 5), np.float32),)}
+        tree_b = {"x": np.arange(512, dtype=np.int64),     # shape changed
+                  "y": (np.ones((3, 5), np.float32),)}
+        tree_c = {"x": np.arange(2048, dtype=np.int64)}    # structure changed
+        seq = [tree_a, tree_a, tree_a, tree_b, tree_a, tree_c, tree_b]
+        got = []
+        for t in seq:                      # interleave: 4-slot ring
+            a.send(t, mode="sync")
+            got.append(b.recv(timeout_s=10)[0])
+        for sent, (rec) in zip(seq, got):
+            assert sent["x"].tobytes() == rec["x"].tobytes()
+            if "y" in sent:
+                assert sent["y"][0].tobytes() == rec["y"][0].tobytes()
+        # 3 distinct structures -> 3 misses; everything else hits
+        assert a.data.stats.descr_cache_misses == 3
+        assert a.data.stats.descr_cache_hits == len(seq) - 3
+    finally:
+        b.close(); a.close()
+
+
+def test_descriptor_cache_dtype_change_invalidates():
+    a, b = _pair()
+    try:
+        a.send({"x": np.arange(64, dtype=np.int64)}, mode="sync")
+        a.send({"x": np.arange(64, dtype=np.int32)}, mode="sync")
+        t1, _ = b.recv(timeout_s=10)
+        t2, _ = b.recv(timeout_s=10)
+        assert t1["x"].dtype == np.int64 and t2["x"].dtype == np.int32
+        assert a.data.stats.descr_cache_misses == 2
+    finally:
+        b.close(); a.close()
+
+
+# ---------------------------------------------------------------------------
+# reserve-then-fill tx slots
+# ---------------------------------------------------------------------------
+
+def test_reserve_then_fill_roundtrip_and_meta_cache():
+    a, b = _pair()
+    try:
+        payload = np.arange(4096, dtype=np.float32)
+        for i in range(3):
+            slot = a.data.reserve({"result": payload},
+                                  header={"job_id": i})
+            np.copyto(slot.tree["result"], payload * i)
+            slot.publish()
+        for i in range(3):
+            tree, header = b.recv(timeout_s=10)
+            assert header["job_id"] == i
+            np.testing.assert_array_equal(tree["result"], payload * i)
+        # same structure every time: one descriptor pickle total
+        assert a.data.stats.descr_cache_misses == 1
+        assert a.data.stats.descr_cache_hits == 2
+    finally:
+        b.close(); a.close()
+
+
+def test_reserve_abort_sentinel_is_skipped_by_receiver():
+    a, b = _pair()
+    try:
+        slot = a.data.reserve({"x": np.zeros(16, np.float32)})
+        slot.abort()                       # unfillable: give the slot back
+        a.send({"x": np.full(16, 7.0, np.float32)}, mode="sync")
+        tree, _ = b.recv(timeout_s=10)     # sentinel invisible to the caller
+        np.testing.assert_array_equal(tree["x"],
+                                      np.full(16, 7.0, np.float32))
+        assert b.data.try_recv() is None
+    finally:
+        b.close(); a.close()
+
+
+def test_reserve_context_manager_aborts_on_exception():
+    a, b = _pair()
+    try:
+        with pytest.raises(RuntimeError, match="fill failed"):
+            with a.data.reserve({"x": np.zeros(8, np.float32)}) as slot:
+                raise RuntimeError("fill failed")
+        assert slot.tree is None
+        a.send({"x": np.ones(8, np.float32)}, mode="sync")
+        tree, _ = b.recv(timeout_s=10)
+        np.testing.assert_array_equal(tree["x"], np.ones(8, np.float32))
+    finally:
+        b.close(); a.close()
+
+
+# ---------------------------------------------------------------------------
+# control channel: ChannelClosed surfaces consistently
+# ---------------------------------------------------------------------------
+
+def test_control_try_recv_raises_after_peer_close_and_drain():
+    a, b = _pair()
+    try:
+        a.send_msg({"cmd": "last"})
+        a.announce_close()
+        # drain-first: the in-flight message is still delivered...
+        assert b.ctrl.recv_msg(timeout_s=5) == {"cmd": "last"}
+        # ...then the drained ring surfaces the shutdown
+        with pytest.raises(ChannelClosed):
+            b.ctrl.try_recv_msg()
+    finally:
+        b.close(); a.close()
+
+
+def test_control_blocked_recv_unblocks_on_shutdown():
+    """Regression: a thread blocked in recv_msg while the peer shuts down
+    must raise ChannelClosed promptly, not wait out its full timeout."""
+    a, b = _pair()
+    try:
+        out = {}
+
+        def blocked():
+            t0 = time.perf_counter()
+            try:
+                b.ctrl.recv_msg(timeout_s=30.0)
+            except ChannelClosed:
+                out["elapsed"] = time.perf_counter() - t0
+
+        t = threading.Thread(target=blocked)
+        t.start()
+        time.sleep(0.1)                    # let it enter the blocking wait
+        a.announce_close()
+        t.join(timeout=10)
+        assert not t.is_alive()
+        assert out["elapsed"] < 5.0        # nowhere near the 30s timeout
+    finally:
+        b.close(); a.close()
+
+
+# ---------------------------------------------------------------------------
+# dispatcher batch formation: gather into pooled buffers, lease ordering
+# ---------------------------------------------------------------------------
+
+class _StubLease:
+    held = True
+
+    def __init__(self):
+        self.released = False
+        self.release_t = None
+
+    def release(self):
+        self.released = True
+        self.release_t = time.perf_counter()
+
+
+def test_leases_released_after_gather_before_handler():
+    policy = OffloadPolicy(offload_threshold_bytes=1, max_batch=4)
+    leases = [_StubLease() for _ in range(3)]
+    seen = {}
+    done = threading.Event()
+    results = {}
+
+    def batch_fn(rows):
+        # the gather already happened: every lease must be released and the
+        # rows must be *gathered* copies, not the original client views
+        seen["released_at_handler"] = [l.released for l in leases]
+        seen["rows"] = [r.copy() for r in rows]
+        return [r * 2 for r in rows]
+
+    def cb(jid, out):
+        results[jid] = out
+        if len(results) == 3:
+            done.set()
+
+    with RequestDispatcher(policy, max_batch_wait_s=0.2) as d:
+        d.register_handler("op", lambda x: x * 2, batch_fn=batch_fn)
+        sent = [np.full((256,), i, np.float32) for i in range(3)]
+        jids = [d.submit("op", a, mode="pipelined", on_complete=cb,
+                         lease=l) for a, l in zip(sent, leases)]
+        assert done.wait(timeout=10)
+    assert all(seen["released_at_handler"])
+    for a, r in zip(sent, seen["rows"]):
+        np.testing.assert_array_equal(a, r)
+    assert not any(np.may_share_memory(a, r)
+                   for a, r in zip(sent, seen["rows"]))
+    for a, jid in zip(sent, jids):
+        np.testing.assert_array_equal(results[jid], a * 2)
+    assert d.stats.gathered_requests == 3
+    assert d.stats.gathers >= 1
+
+
+def test_gather_pads_heterogeneous_lengths():
+    policy = OffloadPolicy(offload_threshold_bytes=1, max_batch=4)
+    got = {}
+    done = threading.Event()
+
+    def slab_fn(slab, shapes):
+        got["slab"] = slab.copy()
+        got["shapes"] = shapes
+        return [slab[i, :shapes[i][0]] * 1 for i in range(len(shapes))]
+
+    results = {}
+
+    def cb(jid, out):
+        results[jid] = out
+        if len(results) == 2:
+            done.set()
+
+    with RequestDispatcher(policy, max_batch_wait_s=0.2) as d:
+        d.register_handler("op", lambda x: x, slab_fn=slab_fn)
+        a = np.arange(8, dtype=np.int64)
+        b = np.arange(3, dtype=np.int64) + 100
+        d.submit("op", a, mode="pipelined", on_complete=cb)
+        d.submit("op", b, mode="pipelined", on_complete=cb)
+        assert done.wait(timeout=10)
+    slab = got["slab"]
+    assert slab.shape == (2, 8)
+    np.testing.assert_array_equal(slab[0], a)
+    np.testing.assert_array_equal(slab[1, :3], b)
+    np.testing.assert_array_equal(slab[1, 3:], 0)     # zero padding
+
+
+# ---------------------------------------------------------------------------
+# the acceptance assertion: counted copies per request, end to end
+# ---------------------------------------------------------------------------
+
+N_REQ = 6
+PAYLOAD_ELEMS = 64 << 10          # 256 KB float32 rows
+
+
+def _counted_client_entry(name: str, n: int) -> None:
+    client = RemoteDispatcherClient.connect(name, policy=TIGHT, timeout_s=60)
+    sent = [np.full((PAYLOAD_ELEMS,), i, np.float32) for i in range(n)]
+    jids = [client.request("double", a, mode="pipelined") for a in sent]
+    for a, jid in zip(sent, jids):
+        out = client.query(jid, timeout=60)
+        assert out.tobytes() == (a * 2).tobytes()      # byte-identical reply
+    client.close()
+
+
+def test_pipelined_serving_single_copy_per_request_counted():
+    """The tentpole guarantee, verified by engine counters (not timing):
+    the pipelined serving path performs exactly ONE server-side payload
+    memcpy per request (ring slot → pooled batch buffer via the gather)
+    and ZERO receive-side staging copies; replies are packed straight
+    into the tx slot (one fill each)."""
+    eng = get_engine()
+    policy = OffloadPolicy(offload_threshold_bytes=1, poll_interval_us=50.0,
+                           max_batch=4)
+    d = RequestDispatcher(policy, max_batch_wait_s=0.05)
+    d.register_handler("double", lambda x: x * 2,
+                       batch_fn=lambda xs: [x * 2 for x in xs])
+    before = eng.tagged_snapshot()
+    with ServingFabric(d, spec=SMALL, policy=policy,
+                       own_dispatcher=True).start() as fab:
+        proc = mp.get_context("spawn").Process(
+            target=_counted_client_entry, args=(fab.name, N_REQ), daemon=True)
+        proc.start()
+        proc.join(timeout=120)
+        assert proc.exitcode == 0
+        assert fab.reactor.stats.zero_copy_recvs >= N_REQ
+        assert d.stats.gathered_requests == N_REQ
+    after = eng.tagged_snapshot()
+    copies = _tag_delta(before["copies"], after["copies"])
+    nbytes = _tag_delta(before["bytes"], after["bytes"])
+    # exactly one payload memcpy per request: the batch-formation gather
+    assert copies.get("gather", 0) == N_REQ
+    assert nbytes.get("gather", 0) == N_REQ * PAYLOAD_ELEMS * 4
+    # zero receive-side staging copies on the serving path
+    assert copies.get("recv_copy", 0) == 0
+    # each reply packed straight into the destination slot (one fill)
+    assert copies.get("reply_fill", 0) == N_REQ
+    # nothing went through the legacy tree-staging send path server-side
+    assert copies.get("send", 0) == 0
+
+
+def _zc_batching_client_entry(name: str, marker: int, n: int) -> None:
+    client = RemoteDispatcherClient.connect(name, policy=TIGHT, timeout_s=60)
+    while int(client.request("gate", np.zeros(1, np.float32),
+                             mode="sync")[0]) == 0:
+        time.sleep(0.002)
+    sent = [np.full((2048,), marker * 1000 + i, np.float32)
+            for i in range(n)]
+    jids = [client.request("double", a, mode="pipelined") for a in sent]
+    for a, jid in zip(sent, jids):
+        out = client.query(jid, timeout=60)
+        assert out.tobytes() == (a * 2).tobytes()
+    client.close()
+
+
+def test_cross_client_batching_byte_identical_with_leases():
+    """Cross-client batch formation over copy=False leases: requests from
+    two real processes gathered into one batch buffer, replies
+    byte-identical and demuxed to the right client."""
+    gate = [0.0]
+    seen_batches: list[set] = []
+
+    def batch_double(xs):
+        seen_batches.append({int(x[0]) // 1000 for x in xs})
+        time.sleep(0.002)
+        return [x * 2 for x in xs]
+
+    n = 8
+    policy = OffloadPolicy(offload_threshold_bytes=1, poll_interval_us=50.0,
+                           max_batch=2 * n)
+    d = RequestDispatcher(policy, max_batch_wait_s=0.3)
+    d.register_handler("gate", lambda x: np.float32(gate[0]) + x)
+    d.register_handler("double", lambda x: x * 2, batch_fn=batch_double)
+    with ServingFabric(d, spec=SMALL, policy=TIGHT,
+                       own_dispatcher=True).start() as fab:
+        assert fab.reactor.zero_copy                  # leases are the default
+        ctx = mp.get_context("spawn")
+        procs = [ctx.Process(target=_zc_batching_client_entry,
+                             args=(fab.name, m, n), daemon=True)
+                 for m in (1, 2)]
+        for p in procs:
+            p.start()
+        deadline = time.perf_counter() + 120
+        while fab.listener.accepted < 2:
+            assert time.perf_counter() < deadline
+            time.sleep(0.01)
+        gate[0] = 1.0
+        for p in procs:
+            p.join(timeout=120)
+            assert p.exitcode == 0
+        assert fab.reactor.stats.zero_copy_recvs >= 2 * n
+        assert any(len(s) > 1 for s in seen_batches), seen_batches
+        assert d.stats.gathered_requests >= 2 * n
