@@ -84,7 +84,11 @@ def _bench_shm(size: int, n: int, zerocopy: bool) -> float:
     from repro.ipc.transport import TransportSpec
 
     ctx = mp.get_context("spawn")
-    spec = TransportSpec(data_slots=4, data_slot_bytes=size + (1 << 16))
+    # heap disabled: fig2 measures the *slot* transport (fig6 owns the
+    # large-payload heap sweep) — without this, >=8MB points would silently
+    # route via the bulk heap under the default policy threshold
+    spec = TransportSpec(data_slots=4, data_slot_bytes=size + (1 << 16),
+                         heap_extents=0)
     t = ShmTransport.create(spec=spec)
     p = ctx.Process(target=_shm_producer, args=(t.name, size, n), daemon=True)
     p.start()

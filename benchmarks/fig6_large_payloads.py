@@ -1,0 +1,173 @@
+"""Fig. 6 analogue: large-payload sweep — fixed slots vs the bulk heap.
+
+The paper opens with services exchanging *hundreds of megabytes per
+request*; fixed-slot rings make that unsendable (or force gigantic
+arenas).  This sweep sends 1 MB → 256 MB messages producer→consumer
+across a real process boundary three ways:
+
+- ``inline``    — the pre-heap datapath: slots sized to the message
+  (``data_slot_bytes = size``), sync sends.  256 MB of payload needs
+  >0.5 GB of fully-reserved slot arena *per direction*;
+- ``heap``      — 1 MB slots + bulk-heap extents, sync sends (one
+  blocking gather into the extents, ring carries the descriptor);
+- ``heap-pipe`` — same geometry, pipelined sends: the fill is split into
+  ``heap_chunk_bytes`` SG submissions on the channel's work queue, so
+  the *producer's next produce step* overlaps the offloaded copy.  Run
+  at one size: its purpose here is the **counted** submission metrics
+  (doorbells/request with chunked fills) — on a 2-core CI box both the
+  produce pass and the copy are DRAM-bandwidth-bound, so overlapping
+  them cannot beat the sync gather on wall clock (no idle bandwidth to
+  hide the copy in; with real compute upstream, or a DSA doing the
+  copy, the overlap is the win — that is the paper's point).
+
+Each message is *produced* first (one GIL-releasing numpy pass over the
+payload — the stand-in for upstream compute); the reported MB/s is
+end-to-end produced-and-delivered payload.
+
+Every heap row carries **counted** metrics from the process-wide
+CopyEngine — ``copies/req`` (must stay 1.00: the send-side heap fill is
+the only payload memcpy; the consumer reads zero-copy extent views) and
+``doorbells/req`` — which is what ``run.py --check BENCH_IPC.json``
+gates in CI: a datapath change that sneaks in a second copy or makes
+every chunk ring its own doorbell fails the build even if timings are
+too noisy to notice.
+
+Run: ``PYTHONPATH=src python -m benchmarks.run --only fig6``
+"""
+from __future__ import annotations
+
+import multiprocessing as mp
+import time
+
+import numpy as np
+
+
+def fmt_row(name: str, us: float, derived: str) -> str:
+    """Local fmt_row (benchmarks.common imports jax; the spawn children
+    importing this module must stay jax-free)."""
+    return f"{name},{us:.1f},{derived}"
+
+
+SIZES = (1 << 20, 16 << 20, 64 << 20, 256 << 20)
+_TOTAL_TARGET = 1 << 30          # ~bytes moved per (variant, size) point
+_WARMUP = 2
+_CHUNK = 8 << 20                 # pipelined heap fill chunk
+
+
+def _n_msgs(size: int) -> int:
+    return int(np.clip(_TOTAL_TARGET // size, 3, 64))
+
+
+def _specs(size: int):
+    """(inline spec, heap spec) for one sweep point."""
+    from repro.ipc import TransportSpec
+
+    inline = TransportSpec(data_slots=2, data_slot_bytes=size + (1 << 16),
+                           ctrl_slots=4, ctrl_slot_bytes=16 << 10,
+                           heap_extents=0)
+    extent = max(1 << 20, size // 4)
+    # enough extents for the in-flight window (pipelined fills + published
+    # messages + the consumer's held lease) without scatter fallbacks
+    heap = TransportSpec(data_slots=2, data_slot_bytes=1 << 20,
+                         ctrl_slots=4, ctrl_slot_bytes=16 << 10,
+                         heap_extent_bytes=extent,
+                         heap_extents=(size // extent) * 6)
+    return inline, heap
+
+
+def _policy(variant: str):
+    from repro.core.policy import OffloadPolicy
+
+    if variant == "heap-pipe":
+        return OffloadPolicy(mode="pipelined", offload_threshold_bytes=1,
+                             heap_threshold_bytes=1 << 20,
+                             heap_chunk_bytes=_CHUNK, pipeline_depth=2,
+                             poll_interval_us=100.0)
+    # sync/inline: caller-thread copy, no offload round trip
+    return OffloadPolicy(mode="sync", offload_threshold_bytes=1 << 62,
+                         heap_threshold_bytes=1 << 20,
+                         poll_interval_us=100.0)
+
+
+def _consumer_entry(name: str, variant: str, size: int, n: int) -> None:
+    """Child: drain n+warmup messages as zero-copy leases (heap or slot
+    views alike), touching one element per message."""
+    from repro.ipc import ShmTransport
+
+    t = ShmTransport.attach(name, policy=_policy(variant))
+    t.send_msg("ready", timeout_s=120)
+    for _ in range(n + _WARMUP):
+        with t.recv(copy=False, timeout_s=300, hint_nbytes=size) as lease:
+            assert int(lease.tree["a"][-1]) == size // 8 - 1
+    t.send_msg("done", timeout_s=120)
+    t.recv_msg(timeout_s=120)     # hold the mapping until the parent is done
+    t.close()
+
+
+def _bench(variant: str, size: int, n: int):
+    """One sweep point; returns (seconds, counted copies/req,
+    counted doorbells/req, scatter allocs)."""
+    from repro.core.copyengine import get_engine
+    from repro.ipc import ShmTransport
+
+    inline_spec, heap_spec = _specs(size)
+    spec = inline_spec if variant == "inline" else heap_spec
+    t = ShmTransport.create(spec=spec, policy=_policy(variant))
+    ctx = mp.get_context("spawn")
+    p = ctx.Process(target=_consumer_entry, args=(t.name, variant, size, n),
+                    daemon=True)
+    p.start()
+    t.recv_msg(timeout_s=120)
+    base = np.arange(size // 8, dtype=np.int64)
+    # rotate more buffers than pipelined keeps in flight (depth 2 + the
+    # one being filled): producing message k+4 never races the engine's
+    # copy of message k
+    scratch = [np.empty_like(base) for _ in range(4)]
+    for j in range(_WARMUP):
+        np.add(base, 0, out=scratch[j % 4])
+        t.send({"a": scratch[j % 4]})
+    t.data.flush(timeout_s=300)
+    eng = get_engine()
+    before = eng.stats.doorbells
+    tags0 = eng.tagged_snapshot()["copies"]
+    t0 = time.perf_counter()
+    for i in range(n):
+        buf = scratch[i % 4]
+        np.add(base, 0, out=buf)     # produce: upstream compute stand-in
+        t.send({"a": buf}, timeout_s=300)
+    t.data.flush(timeout_s=300)
+    assert t.recv_msg(timeout_s=300) == "done"
+    dt = time.perf_counter() - t0
+    doorbells = eng.stats.doorbells - before
+    tags1 = eng.tagged_snapshot()["copies"]
+    # send-side payload copies: slot path tags "send", heap path
+    # "heap_fill" (the consumer's zero-copy lease adds none)
+    copies = sum(tags1.get(k, 0) - tags0.get(k, 0)
+                 for k in ("send", "heap_fill"))
+    scatter = t.heap.stats.scatter_allocs if t.heap is not None else 0
+    t.send_msg("bye", timeout_s=60)
+    p.join(timeout=120)
+    t.close()
+    return dt, copies / n, doorbells / n, scatter
+
+
+def run():
+    """Yield CSV rows: µs/message + MB/s per (variant, size); heap rows
+    add the counted copies/req + doorbells/req the CI gate checks."""
+    for size in SIZES:
+        n = _n_msgs(size)
+        mb = size >> 20
+        variants = ("inline", "heap")
+        if size == 16 << 20:         # one chunked-offload point: the
+            variants += ("heap-pipe",)   # counted doorbells/req row
+        for variant in variants:
+            dt, copies, doorbells, scatter = _bench(variant, size, n)
+            us = dt / n * 1e6
+            mbps = size * n / dt / (1 << 20)
+            derived = f"{mbps:.0f}MB/s"
+            if variant != "inline":
+                derived += (f";copies/req={copies:.2f}"
+                            f";doorbells/req={doorbells:.2f}")
+                if scatter:
+                    derived += f";scatter={scatter}"
+            yield fmt_row(f"fig6/{variant}/{mb}MB", us, derived)

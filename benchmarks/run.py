@@ -8,6 +8,12 @@ Prints ``name,us_per_call,derived`` CSV rows.  Usage:
 ``--record`` writes every produced row plus host metadata to a JSON file
 (the CI uploads it as an artifact), seeding a benchmark trajectory that
 later PRs can diff against.
+
+``--check BENCH_IPC.json`` turns the snapshot into a gate: the run's
+*counted* metrics — copies/request and doorbells/request, read from the
+CopyEngine's tagged counters, immune to CI timing noise — are compared
+against the committed snapshot and any regression exits nonzero, so CI
+fails instead of silently uploading a worse artifact.
 """
 from __future__ import annotations
 
@@ -25,6 +31,7 @@ from benchmarks import (
     fig3_polling,
     fig4_buffer_reuse,
     fig5_vmem_injection,
+    fig6_large_payloads,
     fig9_latency_model,
     fig10_modes,
     fig11_batch_sweep,
@@ -42,6 +49,7 @@ MODULES = {
     "fig3": fig3_polling,
     "fig4": fig4_buffer_reuse,
     "fig5": fig5_vmem_injection,
+    "fig6": fig6_large_payloads,
     "fig9": fig9_latency_model,
     "fig10": fig10_modes,
     "fig11": fig11_batch_sweep,
@@ -50,6 +58,74 @@ MODULES = {
     "fig13copy": fig13_copy_path,
     "fig14": fig14_multiclient,
 }
+
+# counted (non-timing) metrics gated by ``--check``: metric token ->
+# (multiplicative slack, additive slack).  copies/request is exact by
+# construction, so any increase is a datapath regression.  Doorbell
+# *coalescing* depends on how fast the engine drains relative to the
+# producer, so the legitimate range is [~0, submissions/request] — the
+# additive slack of 3.0 covers the worst legitimate case at the gated
+# fig6 point (2 fill chunks + 1 publish per message, one ring each);
+# only a notify-happier submission path (e.g. ringing per SG entry or
+# per park retry) can exceed it.
+CHECKED_METRICS = {
+    "copies/req": (1.0, 0.01),
+    "doorbells/req": (1.0, 3.0),
+}
+
+
+def _parse_counted(derived: str) -> dict:
+    """Extract the counted ``key=value`` metric tokens from a derived
+    field (e.g. ``"812MB/s;copies/req=1.00;doorbells/req=0.40"``)."""
+    out = {}
+    for tok in derived.split(";"):
+        if "=" not in tok:
+            continue
+        key, _, val = tok.partition("=")
+        if key in CHECKED_METRICS:
+            try:
+                out[key] = float(val)
+            except ValueError:
+                pass
+    return out
+
+
+def _check(path: str, rows: list[str]) -> list[str]:
+    """Compare this run's counted metrics against the committed snapshot;
+    returns human-readable regression strings (empty = pass).  Only rows
+    present in BOTH are compared, so adding benches never breaks the
+    gate — regressing copies/request or doorbells does."""
+    with open(path) as f:
+        snapshot = json.load(f)
+    baseline = {}
+    for row in snapshot.get("rows", []):
+        counted = _parse_counted(row.get("derived") or "")
+        if counted:
+            baseline[row["bench"]] = counted
+    problems, compared = [], 0
+    for row in rows:
+        name, _, derived = (row.split(",", 2) + ["", ""])[:3]
+        counted = _parse_counted(derived)
+        base = baseline.get(name)
+        if not counted or base is None:
+            continue
+        for key, new_val in counted.items():
+            if key not in base:
+                continue
+            compared += 1
+            factor, slack = CHECKED_METRICS[key]
+            limit = base[key] * factor + slack
+            if new_val > limit:
+                problems.append(
+                    f"{name}: {key}={new_val:g} exceeds baseline "
+                    f"{base[key]:g} (limit {limit:g})")
+    print(f"# --check: compared {compared} counted metrics against {path}",
+          file=sys.stderr)
+    if compared == 0:
+        problems.append(
+            f"--check found no overlapping counted metrics in {path}; "
+            f"refusing to pass vacuously (run with --record first?)")
+    return problems
 
 
 def _record(path: str, rows: list[str], failures: list[str]) -> None:
@@ -91,6 +167,11 @@ def main() -> None:
     ap.add_argument("--record", metavar="PATH", default=None,
                     help="also write the rows as a JSON perf snapshot "
                          "(e.g. BENCH_IPC.json; uploaded as a CI artifact)")
+    ap.add_argument("--check", metavar="PATH", default=None,
+                    help="compare this run's COUNTED metrics (copies/req, "
+                         "doorbells/req) against a recorded snapshot and "
+                         "exit nonzero on regression — the non-timing CI "
+                         "gate (e.g. --only fig6 --check BENCH_IPC.json)")
     args = ap.parse_args()
     names = args.only.split(",") if args.only else list(MODULES)
     unknown = [n for n in names if n not in MODULES]
@@ -115,8 +196,15 @@ def main() -> None:
             failures.append(name)
             print(f"{name},ERROR,", flush=True)
             traceback.print_exc(file=sys.stderr)
+    # check BEFORE record: --check gates against the *committed* snapshot,
+    # which --record (same path in CI) is about to overwrite
+    problems = _check(args.check, collected) if args.check else []
     if args.record:
         _record(args.record, collected, failures)
+    for p in problems:
+        print(f"# REGRESSION {p}", file=sys.stderr)
+    if problems:
+        raise SystemExit(2)
     if failures:
         raise SystemExit(1)
 

@@ -163,25 +163,61 @@ class SGList:
         return len(self.entries)
 
 
+def split_sg(sg: SGList, chunk_bytes: int) -> list[SGList]:
+    """Split one SG list into <= ``chunk_bytes`` chunks for pipelined
+    submission (the heap fill path: each chunk is its own descriptor on
+    the same work queue, so FIFO holds while completion granularity and
+    doorbell batching stay fine-grained on multi-hundred-MB payloads).
+
+    Entries must be flat same-length uint8 views (how the heap fill builds
+    them); a logical copy split across chunks is *accounted* once by the
+    submitter via ``count_copies``, not once per chunk.
+    """
+    if chunk_bytes <= 0:
+        raise ValueError("chunk_bytes must be positive")
+    chunks: list[SGList] = [SGList()]
+    for e in sg.entries:
+        if e.src.dtype != np.uint8 or e.src.ndim != 1:
+            raise ValueError("split_sg requires flat uint8 entries")
+        off = 0
+        while off < e.nbytes:
+            cur = chunks[-1]
+            take = min(chunk_bytes - cur.nbytes, e.nbytes - off)
+            if take <= 0:
+                chunks.append(SGList())
+                continue
+            cur.entries.append(SGEntry(e.src[off:off + take],
+                                       e.dst[off:off + take], take))
+            cur.nbytes += take
+            off += take
+    return [c for c in chunks if c.entries]
+
+
 class Descriptor:
     """One submission: an SG list (given up front or built late by
     ``build`` on the engine thread — e.g. after a blocking slot acquire),
     an optional ``complete`` callback (publish/doorbell; its return value
     becomes the job result), an ``injection`` hint, and a path ``tag``."""
 
-    __slots__ = ("sg", "build", "complete", "nbytes", "injection", "tag")
+    __slots__ = ("sg", "build", "complete", "nbytes", "injection", "tag",
+                 "count_copies")
 
     def __init__(self, sg: Optional[SGList] = None,
                  build: Optional[Callable[[], Optional[SGList]]] = None,
                  complete: Optional[Callable[[Optional[SGList]], Any]] = None,
                  nbytes: int = 0, injection: Optional[bool] = None,
-                 tag: str = "copy"):
+                 tag: str = "copy", count_copies: Optional[int] = None):
         self.sg = sg
         self.build = build
         self.complete = complete
         self.nbytes = nbytes
         self.injection = injection
         self.tag = tag
+        # logical copies this descriptor represents (default: one per SG
+        # entry).  Chunked submissions — one leaf split over many entries/
+        # descriptors — pass the leaf count here so copies-per-request
+        # stays a *logical* counted metric (bytes stay exact either way).
+        self.count_copies = count_copies
 
 
 # ---------------------------------------------------------------------------
@@ -314,15 +350,16 @@ class CopyEngine:
             np.copyto(dst, src.reshape(-1).view(np.uint8))
 
     def run_sg(self, sg: SGList, injection: Optional[bool] = None,
-               tag: str = "copy") -> None:
+               tag: str = "copy", count_copies: Optional[int] = None) -> None:
         """Execute an SG list on the *caller's* thread (inline/below-
         threshold paths), with the same injection selection and counting
-        as an offloaded descriptor."""
+        as an offloaded descriptor.  ``count_copies`` overrides the
+        logical copy count (chunked fills: one leaf, many entries)."""
         inject = (self.policy.injection_enabled() if injection is None
                   else injection)
         for e in sg.entries:
             self._copy_entry(e, streaming=not inject)
-        self._account(sg.entries, sg.nbytes, inject, tag)
+        self._account(sg.entries, sg.nbytes, inject, tag, count_copies)
 
     def count(self, tag: str, copies: int, nbytes: int,
               injection: bool = True) -> None:
@@ -339,16 +376,18 @@ class CopyEngine:
             self.stats.tagged[tag] += copies
             self.stats.tagged_bytes[tag] += nbytes
 
-    def _account(self, entries, nbytes: int, inject: bool, tag: str) -> None:
+    def _account(self, entries, nbytes: int, inject: bool, tag: str,
+                 count: Optional[int] = None) -> None:
+        count = len(entries) if count is None else count
         with self._cv:
             self.stats.sg_entries += len(entries)
-            self.stats.copies += len(entries)
+            self.stats.copies += count
             self.stats.bytes_copied += nbytes
             if inject:
-                self.stats.temporal += len(entries)
+                self.stats.temporal += count
             else:
-                self.stats.streaming += len(entries)
-            self.stats.tagged[tag] += len(entries)
+                self.stats.streaming += count
+            self.stats.tagged[tag] += count
             self.stats.tagged_bytes[tag] += nbytes
 
     # -- submission -----------------------------------------------------------
@@ -395,7 +434,8 @@ class CopyEngine:
                           if descr.injection is None else descr.injection)
                 for e in sg.entries:
                     self._copy_entry(e, streaming=not inject)
-                self._account(sg.entries, sg.nbytes, inject, descr.tag)
+                self._account(sg.entries, sg.nbytes, inject, descr.tag,
+                              descr.count_copies)
             value = descr.complete(sg) if descr.complete is not None else None
             with self._cv:
                 self.stats.completed += 1
@@ -406,6 +446,11 @@ class CopyEngine:
             with self._cv:
                 self.stats.failed += 1
             job._fail(e)
+        # drop the descriptor's buffer exports now: an idle worker's loop
+        # locals would otherwise pin shared-memory views (slot writers,
+        # heap extents) until the next submission, turning transport close
+        # into a BufferError
+        descr.sg = descr.build = descr.complete = None
         return None
 
     def _pop_ready(self) -> Optional[tuple]:

@@ -259,11 +259,24 @@ class RequestDispatcher:
                 self._execute([req])
 
     # -- batch formation: slot views → pooled batch buffer ---------------------
+    #: ceiling on one pooled gather slab: with the bulk-heap datapath a
+    #: "row" can be hundreds of MB, and padding every row of a batch to the
+    #: largest one would multiply that by max_batch — beyond this the batch
+    #: falls back to per-row handling on the leased views (still zero
+    #: receive copies; just no slab)
+    GATHER_SLAB_MAX_BYTES = 256 << 20
+
     def _gatherable(self, batch: list[Request]) -> bool:
         datas = [r.data for r in batch]
-        return (all(isinstance(d, np.ndarray) and d.ndim >= 1 for d in datas)
+        if not (all(isinstance(d, np.ndarray) and d.ndim >= 1 for d in datas)
                 and len({d.dtype for d in datas}) == 1
-                and len({d.ndim for d in datas}) == 1)
+                and len({d.ndim for d in datas}) == 1):
+            return False
+        ndim = datas[0].ndim
+        maxdims = tuple(max(d.shape[k] for d in datas) for k in range(ndim))
+        slab_bytes = (len(datas) * int(np.prod(maxdims))
+                      * datas[0].dtype.itemsize)
+        return slab_bytes <= self.GATHER_SLAB_MAX_BYTES
 
     def _gather(self, batch: list[Request]):
         """One SG gather per batch: copy every request's payload view into

@@ -52,6 +52,17 @@ class OffloadPolicy:
     # False restores the copy-out receive path (the pre-CopyEngine
     # behaviour, kept for fig13_copy_path A/B measurement)
     zero_copy_serving: bool = True
+    # large-message datapath (ipc/heap.py): a payload >= this goes through
+    # the connection's bulk heap instead of a ring slot whenever a heap is
+    # attached (payloads larger than the slot *must*; smaller ones may,
+    # keeping fat streams out of the slot arena).  The ring then carries
+    # only the compact extent descriptor.
+    heap_threshold_bytes: int = 8 << 20
+    # chunk size for offloaded heap fills: async/pipelined sends split the
+    # fill into chunk-sized SG submissions on the channel's work queue so
+    # the copy of message k+1 overlaps the peer's drain of message k and a
+    # single fat fill cannot monopolize an engine worker between doorbells
+    heap_chunk_bytes: int = 8 << 20
 
     def should_offload(self, nbytes: int) -> bool:
         if self.device == Device.INLINE:

@@ -8,7 +8,10 @@ The paper's runtime, made an actual inter-process transport (see
 - :mod:`repro.ipc.ring`      — fixed-slot SPSC rings (queue pairs, §IV-C)
 - :mod:`repro.ipc.channel`   — typed numpy-pytree channels, sync/async/
   pipelined send modes with hybrid-polling completion
-- :mod:`repro.ipc.transport` — one arena + four rings = one connection
+- :mod:`repro.ipc.heap`      — per-connection bulk heap: extent allocator
+  for the large-message datapath (descriptor-passing over shared memory)
+- :mod:`repro.ipc.transport` — one arena + four rings (+ heap segment)
+  = one connection
 - :mod:`repro.ipc.listener`  — multi-client rendezvous: registration
   mailbox + accept loop minting per-client transports
 - :mod:`repro.ipc.reactor`   — one server thread multiplexing N client
@@ -28,6 +31,7 @@ from repro.ipc.channel import (
     TxSlot,
     tree_nbytes,
 )
+from repro.ipc.heap import BulkHeap, HeapExhausted, HeapSpec
 from repro.ipc.transport import ShmTransport, TransportSpec
 from repro.ipc.listener import Listener, connect
 from repro.ipc.reactor import Connection, Reactor
@@ -41,8 +45,9 @@ from repro.ipc.worker import (
 )
 
 __all__ = [
-    "ChannelClosed", "ChannelStats", "Connection", "ControlChannel",
-    "DataChannel", "DispatcherServer", "Listener", "ProducerHandle",
+    "BulkHeap", "ChannelClosed", "ChannelStats", "Connection",
+    "ControlChannel", "DataChannel", "DispatcherServer", "HeapExhausted",
+    "HeapSpec", "Listener", "ProducerHandle",
     "Reactor", "RecvLease", "RemoteDispatcherClient", "Ring", "RingSpec",
     "SendHandle", "SeqLock", "ServingFabric", "SharedMemoryArena",
     "ShmMutex", "ShmTransport", "SlotReader", "SlotWriter", "TransportSpec",

@@ -39,6 +39,19 @@ the caller claims the destination slot first and packs the message
 directly into it (e.g. a serving reply written straight into the
 client's tx slot), eliminating the staging copy a ``send`` of an
 already-materialized tree would add.
+
+The **large-message datapath**: when the transport attached a
+:class:`~repro.ipc.heap.BulkHeap`, payloads at/over
+``policy.heap_threshold_bytes`` (and anything that would not fit a slot)
+are written into heap *extents* instead and the ring slot carries only
+the compact extent descriptor (``FLAG_HEAP``).  Sync mode fills the
+extents with one blocking gather; async/pipelined split the fill into
+``policy.heap_chunk_bytes`` SG submissions on the channel's work queue,
+so the copy of message k+1 overlaps the peer's drain of message k.
+Receivers get zero-copy views into the extents (scatter allocations
+reassemble only boundary-straddling leaves, counted), and the *lease
+release frees the extents* — receiver-driven reclamation, with a held
+lease acting as byte-granular backpressure on the sender's allocator.
 """
 from __future__ import annotations
 
@@ -59,16 +72,28 @@ from repro.core.copyengine import (
     SGList,
     WouldBlock,
     get_engine,
+    split_sg,
 )
 from repro.core.latency import LatencyModel
 from repro.core.policy import ExecutionMode, OffloadPolicy
 from repro.core.queuepair import drain_to_depth
-from repro.ipc.ring import ChannelClosed, Ring, SlotReader, SlotWriter, _align
+from repro.ipc.heap import MAX_SEGMENTS, BulkHeap, HeapExhausted
+from repro.ipc.ring import (
+    FLAG_HEAP,
+    ChannelClosed,
+    Ring,
+    SlotReader,
+    SlotWriter,
+    _align,
+)
 
 from dataclasses import dataclass
 
 _U32 = struct.Struct("<I")
 _DESCR_CACHE_MAX = 64
+# header key carrying the heap scatter list on the wire (stripped before
+# the header dict reaches the application)
+_HX_KEY = "__rocket_hx__"
 
 
 # ---------------------------------------------------------------------------
@@ -153,6 +178,96 @@ def _unpack(descr, payload: memoryview, copy: bool):
     return arr.copy() if copy else arr
 
 
+def _heap_fill_sg(tree, descr, heap: BulkHeap, direction: int, segments,
+                  total_nbytes: int, sg: SGList) -> None:
+    """One flat-u8 SG entry per (leaf, heap piece): leaf bytes → the heap
+    range(s) its virtual placement resolves to.  Contiguous allocations
+    yield exactly one entry per leaf; scatter allocations split leaves
+    that straddle a segment boundary (still one *logical* copy — the
+    submitter accounts with ``count_copies``)."""
+    if isinstance(descr, dict):
+        for k, d in descr.items():
+            _heap_fill_sg(tree[k], d, heap, direction, segments,
+                          total_nbytes, sg)
+        return
+    if isinstance(descr, (list, tuple)):
+        for v, d in zip(tree, descr):
+            _heap_fill_sg(v, d, heap, direction, segments, total_nbytes, sg)
+        return
+    arr = np.asarray(tree)
+    if not arr.flags["C_CONTIGUOUS"]:
+        arr = np.ascontiguousarray(arr)
+    src = arr.reshape(-1).view(np.uint8)
+    off = 0
+    for piece in heap.resolve(direction, segments, descr.offset, arr.nbytes,
+                              total_nbytes):
+        sg.add_array(src[off:off + piece.nbytes], piece)
+        off += piece.nbytes
+
+
+def _unpack_heap(descr, heap: BulkHeap, direction: int, segments,
+                 total_nbytes: int, copy: bool):
+    """Rebuild a pytree from heap extents.  ``copy=False`` returns
+    zero-copy views for every leaf that lies inside one segment and
+    reassembles (one counted copy) only boundary-straddling leaves;
+    returns ``(tree, reassembled_copies, reassembled_bytes)``."""
+    counters = [0, 0]
+
+    def walk(d):
+        if isinstance(d, dict):
+            return {k: walk(v) for k, v in d.items()}
+        if isinstance(d, (list, tuple)):
+            out = [walk(v) for v in d]
+            return out if isinstance(d, list) else tuple(out)
+        dtype = np.dtype(d.dtype)
+        count = int(np.prod(d.shape)) if d.shape else 1
+        nbytes = count * dtype.itemsize
+        pieces = heap.resolve(direction, segments, d.offset, nbytes,
+                              total_nbytes)
+        if len(pieces) == 1 and not copy:
+            return np.frombuffer(pieces[0], dtype,
+                                 count=count).reshape(d.shape)
+        buf = np.empty(count, dtype)
+        u8, off = buf.view(np.uint8), 0
+        for p in pieces:
+            u8[off:off + p.nbytes] = p
+            off += p.nbytes
+        if not copy:                   # straddler reassembled under a lease
+            counters[0] += 1
+            counters[1] += nbytes
+        return buf.reshape(d.shape)
+
+    return walk(descr), counters[0], counters[1]
+
+
+def _writable_heap_tree(descr, heap: BulkHeap, direction: int, segments,
+                        total_nbytes: int):
+    """Reserve-then-fill layout over heap extents: leaves contiguous in
+    one segment become writable views straight into the heap; straddlers
+    get a staging array copied in at publish.  Returns ``(tree, staged)``
+    with ``staged`` a list of ``(array, leaf_descr)`` pairs."""
+    staged: list = []
+
+    def walk(d):
+        if isinstance(d, dict):
+            return {k: walk(v) for k, v in d.items()}
+        if isinstance(d, (list, tuple)):
+            out = [walk(v) for v in d]
+            return out if isinstance(d, list) else tuple(out)
+        dtype = np.dtype(d.dtype)
+        count = int(np.prod(d.shape)) if d.shape else 1
+        pieces = heap.resolve(direction, segments, d.offset,
+                              count * dtype.itemsize, total_nbytes)
+        if len(pieces) == 1:
+            return np.frombuffer(pieces[0], dtype,
+                                 count=count).reshape(d.shape)
+        buf = np.empty(d.shape, dtype)
+        staged.append((buf, d))
+        return buf
+
+    return walk(descr), staged
+
+
 def _count_leaves(descr) -> int:
     if isinstance(descr, dict):
         return sum(_count_leaves(d) for d in descr.values())
@@ -201,26 +316,43 @@ class SendHandle:
 
 
 class RecvLease:
-    """Zero-copy receive: tree views stay valid until ``release``."""
+    """Zero-copy receive: tree views stay valid until ``release``.
 
-    def __init__(self, tree, header: dict, reader: Optional[SlotReader]):
+    A lease over a heap-routed message additionally owns its extents:
+    ``release`` frees them back to the sender's allocator (``on_release``)
+    — the *receiver-driven* reclamation that makes heap lifetime equal
+    lease lifetime, and a held lease the sender's backpressure."""
+
+    def __init__(self, tree, header: dict, reader: Optional[SlotReader],
+                 on_release=None):
         self.tree = tree
         self.header = header
         self._reader = reader
+        self._on_release = on_release
 
     @property
     def held(self) -> bool:
-        """True while the lease still occupies its ring slot (a lease made
-        from an already-copied message reports False)."""
-        return self._reader is not None
+        """True while the lease still occupies its ring slot or heap
+        extents (a lease made from an already-copied message reports
+        False)."""
+        return self._reader is not None or self._on_release is not None
 
     def release(self) -> None:
-        """Recycle the slot; the leased views become invalid."""
+        """Recycle the slot and free any heap extents; the leased views
+        become invalid."""
+        released = False
         if self._reader is not None:
             self._reader.release()
             self._reader = None
-            # the views are invalid once the slot is recycled; drop them so
-            # they can't pin the arena mapping open (BufferError on close)
+            released = True
+        if self._on_release is not None:
+            cb, self._on_release = self._on_release, None
+            cb()
+            released = True
+        if released:
+            # the views are invalid once the slot/extents are recycled;
+            # drop them so they can't pin the arena mapping open
+            # (BufferError on close)
             self.tree = None
 
     def __enter__(self):
@@ -231,28 +363,76 @@ class RecvLease:
 
 
 class TxSlot:
-    """A reserved tx slot with typed writable views (reserve-then-fill).
+    """A reserved tx destination with typed writable views
+    (reserve-then-fill).
 
-    ``tree`` mirrors the template pytree with numpy views *into the slot
-    payload*; write results straight into them, then :meth:`publish`.
-    :meth:`abort` gives an unfillable slot back as a skip sentinel the
-    receive path ignores.  As a context manager it publishes on clean
+    ``tree`` mirrors the template pytree with numpy views *into the
+    destination* — a ring slot's payload region, or (for large templates)
+    bulk-heap extents; write results straight into them, then
+    :meth:`publish`.  :meth:`abort` gives an unfillable reservation back
+    (slot path: a skip sentinel the receive path ignores; heap path: the
+    extents return to FREE — no ring slot was claimed yet, so there is
+    nothing to sentinel).  As a context manager it publishes on clean
     exit and aborts if the block raised.
     """
 
-    def __init__(self, tree, writer: SlotWriter, meta: bytes, nbytes: int,
-                 channel: "DataChannel"):
+    def __init__(self, tree, writer: Optional[SlotWriter], meta: bytes,
+                 nbytes: int, channel: "DataChannel",
+                 heap_state: Optional[dict] = None):
         self.tree = tree
         self._writer = writer
         self._meta = meta
         self._nbytes = nbytes
         self._channel = channel
+        self._heap = heap_state
+        self._done = False
+
+    def _publish_heap(self) -> None:
+        """Stage straddling leaves into their extents, then claim a ring
+        slot for the compact extent descriptor and ring the doorbell.  Any
+        failure (meta overflow, ring acquire timeout) frees the extents —
+        ownership only transfers on a successful publish."""
+        hs, ch = self._heap, self._channel
+        heap = ch._heap
+        try:
+            if hs["staged"]:
+                sg = SGList()
+                for buf, d in hs["staged"]:
+                    src = np.ascontiguousarray(buf).reshape(-1).view(np.uint8)
+                    off = 0
+                    for piece in heap.resolve(heap.tx_dir, hs["segments"],
+                                              d.offset, src.nbytes,
+                                              self._nbytes):
+                        sg.add_array(src[off:off + piece.nbytes], piece)
+                        off += piece.nbytes
+                ch._engine.run_sg(sg, injection=ch.policy.injection_enabled(),
+                                  tag="heap_stage",
+                                  count_copies=len(hs["staged"]))
+            meta = ch._meta_bytes(hs["descr_bytes"], hs["header"],
+                                  hs["segments"])
+            with ch._send_lock:
+                w = ch.tx.acquire(hs["timeout_s"])
+        except BaseException:
+            heap.free(hs["segments"], heap.tx_dir)
+            raise
+        w.meta[:len(meta)] = meta
+        w.publish(self._nbytes, len(meta), flags=FLAG_HEAP)
+        ch.stats.sends += 1
+        ch.stats.inline += 1
+        ch.stats.heap_sends += 1
+        ch.stats.bytes_sent += self._nbytes
 
     def publish(self) -> None:
         """Write the (cached) descriptor meta and ring the doorbell."""
-        if self._writer is None:
+        if self._done:
             return
-        w, ch = self._writer, self._channel
+        self._done = True
+        ch = self._channel
+        if self._heap is not None:
+            self._publish_heap()
+            self.tree = None
+            return
+        w = self._writer
         self._writer = None
         w.meta[:len(self._meta)] = self._meta
         w.publish(self._nbytes, len(self._meta))
@@ -262,11 +442,17 @@ class TxSlot:
         self.tree = None
 
     def abort(self) -> None:
-        """Give the slot back unfilled (publishes the skip sentinel)."""
-        if self._writer is None:
+        """Give the reservation back unfilled (slot: skip sentinel; heap:
+        extents freed)."""
+        if self._done:
             return
-        self._writer.abort()
-        self._writer = None
+        self._done = True
+        if self._heap is not None:
+            ch = self._channel
+            ch._heap.free(self._heap["segments"], ch._heap.tx_dir)
+        else:
+            self._writer.abort()
+            self._writer = None
         self.tree = None
 
     def __enter__(self):
@@ -289,6 +475,9 @@ class ChannelStats(HybridPollStats):
     bytes_recv: int = 0
     descr_cache_hits: int = 0
     descr_cache_misses: int = 0
+    heap_sends: int = 0          # messages routed through bulk-heap extents
+    heap_recvs: int = 0
+    heap_reassembles: int = 0    # straddling leaves rebuilt with a copy
 
 
 # ---------------------------------------------------------------------------
@@ -302,13 +491,15 @@ class DataChannel:
                  policy: Optional[OffloadPolicy] = None,
                  latency: Optional[LatencyModel] = None,
                  copy_engine: Optional[CopyEngine] = None,
-                 descr_cache: bool = True):
+                 descr_cache: bool = True,
+                 heap: Optional[BulkHeap] = None):
         self.tx = tx
         self.rx = rx
         self.policy = policy or OffloadPolicy()
         self.latency = latency or LatencyModel()
         self.stats = ChannelStats()
         self._engine = copy_engine or get_engine()
+        self._heap = heap
         self._send_lock = threading.Lock()      # slot-order serialization
         self._inflight: deque[SendHandle] = deque()
         self._inflight_lock = threading.Lock()
@@ -316,11 +507,24 @@ class DataChannel:
         self._tx_descr_cache: OrderedDict = OrderedDict()
         self._rx_descr_cache: OrderedDict = OrderedDict()
 
+    def bind_heap(self, heap: Optional[BulkHeap]) -> None:
+        """Attach the connection's bulk heap: payloads at/over
+        ``policy.heap_threshold_bytes`` (and anything over the slot
+        capacity) are routed through heap extents from now on."""
+        self._heap = heap
+
+    def _use_heap(self, nbytes: int) -> bool:
+        """Inline-slot vs heap path selection (OffloadPolicy threshold)."""
+        if self._heap is None or not self._heap.spec.enabled:
+            return False
+        return (nbytes > self.tx.spec.slot_bytes
+                or nbytes >= self.policy.heap_threshold_bytes)
+
     # -- wire encoding (descriptor cache) -------------------------------------
-    def _encode(self, tree, header: Optional[dict]):
-        """Build (meta bytes, descriptor, payload nbytes); the descriptor
-        and its pickle are cached by structural signature, so steady-state
-        sends pickle only the small header."""
+    def _encode_descr(self, tree):
+        """Build (descriptor, descriptor bytes, payload nbytes); the
+        descriptor and its pickle are cached by structural signature, so
+        steady-state sends pickle only the small header."""
         sig: Optional[tuple] = None
         hit = None
         if self._cache_enabled:
@@ -343,19 +547,24 @@ class DataChannel:
                 self._tx_descr_cache[sig] = (descr, descr_bytes, nbytes)
                 while len(self._tx_descr_cache) > _DESCR_CACHE_MAX:
                     self._tx_descr_cache.popitem(last=False)
+        return descr, descr_bytes, nbytes
+
+    def _meta_bytes(self, descr_bytes: bytes, header: Optional[dict],
+                    segments=None) -> bytes:
+        """Assemble wire meta ``[u32 len | descr pickle | header pickle]``;
+        a heap message rides its scatter list inside the header under a
+        reserved key (stripped again on receive)."""
+        if segments is not None:
+            header = dict(header or {})
+            header[_HX_KEY] = tuple(segments)
         header_bytes = pickle.dumps(header or {},
                                     protocol=pickle.HIGHEST_PROTOCOL)
         meta = _U32.pack(len(descr_bytes)) + descr_bytes + header_bytes
-        if nbytes > self.tx.spec.slot_bytes:
-            raise ValueError(
-                f"message of {nbytes} B exceeds slot capacity "
-                f"{self.tx.spec.slot_bytes} B — create the transport with a "
-                f"larger data_slot_bytes")
         if len(meta) > self.tx.spec.meta_bytes:
             raise ValueError(
                 f"meta of {len(meta)} B exceeds meta capacity "
                 f"{self.tx.spec.meta_bytes} B")
-        return meta, descr, nbytes
+        return meta
 
     def _decode_meta(self, raw: bytes):
         """(header, descriptor) from wire meta; descriptors are cached by
@@ -412,15 +621,203 @@ class DataChannel:
         sg.ctx = writer
         return sg
 
+    # -- heap (large-message) send path ---------------------------------------
+    def _heap_alloc_blocking(self, nbytes: int, timeout_s: float):
+        """Blocking extent allocation that converts "peer died while we
+        waited" into the channel's usual :class:`ChannelClosed`."""
+        try:
+            return self._heap.alloc(
+                nbytes, timeout_s=timeout_s,
+                poll_interval_s=self.policy.poll_interval_us * 1e-6,
+                abort_check=lambda: self.tx.peer_closed)
+        except HeapExhausted as e:
+            raise ChannelClosed(str(e)) from None
+
+    def _validate_heap_meta(self, descr_bytes: bytes,
+                            header: Optional[dict]) -> None:
+        """Fail a heap send *before* any copy/alloc when even a
+        worst-case scatter list cannot fit the ring's meta region."""
+        cap = self._heap.spec.dir_bytes
+        self._meta_bytes(descr_bytes, header, ((cap, cap),) * MAX_SEGMENTS)
+
+    def _send_heap_inline(self, tree, descr, descr_bytes, header,
+                          nbytes: int, timeout_s: float) -> SendHandle:
+        """Sync/below-offload heap send: one blocking gather into the
+        extents on the caller's thread, then publish the descriptor."""
+        self.stats.inline += 1
+        self.flush(timeout_s)      # FIFO: inline never overtakes offloads
+        segs = self._heap_alloc_blocking(nbytes, timeout_s)
+        heap = self._heap
+        try:
+            sg = SGList()
+            _heap_fill_sg(tree, descr, heap, heap.tx_dir, segs, nbytes, sg)
+            self._engine.run_sg(sg, injection=self.policy.injection_enabled(),
+                                tag="heap_fill",
+                                count_copies=_count_leaves(descr))
+            meta = self._meta_bytes(descr_bytes, header, segs)
+            with self._send_lock:
+                w = self.tx.acquire(timeout_s)
+        except BaseException:
+            heap.free(segs, heap.tx_dir)   # ownership transfers at publish
+            raise
+        w.meta[:len(meta)] = meta
+        w.publish(nbytes, len(meta), flags=FLAG_HEAP)
+        return SendHandle(self, nbytes)
+
+    def _send_heap_offloaded(self, tree, descr, descr_bytes, header,
+                             nbytes: int, timeout_s: float) -> SendHandle:
+        """Async/pipelined heap send: the fill is split into chunk-sized
+        SG submissions on this channel's work queue (copy of message k+1
+        overlaps the peer's drain of message k), the last submission
+        claims a ring slot and publishes the extent descriptor."""
+        self.stats.offloaded += 1
+        heap = self._heap
+        n_leaves = _count_leaves(descr)
+        chunk_bytes = max(1, self.policy.heap_chunk_bytes)
+        n_chunks = max(1, -(-nbytes // chunk_bytes))
+        chunk_jobs: list[CopyJob] = []
+        state: dict = {"segs": None, "chunks": None, "err": None,
+                       "alloc_deadline": None, "ring_deadline": None}
+
+        def fail(e: BaseException):
+            state["err"] = e
+            raise e
+
+        def build_chunk(i: int) -> SGList:
+            if state["err"] is not None:
+                raise state["err"]
+            if i == 0 and state["chunks"] is None:
+                if state["alloc_deadline"] is None:
+                    state["alloc_deadline"] = time.perf_counter() + timeout_s
+                segs = heap.try_alloc(nbytes)
+                if segs is None:
+                    if self.tx.peer_closed:
+                        fail(ChannelClosed(
+                            "peer endpoint closed the transport"))
+                    if time.perf_counter() > state["alloc_deadline"]:
+                        fail(TimeoutError(
+                            f"bulk heap exhausted for {timeout_s}s "
+                            f"(receiver holding leases?)"))
+                    raise WouldBlock(self.policy.poll_interval_us * 1e-6)
+                try:
+                    sg = SGList()
+                    _heap_fill_sg(tree, descr, heap, heap.tx_dir, segs,
+                                  nbytes, sg)
+                    state["chunks"] = split_sg(sg, chunk_bytes)
+                    state["segs"] = segs
+                except BaseException as e:
+                    heap.free(segs, heap.tx_dir)
+                    fail(e)
+            chunks = state["chunks"]
+            if chunks is None:
+                raise RuntimeError("heap fill aborted (earlier chunk failed)")
+            return chunks[i] if i < len(chunks) else SGList()
+
+        def build_final() -> SGList:
+            if state["err"] is not None:
+                raise state["err"]
+            if state["segs"] is None:
+                raise RuntimeError("heap fill aborted (earlier chunk failed)")
+            # chunk jobs are fire-and-forget, so a copy failure on the
+            # engine thread (not routed through fail()) must be surfaced
+            # HERE: publishing after a failed chunk would hand the
+            # receiver a payload with an uncopied hole as a success
+            for j in chunk_jobs:
+                if j.failed():
+                    heap.free(state["segs"], heap.tx_dir)
+                    state["segs"] = None
+                    j.wait(0)              # re-raises the chunk's exception
+            if state["ring_deadline"] is None:
+                state["ring_deadline"] = time.perf_counter() + timeout_s
+            with self._send_lock:
+                writer = self.tx.try_acquire()
+            if writer is None:
+                if self.tx.peer_closed:
+                    heap.free(state["segs"], heap.tx_dir)
+                    fail(ChannelClosed(
+                        "peer endpoint closed the transport"))
+                if time.perf_counter() > state["ring_deadline"]:
+                    heap.free(state["segs"], heap.tx_dir)
+                    fail(TimeoutError(
+                        f"ring full for {timeout_s}s (consumer stalled?)"))
+                raise WouldBlock(self.policy.poll_interval_us * 1e-6)
+            sg = SGList()
+            sg.ctx = writer
+            return sg
+
+        def complete_final(sg: SGList):
+            writer: SlotWriter = sg.ctx
+            try:
+                meta = self._meta_bytes(descr_bytes, header, state["segs"])
+            except BaseException:
+                heap.free(state["segs"], heap.tx_dir)
+                writer.abort()
+                raise
+            writer.meta[:len(meta)] = meta
+            writer.publish(nbytes, len(meta), flags=FLAG_HEAP)
+
+        inject = self.policy.injection_enabled()
+        for i in range(n_chunks):
+            chunk_jobs.append(self._engine.submit(
+                Descriptor(build=lambda i=i: build_chunk(i),
+                           nbytes=min(chunk_bytes, nbytes - i * chunk_bytes),
+                           injection=inject, tag="heap_fill",
+                           count_copies=n_leaves if i == 0 else 0),
+                wq=self, policy=self.policy, latency=self.latency,
+                stats=self.stats))
+        job = self._engine.submit(
+            Descriptor(build=build_final, complete=complete_final,
+                       nbytes=nbytes, injection=inject, tag="heap_publish",
+                       count_copies=0),
+            wq=self, policy=self.policy, latency=self.latency,
+            stats=self.stats)
+        return SendHandle(self, nbytes, job=job)
+
+    def _send_heap(self, tree, descr, descr_bytes, header,
+                   nbytes: int, mode: ExecutionMode,
+                   timeout_s: float) -> SendHandle:
+        """Route one large pytree through the bulk heap; the ring carries
+        only the compact extent descriptor."""
+        self._validate_heap_meta(descr_bytes, header)   # before any counting
+        self.stats.sends += 1
+        self.stats.bytes_sent += nbytes
+        self.stats.heap_sends += 1
+        if mode == ExecutionMode.SYNC or not self.policy.should_offload(nbytes):
+            return self._send_heap_inline(tree, descr, descr_bytes, header,
+                                          nbytes, timeout_s)
+        handle = self._send_heap_offloaded(tree, descr, descr_bytes, header,
+                                           nbytes, timeout_s)
+        with self._inflight_lock:
+            while (self._inflight and self._inflight[0].done()
+                   and not self._inflight[0].failed()):
+                self._inflight.popleft()
+            self._inflight.append(handle)
+        if mode == ExecutionMode.PIPELINED:
+            drain_to_depth(self._inflight, self._inflight_lock,
+                           self.policy.pipeline_depth,
+                           lambda h: h.wait(timeout_s))
+        return handle
+
     def send(self, tree, header: Optional[dict] = None,
              mode: ExecutionMode | str | None = None,
              timeout_s: float = 30.0) -> SendHandle:
         """Send one pytree under the given (or policy) mode; see module
-        docstring for the sync/async/pipelined semantics."""
+        docstring for the sync/async/pipelined semantics.  Payloads at or
+        above ``policy.heap_threshold_bytes`` (or over the slot capacity)
+        take the bulk-heap path when the transport has one."""
         if self.tx is None:
             raise RuntimeError("receive-only channel")
         mode = ExecutionMode(mode) if mode is not None else self.policy.mode
-        meta, descr, nbytes = self._encode(tree, header)   # raises on oversize
+        descr, descr_bytes, nbytes = self._encode_descr(tree)
+        if self._use_heap(nbytes):
+            return self._send_heap(tree, descr, descr_bytes, header, nbytes,
+                                   mode, timeout_s)
+        if nbytes > self.tx.spec.slot_bytes:
+            raise ValueError(
+                f"message of {nbytes} B exceeds slot capacity "
+                f"{self.tx.spec.slot_bytes} B and no bulk heap is attached "
+                f"— raise data_slot_bytes or enable heap_extents")
+        meta = self._meta_bytes(descr_bytes, header)
         self.stats.sends += 1
         self.stats.bytes_sent += nbytes
 
@@ -468,10 +865,33 @@ class DataChannel:
         copied), and return a :class:`TxSlot` of writable views.  The
         caller packs the message directly into the destination slot and
         calls ``publish()`` — no staging copy, and the descriptor meta
-        comes from the same structure-keyed cache as ``send``."""
+        comes from the same structure-keyed cache as ``send``.
+
+        A template at/over ``policy.heap_threshold_bytes`` (or over the
+        slot capacity) reserves bulk-heap extents instead: the returned
+        views point into the heap, and ``publish()`` claims a ring slot
+        only for the compact extent descriptor."""
         if self.tx is None:
             raise RuntimeError("receive-only channel")
-        meta, descr, nbytes = self._encode(template, header)
+        descr, descr_bytes, nbytes = self._encode_descr(template)
+        if self._use_heap(nbytes):
+            self._validate_heap_meta(descr_bytes, header)
+            self.flush(timeout_s)      # FIFO wrt earlier offloaded sends
+            segs = self._heap_alloc_blocking(nbytes, timeout_s)
+            tree, staged = _writable_heap_tree(descr, self._heap,
+                                               self._heap.tx_dir, segs,
+                                               nbytes)
+            return TxSlot(tree, None, b"", nbytes, self,
+                          heap_state={"segments": segs, "staged": staged,
+                                      "descr_bytes": descr_bytes,
+                                      "header": header,
+                                      "timeout_s": timeout_s})
+        if nbytes > self.tx.spec.slot_bytes:
+            raise ValueError(
+                f"message of {nbytes} B exceeds slot capacity "
+                f"{self.tx.spec.slot_bytes} B and no bulk heap is attached "
+                f"— raise data_slot_bytes or enable heap_extents")
+        meta = self._meta_bytes(descr_bytes, header)
         self.flush(timeout_s)          # FIFO wrt earlier offloaded sends
         with self._send_lock:
             writer = self.tx.acquire(timeout_s)
@@ -486,8 +906,41 @@ class DataChannel:
             h.wait(timeout_s)
 
     # -- recv -----------------------------------------------------------------
+    def _lease_from_heap(self, reader: SlotReader, header: dict, descr,
+                         copy: bool):
+        """Resolve a heap-routed message: the ring slot held only the
+        extent descriptor, so it is released immediately — the lease (and
+        its backpressure) is the *extents*, freed on release/unpack."""
+        heap = self._heap
+        segs = header.pop(_HX_KEY, None)
+        if heap is None or not heap.spec.enabled or segs is None:
+            reader.release()
+            raise RuntimeError(
+                "received a heap-routed message on a transport without a "
+                "bulk heap (mismatched TransportSpec?)")
+        nbytes = reader.payload_nbytes         # heap bytes (FLAG_HEAP)
+        self.stats.recvs += 1
+        self.stats.heap_recvs += 1
+        self.stats.bytes_recv += nbytes
+        tree, reasm, reasm_bytes = _unpack_heap(descr, heap, heap.rx_dir,
+                                                segs, nbytes, copy)
+        if reasm:
+            # straddling leaves rebuilt with a counted copy (scatter allocs)
+            self.stats.heap_reassembles += reasm
+            self._engine.count("heap_reassemble", reasm, reasm_bytes)
+        reader.release()                       # descriptor slot recycles now
+        if copy:
+            # counted staging copy, same tag as the slot path's copy-out
+            self._engine.count("recv_copy", _count_leaves(descr), nbytes)
+            heap.free(segs)
+            return tree, header
+        return RecvLease(tree, header, None,
+                         on_release=lambda: heap.free(segs))
+
     def _lease_from_reader(self, reader: SlotReader, copy: bool):
         header, descr = self._decode_meta(reader.meta)
+        if reader.flags & FLAG_HEAP:
+            return self._lease_from_heap(reader, header, descr, copy)
         self.stats.recvs += 1
         self.stats.bytes_recv += reader.payload_nbytes
         payload = reader.slot.payload_view

@@ -1,0 +1,420 @@
+"""Shared-memory bulk heap: extent allocator for the large-message datapath.
+
+Fixed-slot rings cap every message at ``data_slot_bytes`` and reserve that
+capacity for *every* slot, so big payloads were unsendable and big slots
+wasted arena.  The :class:`BulkHeap` breaks the coupling: each connection
+gets one pre-mapped heap segment next to its ring arena, large payloads are
+written into heap **extents**, and the ring then carries only a compact
+extent descriptor in its meta region (descriptor-passing over shared
+memory — the smart-pointer-IPC idea, with the copy itself offloaded to the
+process-wide :class:`~repro.core.copyengine.CopyEngine`).
+
+Design, in the repo's existing shared-memory discipline:
+
+- **Two directions, one allocator each.**  The heap user region holds a
+  per-direction extent-state table plus a per-direction data region
+  (``c2s`` = creator-received? no — ``c2s`` is the creator's *tx*, matching
+  the transport's ring naming).  Only the **sender** of a direction
+  allocates from its table and only the **receiver** frees — the same
+  single-writer-per-word rule the rings use, so a plain aligned int64
+  store is the only atomic needed and there is no cross-process lock on
+  the allocation path.
+- **Extent-state words.**  One int64 per base extent: ``0`` = FREE,
+  nonzero = ALLOCATED (the value is the allocation wall-clock stamp, which
+  is what makes leaked extents *datable* for the crash reaper).  The
+  allocator only flips FREE→ALLOCATED; the receiver only flips
+  ALLOCATED→FREE; neither transition races the other.
+- **Power-of-two size classes.**  An allocation of N bytes asks for a
+  contiguous run of ``next_pow2(ceil(N / extent_bytes))`` base extents
+  (next-fit scan).  Contiguous extents give the receiver zero-copy numpy
+  views over the whole payload.
+- **Multi-extent scatter lists.**  Under fragmentation the allocator falls
+  back to collecting up to :data:`MAX_SEGMENTS` smaller free runs — the
+  wire descriptor is then a scatter list of ``(offset, capacity)`` pairs
+  and the payload's *virtual* byte range maps onto the runs in order.
+  Only genuinely exhausted heaps (free extents < needed) report
+  :class:`~repro.core.copyengine.WouldBlock`-style backpressure (the
+  channel layer parks the send, exactly like a full ring).
+- **Lease-based reclamation.**  Ownership of published extents travels
+  with the message: the *receiver's* :class:`~repro.ipc.channel.RecvLease`
+  release (or its copy-out unpack) frees them.  Extent lifetime is thereby
+  bounded by lease lifetime, and a held lease is backpressure on the
+  sender's next ``alloc`` — the bounded-queue-pair story, sized in bytes
+  instead of slots.
+- **Crash reap.**  A peer that dies holding leases (or mid-fill, after
+  allocating but before publishing) leaks ALLOCATED extents nobody will
+  free.  :meth:`reap` force-frees a direction's extents once the peer is
+  known dead (the transport's closed flag / a joined process); the
+  transport calls it during teardown of reaped connections so long-lived
+  servers cannot bleed heap to client churn.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass
+from typing import Callable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.ipc.shm import SharedMemoryArena, attach_retry
+
+# direction indices: match the transport's ring naming (c2s = creator tx)
+DIR_C2S, DIR_S2C = 0, 1
+_ALIGN = 64
+
+#: hard cap on scatter-list length: bounds the wire descriptor (16 B per
+#: segment) so heap meta always fits the ring's meta region, and bounds the
+#: receive-side reassembly work for pathological fragmentation.
+MAX_SEGMENTS = 32
+
+
+def _align(n: int, a: int = _ALIGN) -> int:
+    return (n + a - 1) // a * a
+
+
+def next_pow2(n: int) -> int:
+    """Smallest power of two >= n (n >= 1)."""
+    return 1 << max(0, (n - 1).bit_length())
+
+
+class HeapExhausted(Exception):
+    """Not enough free extents (or too fragmented for :data:`MAX_SEGMENTS`
+    segments) to satisfy an allocation *right now* — retryable
+    backpressure, the heap analogue of a full ring."""
+
+
+@dataclass(frozen=True)
+class HeapSpec:
+    """Geometry of one connection's bulk heap (both directions identical).
+
+    ``n_extents == 0`` disables the heap entirely — the transport then
+    behaves exactly like the pre-heap fixed-slot stack.
+    """
+    extent_bytes: int = 1 << 20       # base extent (power of two)
+    n_extents: int = 32               # per direction
+
+    def __post_init__(self):
+        if self.n_extents and self.extent_bytes & (self.extent_bytes - 1):
+            raise ValueError("extent_bytes must be a power of two")
+
+    @property
+    def enabled(self) -> bool:
+        """True when this spec describes a real heap (n_extents > 0)."""
+        return self.n_extents > 0
+
+    @property
+    def dir_bytes(self) -> int:
+        """Data bytes per direction."""
+        return self.n_extents * self.extent_bytes
+
+    @property
+    def table_bytes(self) -> int:
+        """State-table bytes per direction (64B-aligned int64 words)."""
+        return _align(self.n_extents * 8)
+
+    def layout(self) -> dict:
+        """Region name -> user-region offset, plus ``__total__``."""
+        off = 0
+        out = {}
+        for name, nbytes in (("table0", self.table_bytes),
+                             ("table1", self.table_bytes),
+                             ("data0", self.dir_bytes),
+                             ("data1", self.dir_bytes)):
+            out[name] = off
+            off = _align(off + nbytes)
+        out["__total__"] = off
+        return out
+
+
+@dataclass
+class HeapStats:
+    """Per-endpoint allocator counters (local)."""
+    allocs: int = 0
+    scatter_allocs: int = 0      # allocations that needed a scatter list
+    frees: int = 0               # free() calls (message granularity)
+    exhausted: int = 0           # allocation attempts that found no room
+    reaped: int = 0              # extents force-freed from dead peers
+    bytes_allocated: int = 0
+
+    def snapshot(self) -> dict:
+        """Plain-dict copy for logging/benchmark rows."""
+        return dict(self.__dict__)
+
+
+#: wire form of one allocation: ``((offset, capacity), ...)`` pairs into the
+#: direction's data region.  Payload bytes map onto segments in order; each
+#: segment contributes ``min(capacity, remaining)`` virtual bytes.
+Segments = Tuple[Tuple[int, int], ...]
+
+
+def segments_used(segments: Sequence[Tuple[int, int]], nbytes: int
+                  ) -> List[Tuple[int, int, int]]:
+    """Expand a wire scatter list to ``(virtual_off, data_off, used)``
+    pieces covering exactly ``nbytes`` payload bytes."""
+    out, voff, remain = [], 0, nbytes
+    for off, cap in segments:
+        used = min(cap, remain)
+        if used <= 0:
+            break
+        out.append((voff, off, used))
+        voff += used
+        remain -= used
+    if remain > 0:
+        raise ValueError(f"scatter list covers {nbytes - remain} of "
+                         f"{nbytes} payload bytes")
+    return out
+
+
+class BulkHeap:
+    """One endpoint of a two-direction cross-process extent heap.
+
+    Construct via :meth:`create`/:meth:`attach` (the transport does this);
+    ``side`` decides which direction this endpoint allocates from
+    (``creator`` tx = c2s) and which it frees (its rx direction).
+    """
+
+    def __init__(self, arena: SharedMemoryArena, spec: HeapSpec, side: str):
+        assert side in ("creator", "attacher")
+        self.arena = arena
+        self.spec = spec
+        self.side = side
+        self.stats = HeapStats()
+        self.tx_dir = DIR_C2S if side == "creator" else DIR_S2C
+        self.rx_dir = DIR_S2C if side == "creator" else DIR_C2S
+        lay = spec.layout()
+        self._tables = [
+            arena.ndarray(lay["table0"], (spec.n_extents,), np.int64),
+            arena.ndarray(lay["table1"], (spec.n_extents,), np.int64),
+        ]
+        self._data_off = [lay["data0"], lay["data1"]]
+        self._cursor = 0               # next-fit scan start (tx table only)
+        # intra-process serialization of the scan-then-claim: the channel's
+        # flush discipline makes concurrent allocs rare (engine WQ is FIFO,
+        # inline sends flush first), but two threads reserving replies on
+        # the same connection must not double-claim a free run.  Cross-
+        # process needs no lock: each side allocates only its own direction.
+        self._alloc_lock = threading.Lock()
+        self._closed = False
+
+    # -- construction ---------------------------------------------------------
+    @classmethod
+    def create(cls, name: str, spec: HeapSpec) -> "BulkHeap":
+        """Allocate + pre-touch the heap segment (creator side)."""
+        arena = SharedMemoryArena(name, size=spec.layout()["__total__"],
+                                  create=True)
+        return cls(arena, spec, "creator")
+
+    @classmethod
+    def attach(cls, name: str, spec: HeapSpec,
+               timeout_s: float = 30.0) -> "BulkHeap":
+        """Map a peer's heap segment; geometry comes from the transport
+        descriptor (the arena itself stores no spec)."""
+        return cls(attach_retry(name, timeout_s), spec, "attacher")
+
+    # -- allocation (tx direction only) ---------------------------------------
+    def _free_run_at(self, table: np.ndarray, start: int, limit: int) -> int:
+        """Length of the FREE run starting at ``start`` (capped)."""
+        n = 0
+        while n < limit and start + n < self.spec.n_extents \
+                and table[start + n] == 0:
+            n += 1
+        return n
+
+    def _claim(self, table: np.ndarray, start: int, count: int,
+               stamp: int) -> None:
+        # sole allocator for this table: scan-then-store cannot race the
+        # peer, whose only transition is ALLOCATED->FREE
+        table[start:start + count] = stamp
+
+    def try_alloc(self, nbytes: int) -> Optional[Segments]:
+        """One allocation attempt; ``None`` when the heap is exhausted or
+        too fragmented (retryable — the caller applies backpressure)."""
+        if not self.spec.enabled:
+            return None
+        if nbytes <= 0:
+            raise ValueError("alloc of <= 0 bytes")
+        E, N = self.spec.extent_bytes, self.spec.n_extents
+        need = -(-nbytes // E)
+        if need > N:
+            raise ValueError(
+                f"allocation of {nbytes} B exceeds heap direction capacity "
+                f"{N * E} B — raise heap_extents/heap_extent_bytes")
+        with self._alloc_lock:
+            return self._try_alloc_locked(nbytes, need)
+
+    def _try_alloc_locked(self, nbytes: int, need: int) -> Optional[Segments]:
+        E, N = self.spec.extent_bytes, self.spec.n_extents
+        table = self._tables[self.tx_dir]
+        stamp = max(1, int(time.time()))
+        run = min(next_pow2(need), N)         # power-of-two size class
+        # pass 1: one contiguous run of the rounded class (zero-copy views
+        # for the receiver over the whole payload)
+        for probe in range(N):
+            start = (self._cursor + probe) % N
+            if start + run > N:
+                continue
+            if self._free_run_at(table, start, run) == run:
+                self._claim(table, start, run, stamp)
+                self._cursor = (start + run) % N
+                self.stats.allocs += 1
+                self.stats.bytes_allocated += nbytes
+                return ((start * E, run * E),)
+        # pass 2: scatter — collect free runs in address order until the
+        # *exact* need is covered (the last run is clipped, so scatter
+        # doesn't over-claim under pressure)
+        segs: list[tuple[int, int]] = []
+        claimed: list[tuple[int, int]] = []
+        remaining = need
+        i = 0
+        while i < N and remaining > 0 and len(segs) < MAX_SEGMENTS:
+            if table[i] != 0:
+                i += 1
+                continue
+            n = self._free_run_at(table, i, remaining)
+            segs.append((i * E, n * E))
+            claimed.append((i, n))
+            remaining -= n
+            i += n + 1                         # word after the run is busy
+        if remaining > 0:                      # exhausted (or > MAX_SEGMENTS)
+            self.stats.exhausted += 1
+            return None
+        for start, count in claimed:
+            self._claim(table, start, count, stamp)
+        self.stats.allocs += 1
+        self.stats.scatter_allocs += 1
+        self.stats.bytes_allocated += nbytes
+        return tuple(segs)
+
+    def alloc(self, nbytes: int, timeout_s: float = 30.0,
+              poll_interval_s: float = 1e-4,
+              abort_check: Optional[Callable[[], bool]] = None) -> Segments:
+        """Blocking allocation with quantum polling — extents come back as
+        the receiver releases leases, so waiting here *is* the heap's
+        bounded-depth backpressure.  ``abort_check`` (e.g. "peer closed")
+        turns a doomed wait into :class:`HeapExhausted` immediately."""
+        deadline = time.perf_counter() + timeout_s
+        while True:
+            segs = self.try_alloc(nbytes)
+            if segs is not None:
+                return segs
+            if abort_check is not None and abort_check():
+                raise HeapExhausted(
+                    f"peer gone while waiting for {nbytes} B of heap")
+            if time.perf_counter() > deadline:
+                raise TimeoutError(
+                    f"bulk heap exhausted for {timeout_s}s "
+                    f"({nbytes} B requested; receiver holding leases?)")
+            time.sleep(poll_interval_s)
+
+    # -- free (rx direction for received messages; tx on abort) ---------------
+    def free(self, segments: Sequence[Tuple[int, int]],
+             direction: Optional[int] = None) -> None:
+        """Return a scatter list's extents to FREE.  Receivers free their
+        rx direction (lease release / copy-out unpack); a sender frees its
+        own tx direction when an allocation is abandoned before publish."""
+        direction = self.rx_dir if direction is None else direction
+        table = self._tables[direction]
+        if table is None:
+            return      # heap already closed/reaped (stale lease release)
+        E = self.spec.extent_bytes
+        for off, cap in segments:
+            start, count = off // E, -(-cap // E)
+            table[start:start + count] = 0
+        self.stats.frees += 1
+
+    def free_extents(self, direction: int) -> int:
+        """FREE extents in a direction right now (introspection/tests).
+        Direction is deliberately explicit: :meth:`free` defaults to the
+        *rx* side (receiver-driven reclamation is the common case) and a
+        mismatched implicit default here invited silent cross-direction
+        bugs."""
+        return int(np.count_nonzero(self._tables[direction] == 0))
+
+    def reap(self, direction: Optional[int] = None,
+             min_age_s: float = 0.0) -> int:
+        """Force-free every ALLOCATED extent in a direction (default: my
+        tx — extents a dead *receiver* will never release; pass my rx to
+        reap a dead *sender's* half-filled allocations).  Only call once
+        the peer is known dead and the rx ring is drained — a live peer's
+        in-flight extents would be corrupted.  ``min_age_s`` restricts the
+        reap to stale stamps (paranoia against a peer that is merely
+        slow)."""
+        direction = self.tx_dir if direction is None else direction
+        table = self._tables[direction]
+        if table is None:
+            return 0    # heap already closed: nothing left to reap
+        now = time.time()
+        reaped = 0
+        for i in range(self.spec.n_extents):
+            stamp = int(table[i])
+            if stamp != 0 and now - stamp >= min_age_s:
+                table[i] = 0
+                reaped += 1
+        self.stats.reaped += reaped
+        return reaped
+
+    # -- views ----------------------------------------------------------------
+    def view(self, direction: int, offset: int, nbytes: int) -> memoryview:
+        """Raw bytes of one data-region range."""
+        if offset + nbytes > self.spec.dir_bytes:
+            raise ValueError(f"heap view [{offset}, {offset + nbytes}) "
+                             f"exceeds direction capacity "
+                             f"{self.spec.dir_bytes}")
+        return self.arena.view(self._data_off[direction] + offset, nbytes)
+
+    def u8(self, direction: int, offset: int, nbytes: int) -> np.ndarray:
+        """Writable uint8 numpy view of one data-region range (what the
+        channel's SG entries copy into/out of)."""
+        return np.frombuffer(self.view(direction, offset, nbytes), np.uint8)
+
+    def resolve(self, direction: int, segments: Segments, voff: int,
+                nbytes: int, total_nbytes: int) -> List[np.ndarray]:
+        """uint8 views covering virtual payload range ``[voff, voff+nbytes)``
+        of a message whose scatter list is ``segments``.  One piece means
+        the range is contiguous in the heap (zero-copy viewable); more
+        means the leaf straddles a segment boundary and must be
+        reassembled by the caller (one counted copy)."""
+        pieces: List[np.ndarray] = []
+        end = voff + nbytes
+        for seg_voff, data_off, used in segments_used(segments, total_nbytes):
+            lo, hi = max(voff, seg_voff), min(end, seg_voff + used)
+            if lo < hi:
+                pieces.append(self.u8(direction,
+                                      data_off + (lo - seg_voff), hi - lo))
+        got = sum(p.nbytes for p in pieces)
+        if got != nbytes:
+            raise ValueError(f"virtual range [{voff}, {end}) resolves to "
+                             f"{got} B (scatter list corrupt?)")
+        return pieces
+
+    # -- lifecycle ------------------------------------------------------------
+    def drop_views(self) -> None:
+        """Release the table exports so the arena can close."""
+        self._tables = [None, None]
+
+    def close(self) -> None:
+        """Unmap this endpoint (unlink destroys the segment)."""
+        if self._closed:
+            return
+        self._closed = True
+        self.drop_views()
+        try:
+            self.arena.close()
+        except BufferError:
+            # an unreleased lease still pins a heap view; the mapping drops
+            # when the holder releases or the process exits — unlink (below,
+            # creator) is still safe: POSIX destroys at last unmap
+            pass
+
+    def unlink(self) -> None:
+        """Destroy the segment (creator side)."""
+        self.arena.unlink()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+        if self.side == "creator":
+            self.unlink()

@@ -81,6 +81,15 @@ class Listener:
     ``max_clients`` caps *total registrations over the listener's lifetime*
     (client ids double as arena-name suffixes, so they are never reused);
     size it for churn, not just concurrency.
+
+    Every accepted client is minted a dedicated transport from ``spec`` —
+    ring arena *plus* (when ``spec.heap_extents > 0``) a per-connection
+    bulk-heap segment for the large-message datapath, whose geometry
+    travels in the same descriptor handshake.  Shared-memory cost is
+    therefore ``concurrent_clients × spec.footprint_bytes``
+    (:attr:`~repro.ipc.transport.TransportSpec.footprint_bytes`; the
+    formula is spelled out in docs/ARCHITECTURE.md) — reaped clients'
+    arena *and* heap segments are unlinked, so churn does not accumulate.
     """
 
     def __init__(self, name: Optional[str] = None,

@@ -36,9 +36,16 @@ quantum sleeps — the UMWAIT analogue, now amortized over *all* clients
 instead of one blocking ``recv`` per connection.
 
 Disconnects are part of the sweep: a connection whose peer raised its
-closed flag (and whose ring is fully drained) is reaped — its transport
-closed, its arena unlinked — and reported through ``on_disconnect``, so
-client churn cannot leak arenas.
+closed flag (and whose ring is fully drained) is reaped — leaked
+bulk-heap extents force-freed (``stats.heap_reaped``), its transport
+closed, its arena and heap segment unlinked — and reported through
+``on_disconnect``, so client churn cannot leak arenas or heap.
+
+Large requests arrive exactly like small ones: the channel resolves a
+heap-routed message into extent-backed views, so the lease handed to
+``on_message`` is zero-copy either way, and the dispatcher's release
+after batch gather is also what frees the extents (lease-based
+reclamation).
 """
 from __future__ import annotations
 
@@ -123,6 +130,7 @@ class ReactorStats:
     disconnects: int = 0
     errors: int = 0            # on_message raised (message dropped, loop lives)
     zero_copy_recvs: int = 0   # requests delivered as held leases (no copy)
+    heap_reaped: int = 0       # leaked bulk-heap extents freed at reap time
 
 
 class Reactor:
@@ -179,6 +187,14 @@ class Reactor:
         self.stats.disconnects += 1
         if self.on_disconnect is not None:
             self.on_disconnect(conn)
+        try:
+            # crash-reap leaked heap extents (a client killed mid-send or
+            # holding reply leases) before teardown so the leak is counted;
+            # force=True: reaped connections are dead by definition (their
+            # flag is up or their reply path already failed)
+            self.stats.heap_reaped += conn.transport.reap_heap(force=True)
+        except Exception:
+            pass
         conn.transport.close()          # creator side: unlinks the arena
 
     # -- the sweep ------------------------------------------------------------

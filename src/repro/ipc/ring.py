@@ -39,6 +39,11 @@ _ALIGN = 64
 # slot states (int64 stores — single aligned word, untorn)
 EMPTY, WRITING, READY, READING = 0, 1, 2, 3
 
+# message-kind flags (slot header word 4, published with the state flip):
+# FLAG_HEAP marks a large message whose payload lives in bulk-heap extents
+# (ipc/heap.py); the slot carries only the compact extent descriptor.
+FLAG_HEAP = 1
+
 
 class ChannelClosed(EOFError):
     """The peer endpoint shut down while we were waiting on the ring."""
@@ -83,7 +88,7 @@ class _Slot:
     """Typed views over one slot's header/meta/payload regions."""
 
     def __init__(self, arena: SharedMemoryArena, offset: int, spec: RingSpec):
-        self.hdr = arena.ndarray(offset, (8,), np.int64)   # state, seq, pay, meta
+        self.hdr = arena.ndarray(offset, (8,), np.int64)   # state, seq, pay, meta, flags
         meta_off = offset + SLOT_HEADER_BYTES
         self.meta_view = arena.view(meta_off, spec.meta_bytes)
         pay_off = meta_off + _align(spec.meta_bytes)
@@ -122,6 +127,14 @@ class _Slot:
     def meta_nbytes(self, v: int) -> None:
         self.hdr[3] = v
 
+    @property
+    def flags(self) -> int:
+        return int(self.hdr[4])
+
+    @flags.setter
+    def flags(self, v: int) -> None:
+        self.hdr[4] = v
+
     def drop_views(self) -> None:
         """Release buffer exports so the arena can close."""
         self.hdr = None
@@ -156,11 +169,18 @@ class SlotWriter:
         """Writable view over the slot's metadata region."""
         return self.slot.meta_view
 
-    def publish(self, payload_nbytes: int, meta_nbytes: int = 0) -> None:
-        """Flip the slot READY — the paper's completion-flag store."""
+    def publish(self, payload_nbytes: int, meta_nbytes: int = 0,
+                flags: int = 0) -> None:
+        """Flip the slot READY — the paper's completion-flag store.
+
+        ``flags`` is the message-kind word (:data:`FLAG_HEAP`: the payload
+        lives in bulk-heap extents named by the meta, ``payload_nbytes``
+        then counts *heap* bytes and the slot payload region is unused).
+        Always stored, so slot reuse cannot leak a stale flag."""
         s = self.slot
         s.payload_nbytes = payload_nbytes
         s.meta_nbytes = meta_nbytes
+        s.flags = flags
         s.seq = self.seq
         s.state = READY            # the publishing store (completion flag)
         self._ring._produced[0] += 1
@@ -168,7 +188,7 @@ class SlotWriter:
 
     def abort(self) -> None:
         """Give the reserved slot back as a skip sentinel (zero meta)."""
-        self.publish(0, 0)
+        self.publish(0, 0, 0)
 
 
 class SlotReader:
@@ -180,6 +200,7 @@ class SlotReader:
         self.seq = slot.seq
         self.payload_nbytes = slot.payload_nbytes
         self.meta_nbytes = slot.meta_nbytes
+        self.flags = slot.flags
 
     @property
     def payload(self) -> memoryview:

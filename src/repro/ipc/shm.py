@@ -162,6 +162,11 @@ class ShmMutex:
             seg = shared_memory.SharedMemory(self.name, create=False)
         except FileNotFoundError:
             return None                 # holder released between our attempts
+        except ValueError:
+            # raced the creator between shm_open and ftruncate: the segment
+            # exists but is still empty (mmap of size 0) — treat as "stamp
+            # not readable yet", i.e. a fresh, non-stale holder
+            return None
         try:
             return struct.unpack_from(self._STAMP_FMT, seg.buf, 0)
         except struct.error:
@@ -179,8 +184,8 @@ class ShmMutex:
         # removes by NAME, not the inode we inspected)
         try:
             seg = shared_memory.SharedMemory(self.name, create=False)
-        except FileNotFoundError:
-            return
+        except (FileNotFoundError, ValueError):
+            return                      # gone, or re-created mid-ftruncate
         try:
             if struct.unpack_from(self._STAMP_FMT, seg.buf, 0) == stamp:
                 seg.unlink()            # holder presumed dead

@@ -3,8 +3,14 @@
 :class:`ShmTransport` packages a full connection between exactly two
 processes (the paper's client↔server queue-pair setup):
 
-- a **data channel** per direction (large slots, numpy pytrees);
+- a **data channel** per direction (numpy pytrees; slots for the common
+  case, per-connection bulk-heap extents for large payloads);
 - a **control channel** per direction (small slots, pickled commands);
+- a **bulk-heap segment** (``<name>.h``, :mod:`repro.ipc.heap`) minted by
+  the creator when ``spec.heap_extents > 0`` — the large-message
+  datapath's extent arena, torn down/unlinked with the transport and
+  crash-reaped (:meth:`ShmTransport.reap_heap`) when a peer dies holding
+  extents;
 - a geometry descriptor at the head of the arena, written by the creator
   under a seqlock and read by the attacher — so the attaching process only
   needs the *name* (connection setup = one validated attach, after which
@@ -31,6 +37,7 @@ from typing import Optional
 from repro.core.latency import LatencyModel
 from repro.core.policy import OffloadPolicy
 from repro.ipc.channel import ControlChannel, DataChannel
+from repro.ipc.heap import BulkHeap, HeapSpec
 from repro.ipc.ring import Ring, RingSpec, _align
 from repro.ipc.shm import SharedMemoryArena, attach_retry
 
@@ -43,12 +50,22 @@ _RING_WORDS = {"c2s_data": (4, 5), "s2c_data": (6, 7),
 @dataclass(frozen=True)
 class TransportSpec:
     """Geometry of one connection: slot counts/sizes for both ring kinds
-    (embedded in the arena descriptor so only the creator chooses it)."""
+    plus the bulk-heap extents (embedded in the arena descriptor so only
+    the creator chooses it).
+
+    Slots are deliberately small now that large payloads ride the heap:
+    the slot arena only has to fit descriptors and sub-threshold messages,
+    so per-client footprint is ``footprint_bytes`` instead of the old
+    256 MB of fully-reserved 32 MB slots.  ``heap_extents=0`` disables the
+    heap (pre-heap behaviour: slot capacity caps the message size).
+    """
     data_slots: int = 4
-    data_slot_bytes: int = 32 << 20
+    data_slot_bytes: int = 2 << 20
     data_meta_bytes: int = 4096
     ctrl_slots: int = 8
     ctrl_slot_bytes: int = 64 << 10
+    heap_extent_bytes: int = 1 << 20      # bulk-heap base extent (pow2)
+    heap_extents: int = 32                # per direction; 0 disables
 
     @property
     def data_ring(self) -> RingSpec:
@@ -60,6 +77,11 @@ class TransportSpec:
     def ctrl_ring(self) -> RingSpec:
         """Ring geometry for the two control directions."""
         return RingSpec(self.ctrl_slots, self.ctrl_slot_bytes, 64)
+
+    @property
+    def heap(self) -> HeapSpec:
+        """Bulk-heap geometry (``enabled`` False when heap_extents=0)."""
+        return HeapSpec(self.heap_extent_bytes, self.heap_extents)
 
     def layout(self) -> dict:
         """Ring name → arena user-region offset (descriptor block first)."""
@@ -74,6 +96,16 @@ class TransportSpec:
         out["__total__"] = off
         return out
 
+    @property
+    def footprint_bytes(self) -> int:
+        """Total shared memory one connection maps (ring arena + heap
+        segment) — the per-client cost a listener multiplies by
+        ``max_clients`` (see docs/ARCHITECTURE.md for the formula)."""
+        total = self.layout()["__total__"]
+        if self.heap.enabled:
+            total += self.heap.layout()["__total__"]
+        return total
+
 
 def _unique_name(prefix: str = "rocket") -> str:
     return f"{prefix}-{os.getpid()}-{time.monotonic_ns() & 0xFFFFFF:x}"
@@ -84,13 +116,15 @@ class ShmTransport:
 
     def __init__(self, arena: SharedMemoryArena, spec: TransportSpec,
                  side: str, policy: Optional[OffloadPolicy] = None,
-                 latency: Optional[LatencyModel] = None):
+                 latency: Optional[LatencyModel] = None,
+                 heap: Optional[BulkHeap] = None):
         assert side in ("creator", "attacher")
         self.arena = arena
         self.spec = spec
         self.side = side
         self.policy = policy or OffloadPolicy()
         self.latency = latency or LatencyModel()
+        self.heap = heap
         self._closed = False
 
         layout = spec.layout()
@@ -115,7 +149,7 @@ class ShmTransport:
         }
         self.data = DataChannel(self._rings["tx_data"],
                                 self._rings["rx_data"],
-                                self.policy, self.latency)
+                                self.policy, self.latency, heap=heap)
         self.ctrl = ControlChannel(self._rings["tx_ctrl"],
                                    self._rings["rx_ctrl"])
         mine = (_W_CREATOR_CLOSED if side == "creator"
@@ -132,6 +166,10 @@ class ShmTransport:
         name = name or _unique_name()
         layout = spec.layout()
         arena = SharedMemoryArena(name, size=layout["__total__"], create=True)
+        # mint the bulk-heap segment BEFORE raising READY: the attacher
+        # learns heap geometry from the descriptor and maps it immediately
+        heap = (BulkHeap.create(f"{name}.h", spec.heap)
+                if spec.heap.enabled else None)
         # publish geometry under the descriptor seqlock, then raise READY
         blob = pickle.dumps(spec, protocol=pickle.HIGHEST_PROTOCOL)
         if len(blob) + 4 > _DESCR_BYTES:
@@ -142,7 +180,7 @@ class ShmTransport:
             struct.pack_into("<I", view, 0, len(blob))
             view[4:4 + len(blob)] = blob
         arena.control_words()[_W_READY] = 1
-        return cls(arena, spec, "creator", policy, latency)
+        return cls(arena, spec, "creator", policy, latency, heap=heap)
 
     @classmethod
     def attach(cls, name: str, policy: Optional[OffloadPolicy] = None,
@@ -166,7 +204,9 @@ class ShmTransport:
             return bytes(view[4:4 + n])
 
         spec = pickle.loads(lock.read(read_spec))
-        return cls(arena, spec, "attacher", policy, latency)
+        heap = (BulkHeap.attach(f"{name}.h", spec.heap, timeout_s)
+                if spec.heap.enabled else None)
+        return cls(arena, spec, "attacher", policy, latency, heap=heap)
 
     # -- convenience ----------------------------------------------------------
     @property
@@ -201,11 +241,14 @@ class ShmTransport:
         return self.ctrl.recv_msg(**kw)
 
     def stats(self) -> dict:
-        """Channel- and ring-level counters for this endpoint."""
-        return {
+        """Channel-, ring-, and heap-level counters for this endpoint."""
+        out = {
             "data": self.data.stats.snapshot(),
             "rings": {k: vars(r.stats) for k, r in self._rings.items()},
         }
+        if self.heap is not None:
+            out["heap"] = self.heap.stats.snapshot()
+        return out
 
     # -- lifecycle ------------------------------------------------------------
     def announce_close(self) -> None:
@@ -214,8 +257,26 @@ class ShmTransport:
         if self._my_closed_word is not None:
             self._my_closed_word[0] = 1
 
+    def reap_heap(self, force: bool = False) -> int:
+        """Crash-reap leaked bulk-heap extents after the peer died: frees
+        both the extents *we* allocated that the dead receiver will never
+        release (our tx direction) and the dead sender's half-filled,
+        never-published allocations (our rx direction — only safe because
+        a dead peer publishes nothing more and our rx ring is drained by
+        the caller).  Returns extents freed; refuses while the peer still
+        looks alive unless ``force``."""
+        if self.heap is None:
+            return 0
+        if not (force or self.peer_closed):
+            raise RuntimeError("refusing to reap heap extents from a peer "
+                               "that has not closed (pass force=True only "
+                               "when its process is known dead)")
+        return (self.heap.reap(self.heap.tx_dir)
+                + self.heap.reap(self.heap.rx_dir))
+
     def close(self, unlink: Optional[bool] = None) -> None:
-        """Announce shutdown, drop all views, unmap (creator also unlinks)."""
+        """Announce shutdown, drop all views, unmap (creator also unlinks
+        both the ring arena and the heap segment)."""
         if self._closed:
             return
         self._closed = True
@@ -233,7 +294,12 @@ class ShmTransport:
             # exits — unlinking below is still safe (POSIX destroys the
             # segment at last unmap), so a stuck lease cannot leak shm
             pass
-        if unlink if unlink is not None else (self.side == "creator"):
+        do_unlink = unlink if unlink is not None else (self.side == "creator")
+        if self.heap is not None:
+            self.heap.close()          # same BufferError tolerance inside
+            if do_unlink:
+                self.heap.unlink()
+        if do_unlink:
             self.arena.unlink()
 
     def __enter__(self):

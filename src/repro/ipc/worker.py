@@ -264,6 +264,12 @@ class ServingFabric:
     single handler call (cross-client batch formation) and the results are
     demultiplexed back to the right transports by completion callbacks.
 
+    The large-message datapath is transparent here: a client request (or a
+    server reply) at/over ``policy.heap_threshold_bytes`` rides the
+    connection's bulk-heap extents instead of a ring slot, so request and
+    reply sizes are bounded by heap geometry (``spec.heap_extents ×
+    spec.heap_extent_bytes`` per direction), not by ``data_slot_bytes``.
+
     Teardown order matters and is owned by :meth:`close` (one ``with``
     block instead of a tuple of things to unwind): stop accepting, stop
     the sweep, flag every client, close transports, then the dispatcher.
@@ -349,12 +355,17 @@ class ServingFabric:
         return self
 
     def stats(self) -> dict:
-        """Fabric-level counters: listener, reactor, per-client, dispatcher."""
+        """Fabric-level counters: listener, reactor, per-client (including
+        each connection's data-channel heap counters), dispatcher."""
         return {
             "accepted": self.listener.accepted,
             "reactor": vars(self.reactor.stats),
             "clients": {c.cid: {"received": c.received, "replied": c.replied,
-                                "inflight": c.inflight}
+                                "inflight": c.inflight,
+                                "heap_recvs":
+                                    c.transport.data.stats.heap_recvs,
+                                "heap_sends":
+                                    c.transport.data.stats.heap_sends}
                         for c in self.reactor.connections()},
             "dispatcher": vars(self.dispatcher.stats),
         }

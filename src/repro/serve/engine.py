@@ -106,7 +106,9 @@ class BatchedServer:
     # -- cross-process serving (repro.ipc) ---------------------------------------
     def serve_over_ipc(self, name: Optional[str] = None,
                        latency: Optional[LatencyModel] = None,
-                       data_slot_bytes: int = 8 << 20,
+                       data_slot_bytes: int = 2 << 20,
+                       heap_extent_bytes: int = 1 << 20,
+                       heap_extents: int = 32,
                        max_clients: int = 64):
         """Expose the dispatcher to any number of client *processes* over
         the multi-client shared-memory fabric.
@@ -117,6 +119,12 @@ class BatchedServer:
         with ``RemoteDispatcherClient.connect(fabric.name)`` and use the
         paper's request/query API; pipelined requests from different
         clients are batched into single model calls.
+
+        Slots only have to fit *sub-threshold* messages now: prompts or
+        replies at/over ``policy.heap_threshold_bytes`` ride each
+        connection's bulk heap (``heap_extents × heap_extent_bytes`` per
+        direction; ``heap_extents=0`` disables it), so per-client shared
+        memory stays small without capping the payload size.
         """
         from repro.ipc import ServingFabric
         from repro.ipc.transport import TransportSpec
@@ -124,7 +132,9 @@ class BatchedServer:
         dispatcher = self.make_dispatcher(latency)
         fabric = ServingFabric(
             dispatcher, name=name,
-            spec=TransportSpec(data_slot_bytes=data_slot_bytes),
+            spec=TransportSpec(data_slot_bytes=data_slot_bytes,
+                               heap_extent_bytes=heap_extent_bytes,
+                               heap_extents=heap_extents),
             policy=self.policy, latency=latency, max_clients=max_clients,
             own_dispatcher=True)
         return fabric.start()

@@ -213,6 +213,78 @@ def test_client_churn_reaps_connections_and_arenas():
             shared_memory.SharedMemory(name, create=False).close()
 
 
+def _leaky_fabric_client_entry(name: str) -> None:
+    """Connect, leak heap extents as if killed mid-send, raise the closed
+    flag (what a crash handler / the OS-level liveness probe would do),
+    then die without any orderly teardown."""
+    import os
+    client = RemoteDispatcherClient.connect(name, policy=TIGHT, timeout_s=60)
+    heap = client.transport.heap
+    assert heap.try_alloc(3 * heap.spec.extent_bytes) is not None
+    client.transport.announce_close()
+    os._exit(0)
+
+
+def test_reactor_reaps_leaked_heap_extents_of_dead_client():
+    """A client that dies holding allocated extents is crash-reaped by the
+    reactor sweep: connection gone, extents counted in stats.heap_reaped,
+    arena + heap segment unlinked."""
+    from multiprocessing import shared_memory
+
+    d = _echo_dispatcher()
+    with ServingFabric(d, spec=SMALL, policy=TIGHT,
+                       own_dispatcher=True).start() as fab:
+        ctx = mp.get_context("spawn")
+        p = ctx.Process(target=_leaky_fabric_client_entry, args=(fab.name,))
+        p.start()
+        p.join(timeout=60)
+        assert p.exitcode == 0
+        deadline = time.perf_counter() + 10
+        while len(fab.reactor) and time.perf_counter() < deadline:
+            time.sleep(0.005)
+        assert len(fab.reactor) == 0
+        assert fab.reactor.stats.disconnects == 1
+        assert fab.reactor.stats.heap_reaped == 4     # 3 extents -> class 4
+        name = fab.listener.name
+    with pytest.raises(FileNotFoundError):            # heap segment unlinked
+        shared_memory.SharedMemory(f"{name}.c0-{p.pid}.h",
+                                   create=False).close()
+
+
+HEAPY = OffloadPolicy(offload_threshold_bytes=1, poll_interval_us=50.0,
+                      heap_threshold_bytes=1 << 20)
+
+
+def test_fabric_large_requests_and_replies_ride_the_heap():
+    """2 MB requests and replies flow through the fabric on the heap path
+    (slots are 1 MB), batch formation gathers straight from extent-backed
+    leases, and extents drain back to FREE afterwards."""
+    d = RequestDispatcher(HEAPY, max_batch_wait_s=0.02)
+    d.register_handler("double", lambda x: x * 2,
+                       batch_fn=lambda xs: [x * 2 for x in xs])
+    with ServingFabric(d, spec=SMALL, policy=HEAPY,
+                       own_dispatcher=True).start() as fab:
+        client = RemoteDispatcherClient.connect(fab.name, policy=HEAPY)
+        sent = [np.arange(1 << 19, dtype=np.float32) + i for i in range(6)]
+        jids = [client.request("double", a, mode="pipelined") for a in sent]
+        for a, jid in zip(sent, jids):
+            out = client.query(jid, timeout=60)
+            assert out.tobytes() == (a * 2).tobytes()
+        conn = fab.reactor.connections()[0]
+        assert conn.transport.data.stats.heap_recvs == 6   # requests
+        assert conn.transport.data.stats.heap_sends == 6   # replies
+        assert fab.reactor.stats.zero_copy_recvs == 6
+        # lease-based reclamation drained every extent back to FREE
+        heap = conn.transport.heap
+        deadline = time.perf_counter() + 10
+        while (heap.free_extents(heap.rx_dir) < heap.spec.n_extents
+               and time.perf_counter() < deadline):
+            time.sleep(0.005)
+        assert heap.free_extents(heap.rx_dir) == heap.spec.n_extents
+        assert heap.free_extents(heap.tx_dir) == heap.spec.n_extents
+        client.close()
+
+
 # ---------------------------------------------------------------------------
 # cross-client batching across real processes
 # ---------------------------------------------------------------------------

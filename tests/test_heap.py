@@ -1,0 +1,430 @@
+"""Bulk heap: extent allocator + the large-message datapath.
+
+Allocator unit tests run against a raw :class:`BulkHeap`; datapath tests
+drive it through real transports — in-process pairs for deterministic
+scheduling, then spawned processes for the 128 MB acceptance round trip
+with counted single-copy proof (data_slot_bytes <= 1 MB, so every large
+message *must* ride the heap).
+"""
+import multiprocessing as mp
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.copyengine import CopyEngine, set_engine
+from repro.core.policy import OffloadPolicy
+from repro.ipc import ShmTransport, TransportSpec
+from repro.ipc.heap import (
+    BulkHeap,
+    HeapExhausted,
+    HeapSpec,
+    MAX_SEGMENTS,
+    next_pow2,
+    segments_used,
+)
+
+TIGHT = OffloadPolicy(offload_threshold_bytes=1, poll_interval_us=50.0,
+                      heap_threshold_bytes=1 << 18)
+E = 1 << 16                      # tiny extents: allocator tests stay fast
+
+
+def _heap(n_extents=16, extent_bytes=E, name="rocket-test-heap"):
+    return BulkHeap.create(name, HeapSpec(extent_bytes, n_extents))
+
+
+# ---------------------------------------------------------------------------
+# allocator: rounding, reuse, scatter, exhaustion
+# ---------------------------------------------------------------------------
+
+def test_next_pow2():
+    assert [next_pow2(n) for n in (1, 2, 3, 4, 5, 8, 9)] == \
+        [1, 2, 4, 4, 8, 8, 16]
+
+
+def test_alloc_rounds_to_pow2_size_class():
+    with _heap() as h:
+        segs = h.try_alloc(3 * E)            # 3 extents -> class of 4
+        assert segs == ((0, 4 * E),)
+        assert h.free_extents(h.tx_dir) == 12
+        h.free(segs, h.tx_dir)
+        assert h.free_extents(h.tx_dir) == 16
+
+
+def test_alloc_free_reuse_cycles():
+    """Freed extents are found again (next-fit wraps the table)."""
+    with _heap(n_extents=8) as h:
+        for _ in range(50):                  # >> table size: forces reuse
+            segs = h.try_alloc(5 * E)        # class 8 = the whole table
+            assert segs is not None
+            h.free(segs, h.tx_dir)
+        assert h.free_extents(h.tx_dir) == 8
+        assert h.stats.allocs == 50 and h.stats.frees == 50
+
+
+def test_scatter_allocation_under_fragmentation():
+    """With no contiguous run big enough, the allocator returns a
+    multi-extent scatter list covering the exact need."""
+    with _heap(n_extents=16) as h:
+        holds = [h.try_alloc(1) for _ in range(16)]       # fill: 1 extent each
+        # free alternating extents: max contiguous run is 1
+        for i in range(0, 16, 2):
+            h.free(holds[i], h.tx_dir)
+        segs = h.try_alloc(3 * E)            # needs 3 extents, scattered
+        assert segs is not None and len(segs) == 3
+        assert h.stats.scatter_allocs == 1
+        assert sum(cap for _, cap in segs) == 3 * E
+        # virtual mapping covers the payload exactly, in order
+        pieces = segments_used(segs, 3 * E - 100)
+        assert sum(used for _, _, used in pieces) == 3 * E - 100
+
+
+def test_exhaustion_is_retryable_backpressure():
+    """No room -> try_alloc None (counted), alloc() blocks then times out,
+    and an abort check turns the wait into HeapExhausted immediately."""
+    with _heap(n_extents=4) as h:
+        hold = h.try_alloc(4 * E)
+        assert h.try_alloc(E) is None
+        assert h.stats.exhausted == 1
+        t0 = time.perf_counter()
+        with pytest.raises(TimeoutError, match="exhausted"):
+            h.alloc(E, timeout_s=0.1)
+        assert time.perf_counter() - t0 >= 0.1
+        with pytest.raises(HeapExhausted):
+            h.alloc(E, timeout_s=5.0, abort_check=lambda: True)
+        # free from the "receiver" side unblocks a waiting alloc
+        h.free(hold, h.tx_dir)
+        assert h.try_alloc(E) is not None
+
+
+def test_alloc_larger_than_direction_capacity_raises():
+    with _heap(n_extents=4) as h:
+        with pytest.raises(ValueError, match="exceeds heap direction"):
+            h.try_alloc(5 * E)
+
+
+def test_scatter_respects_max_segments():
+    """Fragmentation worse than MAX_SEGMENTS runs reports exhaustion, not
+    an unboundedly long wire descriptor."""
+    n = 2 * (MAX_SEGMENTS + 8)
+    with _heap(n_extents=n) as h:
+        holds = [h.try_alloc(1) for _ in range(n)]
+        for i in range(0, n, 2):             # MAX_SEGMENTS+8 isolated frees
+            h.free(holds[i], h.tx_dir)
+        assert h.try_alloc((MAX_SEGMENTS + 4) * E) is None
+        assert h.stats.exhausted == 1
+
+
+# ---------------------------------------------------------------------------
+# cross-process: alloc here, free there; reap after a kill
+# ---------------------------------------------------------------------------
+
+def _peer_free_entry(name: str, spec: HeapSpec, segs, q) -> None:
+    h = BulkHeap.attach(name, spec)
+    try:
+        # the attacher's rx dir is the creator's tx dir: receiver-side free
+        h.free(segs, h.rx_dir)
+        q.put(h.free_extents(h.rx_dir))
+    finally:
+        h.close()
+
+
+def test_cross_process_alloc_here_free_there():
+    spec = HeapSpec(E, 8)
+    h = BulkHeap.create("rocket-test-xproc-heap", spec)
+    try:
+        segs = h.try_alloc(3 * E)
+        assert h.free_extents(h.tx_dir) == 4
+        ctx = mp.get_context("spawn")
+        q = ctx.Queue()
+        p = ctx.Process(target=_peer_free_entry,
+                        args=(h.arena.name, spec, segs, q))
+        p.start()
+        assert q.get(timeout=60) == 8        # peer observed the free
+        p.join(timeout=30)
+        assert p.exitcode == 0
+        assert h.free_extents(h.tx_dir) == 8  # visible on our side too
+    finally:
+        h.close()
+        h.unlink()
+
+
+def _leaky_client_entry(name: str) -> None:
+    """Attach, allocate extents as if mid-send, then die without freeing
+    or publishing (the crash the reaper exists for)."""
+    t = ShmTransport.attach(name, policy=TIGHT)
+    segs = t.heap.try_alloc(3 * t.heap.spec.extent_bytes)
+    assert segs is not None
+    import os
+    os._exit(1)                              # no close, no announce
+
+
+def test_leaked_extent_reap_after_killed_client():
+    spec = TransportSpec(data_slots=2, data_slot_bytes=1 << 18,
+                         heap_extent_bytes=E, heap_extents=8,
+                         ctrl_slots=2, ctrl_slot_bytes=1 << 12)
+    server = ShmTransport.create(spec=spec, policy=TIGHT)
+    try:
+        ctx = mp.get_context("spawn")
+        p = ctx.Process(target=_leaky_client_entry, args=(server.name,))
+        p.start()
+        p.join(timeout=60)
+        assert p.exitcode == 1
+        # the dead attacher's tx dir (our rx) holds leaked extents
+        assert server.heap.free_extents(server.heap.rx_dir) < 8
+        # peer never announced close -> guarded reap refuses without force
+        with pytest.raises(RuntimeError, match="refusing"):
+            server.reap_heap()
+        reaped = server.reap_heap(force=True)
+        assert reaped == 4                   # 3 extents -> pow2 class of 4
+        assert server.heap.free_extents(server.heap.rx_dir) == 8
+        assert server.heap.stats.reaped == 4
+    finally:
+        server.close()
+
+
+# ---------------------------------------------------------------------------
+# datapath: threshold selection, leases free extents, scatter reassembly
+# ---------------------------------------------------------------------------
+
+def _pair(spec, policy=TIGHT):
+    a = ShmTransport.create(spec=spec, policy=policy)
+    b = ShmTransport.attach(a.name, policy=policy)
+    return a, b
+
+
+SPEC = TransportSpec(data_slots=3, data_slot_bytes=1 << 20,
+                     heap_extent_bytes=1 << 18, heap_extents=16,
+                     ctrl_slots=4, ctrl_slot_bytes=4 << 10)
+
+
+def test_threshold_selects_inline_slot_vs_heap():
+    a, b = _pair(SPEC)
+    try:
+        a.send({"x": np.zeros(16, np.uint8)}, mode="sync")   # tiny: slot
+        b.recv(timeout_s=10)
+        assert a.data.stats.heap_sends == 0
+        a.send({"x": np.zeros(1 << 18, np.uint8)}, mode="sync")  # >= thresh
+        b.recv(timeout_s=10)
+        assert a.data.stats.heap_sends == 1
+        assert b.data.stats.heap_recvs == 1
+        # over slot capacity *must* go heap even in a fresh channel
+        a.send({"x": np.zeros((1 << 20) + 1, np.uint8)}, mode="sync")
+        b.recv(timeout_s=10)
+        assert a.data.stats.heap_sends == 2
+    finally:
+        b.close(); a.close()
+
+
+def test_heap_lease_release_frees_extents_and_backpressures():
+    """A held lease keeps extents ALLOCATED (sender-side backpressure);
+    releasing it frees them and unblocks the sender."""
+    a, b = _pair(SPEC)
+    try:
+        big = {"x": np.arange(1 << 20, dtype=np.uint8)}      # 4 extents
+        a.send(big, mode="sync")
+        lease = b.recv(copy=False, timeout_s=10)
+        assert lease.held
+        assert b.heap.free_extents(b.heap.rx_dir) == 12
+        np.testing.assert_array_equal(lease.tree["x"], big["x"])
+        with pytest.raises(TimeoutError):        # 12 left, need 16: blocked
+            a.data._heap_alloc_blocking(13 << 18, timeout_s=0.1)
+        lease.release()
+        assert lease.tree is None
+        assert b.heap.free_extents(b.heap.rx_dir) == 16
+        assert a.heap.free_extents(a.heap.tx_dir) == 16      # same table
+    finally:
+        b.close(); a.close()
+
+
+def test_heap_copy_recv_frees_extents_immediately():
+    a, b = _pair(SPEC)
+    try:
+        msg = np.arange(1 << 20, dtype=np.uint8)
+        a.send({"x": msg}, mode="sync")
+        tree, _ = b.recv(copy=True, timeout_s=10)
+        # extents are already back, so the tree must be materialized: a
+        # reused heap range cannot corrupt it
+        assert b.heap.free_extents(b.heap.rx_dir) == 16
+        a.heap.try_alloc(16 << 18)               # reuse the whole direction
+        a.heap.u8(a.heap.tx_dir, 0, 1 << 20)[:] = 0xFF
+        np.testing.assert_array_equal(tree["x"], msg)
+    finally:
+        b.close(); a.close()
+
+
+def test_scatter_message_reassembles_straddling_leaves():
+    """Fragment the heap so a big leaf must scatter across extents, and
+    verify byte identity plus the counted reassembly."""
+    a, b = _pair(SPEC)
+    try:
+        E_ = SPEC.heap_extent_bytes
+        holds = [a.heap.try_alloc(1) for _ in range(16)]
+        for i in range(0, 16, 2):
+            a.heap.free(holds[i], a.heap.tx_dir)     # only 1-extent runs free
+        msg = {"x": np.arange(2 * E_ + 100, dtype=np.uint8)}  # needs 3 runs
+        a.send(msg, mode="sync")
+        lease = b.recv(copy=False, timeout_s=10)
+        np.testing.assert_array_equal(lease.tree["x"], msg["x"])
+        assert a.heap.stats.scatter_allocs == 1
+        assert b.data.stats.heap_reassembles == 1    # straddler copied once
+        lease.release()
+        for i in range(1, 16, 2):
+            a.heap.free(holds[i], a.heap.tx_dir)
+        assert a.heap.free_extents(a.heap.tx_dir) == 16
+    finally:
+        b.close(); a.close()
+
+
+def test_heap_reserve_then_fill_and_abort():
+    a, b = _pair(SPEC)
+    try:
+        tmpl = {"r": np.empty(1 << 19, np.int32)}            # 2 MB: heap
+        slot = a.data.reserve(tmpl, header={"j": 3})
+        assert slot.tree["r"].base is not None               # view into heap
+        slot.tree["r"][:] = 9
+        slot.publish()
+        got, hdr = b.recv(timeout_s=10)
+        assert hdr == {"j": 3} and (got["r"] == 9).all()
+        assert a.data.stats.heap_sends == 1
+        # abort returns the extents without publishing anything
+        slot = a.data.reserve(tmpl)
+        slot.abort()
+        assert a.heap.free_extents(a.heap.tx_dir) == 16
+        assert b.data.try_recv() is None
+    finally:
+        b.close(); a.close()
+
+
+def test_heap_disabled_spec_keeps_slot_cap_error():
+    spec = TransportSpec(data_slots=2, data_slot_bytes=1 << 18,
+                         heap_extents=0, ctrl_slots=2,
+                         ctrl_slot_bytes=1 << 12)
+    a, b = _pair(spec)
+    try:
+        assert a.heap is None
+        with pytest.raises(ValueError, match="slot capacity"):
+            a.send({"x": np.zeros((1 << 18) + 1, np.uint8)}, mode="sync")
+    finally:
+        b.close(); a.close()
+
+
+def test_offloaded_heap_send_parks_on_exhaustion_until_lease_release():
+    """Pipelined heap sends WouldBlock-park on an exhausted heap instead
+    of blocking an engine worker, and complete once extents free up."""
+    a, b = _pair(SPEC)
+    try:
+        chunky = OffloadPolicy(offload_threshold_bytes=1,
+                               heap_threshold_bytes=1 << 18,
+                               heap_chunk_bytes=1 << 18,
+                               poll_interval_us=50.0)
+        a.data.policy = chunky
+        big = {"x": np.arange(12 << 18, dtype=np.uint8)}     # 12 of 16 ext.
+        a.send(big, mode="sync")
+        lease = b.recv(copy=False, timeout_s=10)             # hold 16 (pow2)
+        h = a.send(big, mode="async")                        # must park
+        time.sleep(0.1)
+        assert not h.done()
+        lease.release()
+        h.wait(timeout_s=30)
+        lease2 = b.recv(copy=False, timeout_s=10)
+        np.testing.assert_array_equal(lease2.tree["x"], big["x"])
+        lease2.release()
+    finally:
+        b.close(); a.close()
+
+
+# ---------------------------------------------------------------------------
+# acceptance: 128 MB pytree round trip, counted single copy per direction
+# ---------------------------------------------------------------------------
+
+BIG_SPEC = TransportSpec(data_slots=4, data_slot_bytes=1 << 20,   # <= 1 MB
+                         heap_extent_bytes=8 << 20, heap_extents=20,
+                         ctrl_slots=4, ctrl_slot_bytes=4 << 10)
+BIG_POLICY = OffloadPolicy(offload_threshold_bytes=1,
+                           heap_threshold_bytes=1 << 20,
+                           poll_interval_us=100.0)
+
+
+def _big_tree():
+    """A 128 MB pytree (three leaves, mixed dtypes/shapes)."""
+    return {
+        "tokens": np.arange(24 << 20, dtype=np.int32),        # 96 MB
+        "embeds": {"v": np.arange(7 << 20, dtype=np.float32)  # 28 MB
+                   .reshape(7, 1 << 20)},
+        "mask": np.full(4 << 20, 7, np.uint8),                # 4 MB
+    }
+
+
+def _big_echo_entry(name: str, q) -> None:
+    """Child: receive the 128 MB tree as a zero-copy lease, verify bytes,
+    echo it back through its own heap direction, report its counters."""
+    eng = CopyEngine(BIG_POLICY)
+    set_engine(eng)
+    t = ShmTransport.attach(name, policy=BIG_POLICY)
+    try:
+        lease = t.recv(copy=False, timeout_s=120)
+        expect = _big_tree()
+        ok = (np.array_equal(lease.tree["tokens"], expect["tokens"])
+              and np.array_equal(lease.tree["embeds"]["v"],
+                                 expect["embeds"]["v"])
+              and np.array_equal(lease.tree["mask"], expect["mask"]))
+        # echo straight from the leased views: the send-side heap fill is
+        # this direction's ONE payload copy
+        t.send(lease.tree, header={"echo": True}, mode="sync")
+        lease.release()
+        tags = eng.tagged_snapshot()
+        q.put({"ok": ok, "copies": tags["copies"], "bytes": tags["bytes"],
+               "stats": t.data.stats.snapshot()})
+    finally:
+        t.close()
+
+
+@pytest.mark.slow
+def test_128mb_pytree_roundtrip_single_copy_counted():
+    """The PR's acceptance bar: a 128 MB pytree crosses a spawned-process
+    transport whose data slots are 1 MB, byte-identical both ways, with
+    engine counters proving exactly ONE payload copy per direction
+    (send-side heap fill; zero receive-side copies)."""
+    eng = CopyEngine(BIG_POLICY)
+    prev = set_engine(eng)
+    server = ShmTransport.create(spec=BIG_SPEC, policy=BIG_POLICY)
+    try:
+        ctx = mp.get_context("spawn")
+        q = ctx.Queue()
+        p = ctx.Process(target=_big_echo_entry, args=(server.name, q))
+        p.start()
+
+        tree = _big_tree()
+        nbytes = sum(a.nbytes for a in
+                     (tree["tokens"], tree["embeds"]["v"], tree["mask"]))
+        assert nbytes == 128 << 20
+        server.send(tree, mode="sync")
+        echoed = server.recv(copy=False, timeout_s=120)
+        assert echoed.header.get("echo")
+        assert np.array_equal(echoed.tree["tokens"], tree["tokens"])
+        assert np.array_equal(echoed.tree["embeds"]["v"],
+                              tree["embeds"]["v"])
+        assert np.array_equal(echoed.tree["mask"], tree["mask"])
+        echoed.release()
+
+        child = q.get(timeout=120)
+        p.join(timeout=60)
+        assert child["ok"], "child saw corrupted bytes"
+
+        # -- counted proof: one payload copy per direction ------------------
+        for side, tags, bts in (("server", eng.tagged_snapshot()["copies"],
+                                 eng.tagged_snapshot()["bytes"]),
+                                ("child", child["copies"], child["bytes"])):
+            assert tags.get("heap_fill", 0) == 3, (side, tags)  # 3 leaves
+            assert bts.get("heap_fill", 0) == nbytes, (side, bts)
+            assert tags.get("recv_copy", 0) == 0, (side, tags)
+            assert tags.get("heap_reassemble", 0) == 0, (side, tags)
+        assert server.data.stats.heap_sends == 1
+        assert server.data.stats.heap_recvs == 1
+        assert child["stats"]["heap_sends"] == 1
+        assert child["stats"]["heap_recvs"] == 1
+    finally:
+        set_engine(prev)
+        server.close()
+        eng.close()

@@ -231,14 +231,60 @@ def test_channel_zero_copy_views():
         b.close(); a.close()
 
 
-def test_channel_oversize_message_raises():
-    a, b = _pair()
+def test_channel_oversize_message_raises_without_heap():
+    """With the bulk heap disabled, slot capacity is still a hard cap."""
+    import dataclasses
+    a, b = _pair(spec=dataclasses.replace(SMALL, heap_extents=0))
     try:
         with pytest.raises(ValueError, match="slot capacity"):
             a.send({"x": np.zeros(SMALL.data_slot_bytes + 1, np.uint8)},
                    mode="sync")
     finally:
         b.close(); a.close()
+
+
+def test_channel_oversize_message_rides_the_heap():
+    """The same over-slot message on a heap-enabled transport (the
+    default spec) goes through: the ring carries only the extent
+    descriptor and the payload round-trips byte-identically."""
+    a, b = _pair()
+    try:
+        msg = {"x": np.arange(SMALL.data_slot_bytes + 1, dtype=np.uint8)}
+        a.send(msg, mode="sync")
+        tree, _ = b.recv(timeout_s=10)
+        np.testing.assert_array_equal(tree["x"], msg["x"])
+        assert a.data.stats.heap_sends == 1
+        assert b.data.stats.heap_recvs == 1
+    finally:
+        b.close(); a.close()
+
+
+@pytest.mark.parametrize("mode", ["sync", "async", "pipelined"])
+def test_spawn_heap_messages_byte_identical(mode):
+    """Large (heap-routed) batches from a producer *process* arrive
+    byte-identical in every send mode, interleaved with small slot-path
+    messages (the mark leaf stays tiny; tokens exceed the slot)."""
+    policy = OffloadPolicy(mode=ExecutionMode(mode),
+                           offload_threshold_bytes=1,
+                           heap_threshold_bytes=1 << 19,
+                           heap_chunk_bytes=1 << 19)
+    handle = start_producer(_counting_spec(seed=11), policy=policy,
+                            spec=SMALL, n_batches=4)
+    try:
+        ref = make_counting_source(seed=11)
+        for i in range(4):
+            batch, header = handle.recv_batch(timeout_s=60)
+            expect = next(ref)
+            assert header["step"] == i
+            for k in expect:
+                assert batch[k].tobytes() == expect[k].tobytes()
+        _, header = handle.recv_batch(timeout_s=60)
+        assert header.get("eof")
+        # tokens are 64*1024*8 B = 512 KB >= heap threshold: heap-routed
+        assert handle.transport.data.stats.heap_recvs == 4
+    finally:
+        handle.stop()
+    assert handle.process.exitcode == 0
 
 
 def test_control_channel_roundtrip():
