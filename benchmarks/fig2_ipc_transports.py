@@ -9,8 +9,16 @@ Producer *process* → consumer *process*, same machine:
 - ``shm-zerocopy`` — same transport, consumer reads the payload in place
   (views into the pre-mapped slot; the paper's zero-copy receive).
 
-Reports microseconds per message and MB/s for each (transport, size).
-The shm ring should meet or beat the pipe baseline from ~1 MB up.
+Sub-MB sizes ride the transport's small-message fast path: binary wire
+meta (no per-send pickle) and pipelined **coalesced frames** (up to 8
+messages per ring slot under ``FLAG_COALESCED``), so slot claim, meta
+encode, and doorbell are amortized K-ways — the control-plane cost that
+dominated the old per-call latency at 64 KB.  ≥1 MB rows keep the plain
+sync slot path (bandwidth-bound; fig6 owns the heap sweep above that).
+
+Reports microseconds per message, MB/s, and messages/s for each
+(transport, size).  The shm ring should meet or beat the pipe baseline
+from ~64 KB up.
 """
 from __future__ import annotations
 
@@ -23,10 +31,52 @@ from benchmarks.common import fmt_row
 
 SIZES = (64 << 10, 1 << 20, 8 << 20)
 _TOTAL_TARGET = 64 << 20          # ~bytes moved per (transport, size) point
+_COALESCE_BELOW = 1 << 20         # sub-MB: use the coalesced fast path
+_COALESCE_MAX = 8
 
 
 def _n_msgs(size: int) -> int:
     return int(np.clip(_TOTAL_TARGET // size, 8, 256))
+
+
+def _spec(size: int):
+    from repro.ipc.transport import TransportSpec
+
+    # heap disabled: fig2 measures the *slot* transport (fig6 owns the
+    # large-payload heap sweep) — without this, >=8MB points would silently
+    # route via the bulk heap under the default policy threshold.  Small
+    # sizes get slots big enough to hold one full coalesced frame, and a
+    # deeper ring so the producer keeps streaming while the consumer works
+    # through a frame's K messages (slot recycle happens at frame, not
+    # message, granularity).
+    slot = size + (1 << 16)
+    if size < _COALESCE_BELOW:
+        slot = _COALESCE_MAX * ((size + 63) // 64 * 64) + (1 << 16)
+        return TransportSpec(data_slots=8, data_slot_bytes=slot,
+                             heap_extents=0)
+    return TransportSpec(data_slots=4, data_slot_bytes=slot, heap_extents=0)
+
+
+def _policy(size: int):
+    from repro.core.policy import OffloadPolicy
+
+    if size < _COALESCE_BELOW:
+        # small-message fast path: pipelined sends join microbatch frames.
+        # The wide window lets frames fill to K on a slow-Python producer,
+        # and the long spin keeps both endpoints in the yield-only phase
+        # across the inter-frame gap — on this kernel class a single
+        # quantum sleep costs ~1 ms (see OffloadPolicy.spin_us), which
+        # would dwarf the per-frame cost being measured
+        return OffloadPolicy(coalesce_bytes=_COALESCE_BELOW,
+                             coalesce_max=_COALESCE_MAX,
+                             coalesce_window_us=1000.0,
+                             spin_us=2000.0,
+                             offload_threshold_bytes=1 << 62)
+    return OffloadPolicy()        # sends stay inline (sync copy)
+
+
+def _send_mode(size: int) -> str:
+    return "pipelined" if size < _COALESCE_BELOW else "sync"
 
 
 # -- child entries (spawn-safe, module level) --------------------------------
@@ -44,16 +94,15 @@ def _pipe_producer(conn, size: int, n: int) -> None:
 
 
 def _shm_producer(name: str, size: int, n: int) -> None:
-    from repro.core.policy import OffloadPolicy
     from repro.ipc import ShmTransport
 
-    policy = OffloadPolicy()                      # sends stay inline (sync copy)
-    t = ShmTransport.attach(name, policy=policy)
+    t = ShmTransport.attach(name, policy=_policy(size))
     arr = np.arange(size // 8, dtype=np.int64)
+    mode = _send_mode(size)
     t.send_msg("ready", timeout_s=60)             # two-way handshake
     t.recv_msg(timeout_s=60)
     for _ in range(n + _WARMUP):
-        t.send({"a": arr}, mode="sync")
+        t.send({"a": arr}, mode=mode)
     t.data.flush()
     t.recv_msg(timeout_s=60)                      # hold mapping until consumer done
     t.close()
@@ -81,29 +130,29 @@ def _bench_pipe(size: int, n: int) -> float:
 
 def _bench_shm(size: int, n: int, zerocopy: bool) -> float:
     from repro.ipc import ShmTransport
-    from repro.ipc.transport import TransportSpec
 
     ctx = mp.get_context("spawn")
-    # heap disabled: fig2 measures the *slot* transport (fig6 owns the
-    # large-payload heap sweep) — without this, >=8MB points would silently
-    # route via the bulk heap under the default policy threshold
-    spec = TransportSpec(data_slots=4, data_slot_bytes=size + (1 << 16),
-                         heap_extents=0)
-    t = ShmTransport.create(spec=spec)
+    t = ShmTransport.create(spec=_spec(size), policy=_policy(size))
     p = ctx.Process(target=_shm_producer, args=(t.name, size, n), daemon=True)
     p.start()
     t.recv_msg(timeout_s=60)                      # child is up + attached
     t.send_msg("go", timeout_s=60)
     for _ in range(_WARMUP):
-        t.recv(timeout_s=60)
+        item = t.recv(timeout_s=60, copy=not zerocopy)
+        if zerocopy:
+            item.release()
+    # size-aware receive deferral only pays off for single big messages;
+    # coalesced small-message bursts arrive many-per-poll, so sleeping a
+    # predicted copy latency before each poll would just add latency
+    hint = size if size >= _COALESCE_BELOW else 0
     t0 = time.perf_counter()
     checksum = 0
     for _ in range(n):
         if zerocopy:
-            with t.recv(copy=False, timeout_s=60, hint_nbytes=size) as lease:
+            with t.recv(copy=False, timeout_s=60, hint_nbytes=hint) as lease:
                 checksum += int(lease.tree["a"][-1])   # touch without copying
         else:
-            tree, _ = t.recv(timeout_s=60, hint_nbytes=size)
+            tree, _ = t.recv(timeout_s=60, hint_nbytes=hint)
             checksum += int(tree["a"][-1])
     dt = time.perf_counter() - t0
     t.send_msg("done", timeout_s=60)
@@ -113,15 +162,29 @@ def _bench_shm(size: int, n: int, zerocopy: bool) -> float:
     return dt
 
 
+_ROUNDS = 2       # best-of rounds per point: the shared host's bandwidth
+                  # swings ~5x minute to minute, and a transport's capability
+                  # is its good-mood number — one unlucky draw should not be
+                  # committed as the snapshot
+
+
 def run():
+    benches = {
+        "pipe": lambda size, n: _bench_pipe(size, n),
+        "shm": lambda size, n: _bench_shm(size, n, zerocopy=False),
+        "shm-zerocopy": lambda size, n: _bench_shm(size, n, zerocopy=True),
+    }
     for size in SIZES:
         n = _n_msgs(size)
         mb = size / (1 << 20)
-        for name, dt in (
-            ("pipe", _bench_pipe(size, n)),
-            ("shm", _bench_shm(size, n, zerocopy=False)),
-            ("shm-zerocopy", _bench_shm(size, n, zerocopy=True)),
-        ):
+        best = {}
+        for _ in range(_ROUNDS):
+            for name, fn in benches.items():
+                dt = fn(size, n)
+                if name not in best or dt < best[name]:
+                    best[name] = dt
+        for name, dt in best.items():
             us = dt / n * 1e6
             mbps = size * n / dt / (1 << 20)
-            yield fmt_row(f"fig2/{name}/{mb:g}MB", us, f"{mbps:.0f}MB/s")
+            yield fmt_row(f"fig2/{name}/{mb:g}MB", us,
+                          f"{mbps:.0f}MB/s;{n / dt:.0f}msg/s")

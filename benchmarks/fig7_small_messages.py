@@ -1,0 +1,170 @@
+"""Fig. 7 analogue: small-message control-plane cost (§IV/§V).
+
+The paper's CPU-efficiency argument is that *fixed* per-message costs —
+slot claim, meta encode, doorbell, poll wakeup — dominate small-message
+IPC, not bandwidth.  This sweep (4 KB – 256 KB, producer process →
+consumer process) measures three configurations of the same transport:
+
+- ``static``    — the PR-4 behaviour: pipelined sends, every message
+  pays full control-plane cost (one slot + one doorbell each);
+- ``coalesced`` — the small-message fast path: up to 8 messages packed
+  into one ring slot as a microbatch frame (``FLAG_COALESCED``);
+- ``adaptive``  — ``OffloadPolicy(governor="adaptive")``: the channel's
+  governor picks inline/offload/coalesce per message from measured
+  per-size-class cost EWMAs and queue occupancy.
+
+Besides wall-clock µs/msg and msg/s, each row reports two **counted**
+metrics that ``run.py --check`` gates against the committed snapshot
+(timing-noise-immune, like copies/request):
+
+- ``doorbells/msg`` — ring publishes per message, from the shared
+  produced counter: exactly 1.0 static, < 1 whenever coalescing engages
+  on a ≥2-deep stream;
+- ``pickle/send``   — meta-path ``pickle.dumps``+``loads`` calls per
+  message across *both* endpoints (``ChannelStats.meta_pickles`` /
+  ``meta_unpickles``): 0 in steady state now that descriptors are cached
+  and headers ride the binary codec.
+
+A final ``fig7/adaptive_margin/<size>`` row reports adaptive throughput
+relative to the best static choice.  ~1.0 means the governor matched the
+best hand-picked mode; on this shared CI host wall-clock swings ~5x with
+neighbor load (see ``_ROUNDS``), so treat the margin as informational —
+the *counted* rows above are the regression gate.
+"""
+from __future__ import annotations
+
+import multiprocessing as mp
+import time
+
+import numpy as np
+
+from benchmarks.common import fmt_row
+
+SIZES = (4 << 10, 16 << 10, 64 << 10, 256 << 10)
+VARIANTS = ("static", "coalesced", "adaptive")
+_TOTAL_TARGET = 24 << 20
+_K = 8
+_WARMUP = 80      # untimed: page first-touch + descr-cache miss + the
+                  # governor's cold-start exploration bursts (≤2 bursts ×
+                  # 3 routes) — the timed phase must start *converged*, or
+                  # a few multi-ms offload probes would dominate the mean
+
+
+def _n_msgs(size: int) -> int:
+    return int(np.clip(_TOTAL_TARGET // size, 192, 256))
+
+
+def _policy(variant: str):
+    from repro.core.policy import OffloadPolicy
+
+    # spin_us=2000: on coarse-timer kernels one quantum sleep costs ~1ms,
+    # which would dwarf the per-message control-plane cost being measured
+    base = dict(spin_us=2000.0, coalesce_window_us=1000.0, coalesce_max=_K)
+    if variant == "static":
+        return OffloadPolicy(**base)
+    if variant == "coalesced":
+        return OffloadPolicy(coalesce_bytes=512 << 10, **base)
+    return OffloadPolicy(governor="adaptive", **base)
+
+
+def _spec(size: int):
+    from repro.ipc.transport import TransportSpec
+
+    slot = _K * ((size + 63) // 64 * 64) + (1 << 16)
+    return TransportSpec(data_slots=8, data_slot_bytes=slot, heap_extents=0)
+
+
+# -- child entry (spawn-safe, module level) ----------------------------------
+
+def _producer(name: str, variant: str, size: int, n: int) -> None:
+    from repro.ipc import ShmTransport
+
+    t = ShmTransport.attach(name, policy=_policy(variant))
+    arr = np.arange(size // 8, dtype=np.int64)
+    t.send_msg("ready", timeout_s=60)
+    t.recv_msg(timeout_s=60)
+    for _ in range(_WARMUP):
+        t.send({"a": arr}, mode="pipelined")
+    t.data.flush()
+    t.recv_msg(timeout_s=60)                  # parent drained the warmup
+    base = dict(vars(t.data.stats))           # post-warmup counter baseline
+    for _ in range(n):
+        t.send({"a": arr}, mode="pipelined")
+    t.data.flush()
+    stats = vars(t.data.stats)
+    out = {k: stats[k] - base[k]
+           for k in ("meta_pickles", "sends", "coalesced_sends")}
+    if t.data.governor is not None:
+        out["governor"] = t.data.governor.snapshot()
+    t.send_msg(out, timeout_s=60)
+    t.recv_msg(timeout_s=60)                  # hold mapping until parent done
+    t.close()
+
+
+# -- measurement -------------------------------------------------------------
+
+def _bench(variant: str, size: int, n: int):
+    from repro.ipc import ShmTransport
+
+    ctx = mp.get_context("spawn")
+    t = ShmTransport.create(spec=_spec(size), policy=_policy(variant))
+    p = ctx.Process(target=_producer, args=(t.name, variant, size, n),
+                    daemon=True)
+    p.start()
+    t.recv_msg(timeout_s=60)
+    t.send_msg("go", timeout_s=60)
+    for _ in range(_WARMUP):
+        t.recv(timeout_s=60, copy=False).release()
+    t.send_msg("drained", timeout_s=60)
+    ring = t.data.rx
+    produced0 = ring.produced
+    unpickles0 = t.data.stats.meta_unpickles
+    t0 = time.perf_counter()
+    checksum = 0
+    for _ in range(n):
+        with t.recv(timeout_s=60, copy=False) as lease:
+            checksum += int(lease.tree["a"][-1])
+    dt = time.perf_counter() - t0
+    doorbells = ring.produced - produced0
+    unpickles = t.data.stats.meta_unpickles - unpickles0
+    child = t.recv_msg(timeout_s=60)
+    t.send_msg("done", timeout_s=60)
+    p.join(timeout=60)
+    t.close()
+    assert checksum == n * (size // 8 - 1)
+    assert child["sends"] == n
+    pickles_per_send = (child["meta_pickles"] + unpickles) / n
+    return dt, doorbells / n, pickles_per_send
+
+
+_ROUNDS = 5       # interleaved rotated rounds, median per variant: this
+                  # host's memory bandwidth swings ~5x on a seconds scale
+                  # (shared machine), so each variant gets several short
+                  # draws spread across the sweep and reports its median —
+                  # load swings hit every variant, not just whichever ran
+                  # during a slow patch, and a median (unlike a min) gives
+                  # the 1-config adaptive run and the 2-config "best
+                  # static" the same number of effective draws
+
+
+def run():
+    for size in SIZES:
+        n = _n_msgs(size)
+        kb = size >> 10
+        rounds: dict = {v: [] for v in VARIANTS}
+        for r in range(_ROUNDS):
+            for i in range(len(VARIANTS)):
+                variant = VARIANTS[(i + r) % len(VARIANTS)]
+                rounds[variant].append(_bench(variant, size, n))
+        med: dict = {}
+        for variant in VARIANTS:
+            runs = sorted(rounds[variant])
+            dt, doorbells, pickles = runs[len(runs) // 2]
+            med[variant] = dt
+            yield fmt_row(
+                f"fig7/{variant}/{kb}KB", dt / n * 1e6,
+                f"{size * n / dt / (1 << 20):.0f}MB/s;{n / dt:.0f}msg/s;"
+                f"doorbells/msg={doorbells:.2f};pickle/send={pickles:.2f}")
+        best_static = min(med["static"], med["coalesced"])
+        yield fmt_row(f"fig7/adaptive_margin/{kb}KB", 0.0,
+                      f"{best_static / med['adaptive']:.2f}x_of_best_static")

@@ -32,6 +32,7 @@ from benchmarks import (
     fig4_buffer_reuse,
     fig5_vmem_injection,
     fig6_large_payloads,
+    fig7_small_messages,
     fig9_latency_model,
     fig10_modes,
     fig11_batch_sweep,
@@ -50,6 +51,7 @@ MODULES = {
     "fig4": fig4_buffer_reuse,
     "fig5": fig5_vmem_injection,
     "fig6": fig6_large_payloads,
+    "fig7": fig7_small_messages,
     "fig9": fig9_latency_model,
     "fig10": fig10_modes,
     "fig11": fig11_batch_sweep,
@@ -68,9 +70,21 @@ MODULES = {
 # fig6 point (2 fill chunks + 1 publish per message, one ring each);
 # only a notify-happier submission path (e.g. ringing per SG entry or
 # per park retry) can exceed it.
+#
+# The fig7 control-plane metrics: doorbells/msg counts ring publishes
+# per message (exactly 1.0 static; < 1 whenever send coalescing engages).
+# Frame fill depth wobbles with scheduling — the window flushes partial
+# frames when the producer stalls — so the gate allows 1.5x the recorded
+# coalescing level + 0.1: a recorded 0.12 (K≈8) may drift to 0.28, but a
+# path that stops coalescing (→1.0) or rings per sub-message fails.
+# pickle/send counts meta-path pickle calls per message across both
+# endpoints — 0 in steady state (binary headers + descriptor caches), so
+# any regression that reintroduces per-send pickling fails the gate.
 CHECKED_METRICS = {
     "copies/req": (1.0, 0.01),
     "doorbells/req": (1.0, 3.0),
+    "doorbells/msg": (1.5, 0.1),
+    "pickle/send": (1.0, 0.01),
 }
 
 

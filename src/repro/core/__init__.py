@@ -17,6 +17,7 @@ from repro.core.policy import (
     SYNC_INLINE,
     SYNC_OFFLOAD,
 )
+from repro.core.governor import ChannelGovernor, GovernorStats, size_class
 from repro.core.latency import LatencyModel, calibrate
 from repro.core.copyengine import (
     CopyEngine,
@@ -32,9 +33,10 @@ from repro.core.queuepair import BufferPool, QueuePair
 from repro.core.dispatcher import QueryHandler, RequestDispatcher
 
 __all__ = [
-    "ASYNC_OFFLOAD", "AsyncTransferEngine", "BufferPool", "CopyEngine",
-    "CopyJob", "Descriptor", "Device", "EngineStats", "ExecutionMode",
-    "HybridPollStats", "LatencyModel", "OffloadPolicy", "PIPELINED_OFFLOAD",
-    "QueryHandler", "QueuePair", "RequestDispatcher", "SGList", "SYNC_INLINE",
-    "SYNC_OFFLOAD", "TransferJob", "calibrate", "get_engine", "set_engine",
+    "ASYNC_OFFLOAD", "AsyncTransferEngine", "BufferPool", "ChannelGovernor",
+    "CopyEngine", "CopyJob", "Descriptor", "Device", "EngineStats",
+    "ExecutionMode", "GovernorStats", "HybridPollStats", "LatencyModel",
+    "OffloadPolicy", "PIPELINED_OFFLOAD", "QueryHandler", "QueuePair",
+    "RequestDispatcher", "SGList", "SYNC_INLINE", "SYNC_OFFLOAD",
+    "TransferJob", "calibrate", "get_engine", "set_engine", "size_class",
 ]

@@ -95,12 +95,18 @@ class CopyEngineStats(HybridPollStats):
     parked: int = 0              # WouldBlock retries (stalled-queue backoff)
     tagged: dict = field(default_factory=lambda: defaultdict(int))
     tagged_bytes: dict = field(default_factory=lambda: defaultdict(int))
+    # counted control-plane events (no timing): integrated paths report
+    # e.g. coalesced frames/messages and per-send pickle calls here so
+    # doorbells-per-message and pickle-calls-per-send are process-wide
+    # counted metrics the CI gate can read, like copies-per-request
+    events: dict = field(default_factory=lambda: defaultdict(int))
 
     def snapshot(self) -> dict:
         """Plain-dict copy with the tag maps materialized."""
         out = dict(self.__dict__)
         out["tagged"] = dict(self.tagged)
         out["tagged_bytes"] = dict(self.tagged_bytes)
+        out["events"] = dict(self.events)
         return out
 
 
@@ -238,6 +244,7 @@ class CopyJob:
         self.job_id = next(self._ids)
         self.nbytes = nbytes
         self.submit_t = time.perf_counter()
+        self.finished_t: Optional[float] = None
         self._policy = policy
         self._latency = latency
         self._stats = stats
@@ -248,10 +255,16 @@ class CopyJob:
     # -- engine side ----------------------------------------------------------
     def _finish(self, value: Any) -> None:
         self._value = value
+        # completion-record timestamp: submit_t..finished_t is the
+        # submitter-visible cost of the offloaded route (queue wait + copy
+        # + publish), the feedback the adaptive governor learns from —
+        # no extra clock reads on the submitter's hot path
+        self.finished_t = time.perf_counter()
         self._event.set()
 
     def _fail(self, exc: BaseException) -> None:
         self._exc = exc
+        self.finished_t = time.perf_counter()
         self._event.set()
 
     # -- submitter side -------------------------------------------------------
@@ -350,16 +363,29 @@ class CopyEngine:
             np.copyto(dst, src.reshape(-1).view(np.uint8))
 
     def run_sg(self, sg: SGList, injection: Optional[bool] = None,
-               tag: str = "copy", count_copies: Optional[int] = None) -> None:
+               tag: str = "copy", count_copies: Optional[int] = None,
+               account: bool = True) -> None:
         """Execute an SG list on the *caller's* thread (inline/below-
         threshold paths), with the same injection selection and counting
         as an offloaded descriptor.  ``count_copies`` overrides the
-        logical copy count (chunked fills: one leaf, many entries)."""
+        logical copy count (chunked fills: one leaf, many entries).
+        ``account=False`` skips the counter update — for per-message
+        copies inside a coalesced frame, which the channel accounts once
+        per frame via :meth:`count` (identical totals, one engine-lock
+        round-trip instead of K on the small-message hot path)."""
         inject = (self.policy.injection_enabled() if injection is None
                   else injection)
         for e in sg.entries:
             self._copy_entry(e, streaming=not inject)
-        self._account(sg.entries, sg.nbytes, inject, tag, count_copies)
+        if account:
+            self._account(sg.entries, sg.nbytes, inject, tag, count_copies)
+
+    def count_event(self, name: str, n: int = 1) -> None:
+        """Count a control-plane event (frame published, message coalesced,
+        meta pickle call) — the non-copy analogue of :meth:`count`, read by
+        the benchmark gates as a timing-independent metric."""
+        with self._cv:
+            self.stats.events[name] += n
 
     def count(self, tag: str, copies: int, nbytes: int,
               injection: bool = True) -> None:

@@ -1,0 +1,349 @@
+"""Adaptive hybrid-coordination governor (the paper's §IV/Table III as a
+feedback loop instead of constants).
+
+The static :class:`~repro.core.policy.OffloadPolicy` picks a per-message
+strategy from fixed thresholds: ``offload_threshold_bytes`` splits inline
+vs offloaded copies, ``heap_threshold_bytes`` splits slot vs bulk-heap,
+and coalescing is on or off.  Those constants encode one machine's
+break-evens; the paper's point is that the *fixed* costs they trade off
+(slot claim, doorbell, poll wakeup, submission round-trip) are exactly
+the ones that drift with host load, core count, and queue depth.
+
+:class:`ChannelGovernor` replaces the constants with measurement.  Per
+**size class** (log2 bucket of payload bytes) it keeps an EWMA of the
+observed per-message cost of every *route* it has tried:
+
+- ``inline``   — the caller copies into the slot and publishes (sync/DTO);
+- ``offload``  — the copy engine performs claim+copy+publish async;
+- ``coalesce`` — the message joins a microbatch frame, amortizing slot
+  claim, meta encode, and doorbell K-ways (``FLAG_COALESCED``);
+- ``heap``     — the payload rides bulk-heap extents, the ring only a
+  descriptor.
+
+``decide()`` returns the cheapest *eligible* route for the message's
+class.  Eligibility is semantic, not learned: sync-mode sends can never
+leave the caller before completion (no offload/coalesce), payloads over
+the slot capacity must take the heap, and coalescing requires enough
+queue **occupancy** (EWMA of the tx backlog the channel reports) that a
+frame actually fills — batching a depth-1 request/reply stream would add
+latency for nothing, which is the load-awareness half of the paper's
+hybrid coordination (cf. Shenango/Shimmy-style load-aware polling).
+
+Exploration is deterministic, bounded, and **bursty**: routes are probed
+in runs of ``explore_burst`` consecutive messages — single-message
+probes would be both unfair (a lone coalesced message makes a 1-deep
+frame, measuring none of the amortization) and disruptive (every route
+flip flushes the open frame early).  A route with fewer than
+``min_samples`` observations is burst-probed first (cold start, fewest
+samples first), after that every ``explore_every``-th decision per class
+starts a re-probe burst of the stalest route so a drifted break-even is
+re-learned.  Between bursts the class *sticks* to its current route and
+only switches when a competitor's EWMA beats it by ``switch_margin``
+(hysteresis — measurement jitter alone cannot cause flip-flopping).
+Unmeasured routes are seeded with priors from the calibrated
+:class:`~repro.core.latency.LatencyModel` and the static policy
+thresholds, so a cold adaptive channel behaves like the static one.
+
+No timers run in the data plane: the channel feeds ``observe()`` with
+timings it already takes (send duration, completion-record timestamps)
+and ``observe_occupancy()`` with shared-counter reads; the governor
+itself never calls the clock.
+"""
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass, field
+from typing import Optional, Sequence
+
+from repro.core.latency import LatencyModel
+from repro.core.policy import OffloadPolicy
+
+# route names (wire-stable: they appear in stats snapshots and benchmarks)
+INLINE, OFFLOAD, COALESCE, HEAP = "inline", "offload", "coalesce", "heap"
+ROUTES = (INLINE, OFFLOAD, COALESCE, HEAP)
+
+#: log2 size-class floor: everything below 1 KB shares one class (the
+#: control-plane cost dominates; distinguishing 64 B from 512 B is noise)
+_MIN_CLASS = 10
+_MAX_CLASS = 32
+
+
+def size_class(nbytes: int) -> int:
+    """Log2 bucket of a payload size (classes ``_MIN_CLASS.._MAX_CLASS``)."""
+    return min(max((max(nbytes, 1) - 1).bit_length(), _MIN_CLASS),
+               _MAX_CLASS)
+
+
+@dataclass
+class RouteEstimate:
+    """One (size class, route) cell: EWMA cost + sample accounting."""
+    ewma_us: float = 0.0
+    samples: int = 0
+    picks: int = 0              # decisions routed here (immediate, unlike
+                                # samples, which lag behind async completion)
+    last_decision: int = 0      # decision index of the last observation
+
+    def observe(self, us: float, alpha: float) -> None:
+        if self.samples == 0:
+            self.ewma_us = us
+        else:
+            # winsorize: on coarse-timer kernels a single stray quantum
+            # sleep is a ~1 ms outlier on a ~30 µs route — letting it
+            # through would inflate the estimate past any hysteresis
+            # margin and flip the route on scheduler noise rather than
+            # cost.  While cold (< 16 samples) use a running mean (1/n
+            # decay washes an unlucky early draw out linearly; an EWMA
+            # would anchor on it for dozens of samples).
+            us = min(us, 4.0 * self.ewma_us)
+            if self.samples < 16:
+                self.ewma_us += (us - self.ewma_us) / (self.samples + 1)
+            else:
+                self.ewma_us += alpha * (us - self.ewma_us)
+        self.samples += 1
+
+
+@dataclass
+class GovernorStats:
+    """Counted decisions (no timing): route picks, exploration, flips."""
+    decisions: int = 0
+    explored: int = 0            # decisions spent (re)probing a route
+    flips: int = 0               # class best-route changes observed
+    picks: dict = field(default_factory=dict)     # route -> count
+
+    def snapshot(self) -> dict:
+        out = dict(self.__dict__)
+        out["picks"] = dict(self.picks)
+        return out
+
+
+class ChannelGovernor:
+    """Measured break-even route selection for one channel.
+
+    Thread-safety: a channel may be driven by several sender threads, and
+    its observation callbacks fire under different channel locks (frame
+    flush, in-flight pruning) or none at all (inline sampling) — so the
+    governor guards its own state with one internal lock.  ``decide``'s
+    steady state is a cached dict hit, so the lock is held for well under
+    a microsecond per message.
+    """
+
+    def __init__(self, policy: Optional[OffloadPolicy] = None,
+                 latency: Optional[LatencyModel] = None,
+                 alpha: float = 0.1,
+                 occupancy_alpha: float = 0.1,
+                 min_samples: int = 12,
+                 explore_burst: int = 8,
+                 explore_every: int = 128,
+                 refresh_every: int = 32,
+                 switch_margin: float = 0.75,
+                 min_coalesce_occupancy: float = 1.5):
+        self.policy = policy or OffloadPolicy()
+        self.latency = latency or LatencyModel()
+        self.alpha = alpha
+        self.occupancy_alpha = occupancy_alpha
+        self.min_samples = min_samples
+        self.explore_burst = max(1, explore_burst)
+        self.explore_every = explore_every
+        self.refresh_every = max(1, refresh_every)
+        self.switch_margin = switch_margin
+        self.min_coalesce_occupancy = min_coalesce_occupancy
+        self.stats = GovernorStats()
+        self._lock = threading.Lock()
+        self._occ_ewma = 0.0
+        # (class) -> {route -> RouteEstimate}; (class) -> decision counter
+        self._est: dict[int, dict[str, RouteEstimate]] = {}
+        self._decisions: dict[int, int] = {}
+        self._best: dict[int, str] = {}
+        # decision cache: (class) -> [route, valid-until decision index].
+        # The full evaluation (eligibility, due re-probes, argmin) runs
+        # every refresh_every decisions — or once per exploration burst —
+        # so the steady-state decide() is one dict hit, not eight EWMA
+        # comparisons on every message of a 30 µs hot path.
+        self._cached: dict[int, list] = {}
+
+    # -- feedback -------------------------------------------------------------
+    def observe(self, route: str, nbytes: int, us: float) -> None:
+        """Feed one measured per-message cost (µs) for a route."""
+        if us < 0.0:
+            return
+        cls = size_class(nbytes)
+        with self._lock:
+            cell = self._cell(cls, route)
+            now = self._decisions.get(cls, 0)
+            if (cell.samples and self.explore_every
+                    and now - cell.last_decision > 2 * self.explore_every):
+                # stale estimate being re-probed: restart the robust mean
+                # so the burst re-learns the cost in explore_burst samples
+                # — decaying an EWMA from a wrong old anchor would delay a
+                # clearly-due route flip by hundreds of messages
+                cell.samples = 0
+            cell.observe(us, self.alpha)
+            cell.last_decision = now
+
+    def wants_sample(self, route: str, nbytes: int) -> bool:
+        """True while a route's estimate is still cold — callers that
+        subsample their cost measurements (the inline hot path) observe
+        every message until the cell has a trustworthy baseline."""
+        cell = self._est.get(size_class(nbytes), {}).get(route)
+        return cell is None or cell.samples < 4 * self.min_samples
+
+    def observe_occupancy(self, backlog: float) -> None:
+        """Feed the sender-side queue depth (tx ring backlog + pending
+        frame entries) — the load signal gating coalescing."""
+        with self._lock:
+            self._occ_ewma += self.occupancy_alpha * (backlog
+                                                      - self._occ_ewma)
+
+    @property
+    def occupancy(self) -> float:
+        """Current EWMA of the observed queue occupancy."""
+        return self._occ_ewma
+
+    # -- priors (cold start ≈ the static Table III policy) --------------------
+    def _prior_us(self, route: str, nbytes: int) -> float:
+        base = self.latency.predict_us(nbytes)
+        if route == INLINE:
+            return base
+        if route == OFFLOAD:
+            # static threshold as a prior: offload looks cheaper above it
+            return base * (0.6 if self.policy.should_offload(nbytes) else 1.5)
+        if route == COALESCE:
+            # amortization hope: fixed cost split ~4 ways until measured
+            return (self.latency.l_fixed_us / 4.0
+                    + self.latency.alpha_us_per_mb * nbytes / (1 << 20))
+        # HEAP: descriptor-passing beats slot copy above the static threshold
+        return base * (0.8 if nbytes >= self.policy.heap_threshold_bytes
+                       else 2.0)
+
+    def _cell(self, cls: int, route: str) -> RouteEstimate:
+        per = self._est.get(cls)
+        if per is None:
+            per = self._est[cls] = {}
+        cell = per.get(route)
+        if cell is None:
+            cell = per[route] = RouteEstimate()
+        return cell
+
+    def _cost_us(self, cls: int, route: str, nbytes: int) -> float:
+        cell = self._est.get(cls, {}).get(route)
+        if cell is None or cell.samples == 0:
+            return self._prior_us(route, nbytes)
+        return cell.ewma_us
+
+    # -- the decision ---------------------------------------------------------
+    def decide(self, nbytes: int, eligible: Sequence[str],
+               backlog_fn=None) -> str:
+        """Pick a route for one message among the semantically *eligible*
+        ones (the channel enforces mode/size/capacity legality; the
+        governor layers load-awareness and measured break-evens on top).
+
+        ``backlog_fn`` lazily supplies the sender-side queue depth — it is
+        only called on the (every ``refresh_every``-th) full evaluation,
+        keeping shared-counter reads off the per-message fast path.
+        """
+        cls = size_class(nbytes)
+        backlog = None
+        with self._lock:
+            n = self._decisions.get(cls, 0) + 1
+            self._decisions[cls] = n
+            self.stats.decisions += 1
+            cached = self._cached.get(cls)
+            if cached is not None and n < cached[1] and cached[0] in eligible:
+                pick = cached[0]
+                self.stats.picks[pick] = self.stats.picks.get(pick, 0) + 1
+                return pick
+        if backlog_fn is not None:       # outside the lock: counter reads
+            backlog = backlog_fn()
+        with self._lock:
+            if backlog is not None:
+                self._occ_ewma += self.occupancy_alpha * (backlog
+                                                          - self._occ_ewma)
+            routes = [r for r in ROUTES if r in eligible]
+            if COALESCE in routes and len(routes) > 1 \
+                    and self._occ_ewma < self.min_coalesce_occupancy:
+                routes.remove(COALESCE)  # not enough backlog to fill a frame
+            if len(routes) == 1:
+                pick, ttl = routes[0], self.refresh_every
+            else:
+                pick, ttl = self._pick(cls, routes, nbytes, n)
+            self._cell(cls, pick).picks += ttl   # cached decisions included
+            self._cached[cls] = [pick, n + ttl]
+            self.stats.picks[pick] = self.stats.picks.get(pick, 0) + 1
+            return pick
+
+    def _samples(self, cls: int, route: str) -> int:
+        cell = self._est.get(cls, {}).get(route)
+        return 0 if cell is None else cell.samples
+
+    def _pick(self, cls: int, routes: list[str], nbytes: int,
+              n: int) -> tuple[str, int]:
+        """Full route evaluation; returns ``(route, decisions-to-cache)``.
+        Exploration always runs as a *burst* of ``explore_burst`` cached
+        decisions — a lone coalesced probe would measure a 1-deep frame
+        (no amortization) and every route flip flushes the open frame."""
+        # cold start: burst-probe any route still under min_samples
+        # (deterministic: fewest samples first, route declaration order
+        # breaking ties) so every eligible route gets a fair measurement —
+        # min_samples spans two bursts, so a baseline is never a single
+        # contiguous window of one host-load patch.  Bounded by *picks*:
+        # async routes report their cost via lagging completion records,
+        # and treating "picked a lot, few samples yet" as still-cold would
+        # keep burst-probing the slowest route exactly because it is slow
+        cold = [r for r in routes
+                if self._samples(cls, r) < self.min_samples
+                and self._cell(cls, r).picks < 2 * self.explore_burst]
+        if cold:
+            route = min(cold, key=lambda r: (self._samples(cls, r),
+                                             ROUTES.index(r)))
+            self.stats.explored += 1
+            return route, self.explore_burst
+        # periodic re-probe bursts with cost-ratio backoff: a route whose
+        # measured cost is r× the best is revisited r× less often (up to
+        # 64×), so confirming that offload is terrible for 4 KB messages
+        # costs an asymptotically vanishing share of the stream while a
+        # drifted break-even is still re-learned
+        if self.explore_every:
+            best_cost = min(self._cost_us(cls, r, nbytes) for r in routes)
+            incumbent = self._best.get(cls)
+            due_route, due_at = None, None
+            for r in routes:
+                if r == incumbent:
+                    continue           # continuously observed anyway
+                ratio = max(1.0, min(self._cost_us(cls, r, nbytes)
+                                     / max(best_cost, 1e-9), 64.0))
+                due = (self._est[cls][r].last_decision
+                       + self.explore_every * ratio)
+                if due <= n and (due_at is None or due < due_at):
+                    due_route, due_at = r, due
+            if due_route is not None:
+                self.stats.explored += 1
+                return due_route, self.explore_burst
+        # exploit with hysteresis: stick to the incumbent unless a
+        # competitor's measured cost beats it by the switch margin
+        current = self._best.get(cls)
+        challenger = min(routes,
+                         key=lambda r: (self._cost_us(cls, r, nbytes),
+                                        ROUTES.index(r)))
+        if current in routes and challenger != current:
+            if (self._cost_us(cls, challenger, nbytes)
+                    >= self.switch_margin * self._cost_us(cls, current,
+                                                          nbytes)):
+                return current, self.refresh_every
+            self.stats.flips += 1       # margin cleared: real break-even move
+        self._best[cls] = challenger
+        return challenger, self.refresh_every
+
+    # -- introspection --------------------------------------------------------
+    def snapshot(self) -> dict:
+        """Per-class route costs + decision counters (benchmark rows,
+        ``ShmTransport.stats()``)."""
+        with self._lock:
+            classes = {}
+            for cls, per in sorted(self._est.items()):
+                classes[cls] = {
+                    r: {"ewma_us": round(c.ewma_us, 3), "samples": c.samples}
+                    for r, c in per.items()}
+            return {"occupancy": round(self._occ_ewma, 3),
+                    "best": dict(self._best),
+                    "classes": classes,
+                    **self.stats.snapshot()}

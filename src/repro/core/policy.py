@@ -63,6 +63,32 @@ class OffloadPolicy:
     # the copy of message k+1 overlaps the peer's drain of message k and a
     # single fat fill cannot monopolize an engine worker between doorbells
     heap_chunk_bytes: int = 8 << 20
+    # small-message fast path (send coalescing): async/pipelined messages
+    # at/below coalesce_bytes are packed into one ring slot as a microbatch
+    # frame of up to coalesce_max sub-messages (FLAG_COALESCED), amortizing
+    # slot claim, meta encode, and doorbell K-ways.  0 disables the static
+    # path; the adaptive governor may still coalesce (it uses
+    # coalesce_limit_bytes() as the structural cap).  A partially filled
+    # frame is flushed by the next non-coalesced send, an explicit
+    # flush()/handle.wait(), or the first send after coalesce_window_us.
+    coalesce_bytes: int = 0
+    coalesce_max: int = 8
+    coalesce_window_us: float = 200.0
+    # per-message strategy selection: "static" keeps the threshold
+    # constants above; "adaptive" installs a core.governor.ChannelGovernor
+    # per channel that picks inline/offload/coalesce/heap from measured
+    # per-size-class cost EWMAs and queue occupancy (the paper's hybrid
+    # coordination as a feedback loop — Table III learned, not hardcoded)
+    governor: str = "static"
+
+    def coalesce_limit_bytes(self) -> int:
+        """Structural coalescing cap: the static knob when set, else the
+        128 KB default the adaptive governor explores under.  Coalescing
+        amortizes *fixed* control-plane cost; past ~128 KB the payload
+        copy dominates and batching K copies behind one publish only
+        coarsens pipelining granularity (the consumer idles while a
+        multi-MB frame fills), so the governor does not explore there."""
+        return self.coalesce_bytes if self.coalesce_bytes > 0 else 128 << 10
 
     def should_offload(self, nbytes: int) -> bool:
         if self.device == Device.INLINE:

@@ -1,15 +1,22 @@
-"""Typed channels over shm rings: numpy pytrees, ROCKET send modes.
+"""Typed channels over shm rings: numpy pytrees, ROCKET modes, fast paths.
 
 A :class:`DataChannel` sends pytrees (nested dict/list/tuple) of numpy
 arrays through one :class:`~repro.ipc.ring.Ring`.  The wire format is
 
-- **meta**: ``[u32 descriptor length | descriptor pickle | header pickle]``
-  where the descriptor mirrors the tree structure with each array leaf
-  replaced by ``(offset, shape, dtype)``.  Descriptors are **cached by
-  structural signature** (tree shape + leaf shapes/dtypes) on the sender
-  and by descriptor bytes on the receiver, so steady-state sends of a
-  stable structure skip ``pickle.dumps``/``loads`` of the descriptor
-  entirely — only the small per-message header is pickled;
+- **meta**: ``[u8 format | u32 descriptor length | descriptor pickle |
+  header]`` encoded *directly into the claimed slot's meta region* (no
+  staging allocation).  The descriptor mirrors the tree structure with
+  each array leaf replaced by ``(offset, shape, dtype)`` and is **cached
+  by structural signature** (tree shape + leaf shapes/dtypes) on the
+  sender and by descriptor bytes on the receiver.  The header is
+  struct-packed by a tiny tag codec (``META_BINARY``) covering
+  scalars/strings/bytes/int-tuples — the steady-state case — with a
+  transparent per-message fallback to pickle (``META_PICKLE``) for rich
+  headers.  Together the caches + binary headers make the steady-state
+  send/recv hot path **pickle-free**; every residual ``pickle.dumps`` /
+  ``loads`` on the meta path is counted (``ChannelStats.meta_pickles`` /
+  ``meta_unpickles``), so "0 pickle calls per send" is a gated metric,
+  not a hope;
 - **payload**: the arrays' bytes packed back-to-back at 64-byte-aligned
   offsets inside the slot — one scatter-gather descriptor per tree,
   executed by the process-wide :class:`~repro.core.copyengine.CopyEngine`
@@ -30,8 +37,27 @@ the tier-1 engine (the paper's Table III):
   ``pipeline_depth`` sends are outstanding the oldest is completed first
   (backpressure), with the blocking wait held *outside* the channel lock.
 
-Small below-threshold messages stay inline in every mode (size-based
-offload control).
+**Send coalescing** (the small-message fast path): with
+``policy.coalesce_bytes > 0`` (or under the adaptive governor) an
+async/pipelined message at/below the coalescing cap joins a **microbatch
+frame**: the channel claims one ring slot, packs up to
+``policy.coalesce_max`` sub-messages into it (payloads back-to-back,
+each sub-message's meta encoded into the slot's meta region behind a
+sub-message table), and publishes the whole frame under ONE state flip
+(``FLAG_COALESCED``) — slot claim, meta encode, and doorbell amortized
+K-ways, which is what makes doorbells-per-message < 1 a counted metric.
+A partial frame is flushed by the next non-coalesced send, an explicit
+``flush()``/``handle.wait()``, or the first send after
+``policy.coalesce_window_us``.  The receiver unpacks a frame into K
+*independent* leases sharing one refcounted slot reader: the slot
+recycles when the last lease releases.
+
+**Per-message strategy selection**: with ``policy.governor="adaptive"``
+a :class:`~repro.core.governor.ChannelGovernor` replaces the static
+``offload_threshold_bytes`` decision — it picks inline / offload /
+coalesce / heap per message from measured per-size-class cost EWMAs and
+queue occupancy (the paper's hybrid coordination as a feedback loop).
+Static policy keeps the exact pre-governor semantics.
 
 The **reserve-then-fill** path (:meth:`DataChannel.reserve`) exposes the
 ring's :class:`~repro.ipc.ring.SlotWriter` as a typed :class:`TxSlot`:
@@ -55,6 +81,7 @@ lease acting as byte-granular backpressure on the sender's allocator.
 """
 from __future__ import annotations
 
+import math
 import pickle
 import struct
 import threading
@@ -74,11 +101,19 @@ from repro.core.copyengine import (
     get_engine,
     split_sg,
 )
+from repro.core.governor import (
+    COALESCE,
+    HEAP,
+    INLINE,
+    OFFLOAD,
+    ChannelGovernor,
+)
 from repro.core.latency import LatencyModel
-from repro.core.policy import ExecutionMode, OffloadPolicy
+from repro.core.policy import Device, ExecutionMode, OffloadPolicy
 from repro.core.queuepair import drain_to_depth
 from repro.ipc.heap import MAX_SEGMENTS, BulkHeap, HeapExhausted
 from repro.ipc.ring import (
+    FLAG_COALESCED,
     FLAG_HEAP,
     ChannelClosed,
     Ring,
@@ -94,6 +129,160 @@ _DESCR_CACHE_MAX = 64
 # header key carrying the heap scatter list on the wire (stripped before
 # the header dict reaches the application)
 _HX_KEY = "__rocket_hx__"
+
+# ---------------------------------------------------------------------------
+# wire meta formats (first byte of the slot meta region)
+# ---------------------------------------------------------------------------
+
+#: ``[u8 0 | u32 dlen | descr pickle | header pickle]`` — rich-header
+#: fallback (counted: ``ChannelStats.meta_pickles``)
+META_PICKLE = 0
+#: ``[u8 1 | u32 dlen | descr pickle | binary header]`` — steady state:
+#: no pickle anywhere on the per-message path
+META_BINARY = 1
+#: coalesced frame: ``[u8 2 | u16 K | K×(u32 meta_off | u32 meta_len |
+#: u32 pay_off | u32 pay_len) | sub-metas…]`` with payloads packed into
+#: the slot payload region at each ``pay_off`` (used with FLAG_COALESCED)
+META_FRAME = 2
+
+_B8 = struct.Struct("<B")
+_U16 = struct.Struct("<H")
+_I64 = struct.Struct("<q")
+_F64 = struct.Struct("<d")
+_FRAME_HDR = struct.Struct("<BH")          # format byte + sub-message count
+_FRAME_ENTRY = struct.Struct("<IIII")      # meta_off, meta_len, pay_off, pay_len
+_META_FIXED = 5                            # u8 format + u32 dlen
+
+# binary header value tags
+_TAG_NONE, _TAG_TRUE, _TAG_FALSE = 0, 1, 2
+_TAG_INT, _TAG_FLOAT, _TAG_STR, _TAG_BYTES = 3, 4, 5, 6
+_TAG_TUPLE, _TAG_LIST = 7, 8
+_I64_MIN, _I64_MAX = -(1 << 63), (1 << 63) - 1
+
+
+class MetaOverflow(ValueError):
+    """The encoded meta would not fit the slot's meta region."""
+
+
+class _Unencodable(Exception):
+    """Header value outside the binary codec's vocabulary (pickle it)."""
+
+
+def _put(mv: memoryview, off: int, st: struct.Struct, *vals) -> int:
+    if off + st.size > len(mv):
+        raise MetaOverflow(f"meta exceeds capacity {len(mv)} B")
+    st.pack_into(mv, off, *vals)
+    return off + st.size
+
+
+def _put_bytes(mv: memoryview, off: int, b: bytes) -> int:
+    end = off + len(b)
+    if end > len(mv):
+        raise MetaOverflow(f"meta exceeds capacity {len(mv)} B")
+    mv[off:end] = b
+    return end
+
+
+def _enc_value(mv: memoryview, off: int, v) -> int:
+    """Binary-encode one header value; raises :class:`_Unencodable` for
+    anything outside the flat scalar/bytes/int-tuple vocabulary."""
+    if v is None:
+        return _put(mv, off, _B8, _TAG_NONE)
+    if v is True:
+        return _put(mv, off, _B8, _TAG_TRUE)
+    if v is False:
+        return _put(mv, off, _B8, _TAG_FALSE)
+    if isinstance(v, int) and not isinstance(v, bool):
+        if not (_I64_MIN <= v <= _I64_MAX):
+            raise _Unencodable
+        off = _put(mv, off, _B8, _TAG_INT)
+        return _put(mv, off, _I64, v)
+    if isinstance(v, float):
+        off = _put(mv, off, _B8, _TAG_FLOAT)
+        return _put(mv, off, _F64, v)
+    if isinstance(v, str):
+        b = v.encode("utf-8")
+        off = _put(mv, off, _B8, _TAG_STR)
+        off = _put(mv, off, _U32, len(b))
+        return _put_bytes(mv, off, b)
+    if isinstance(v, (bytes, bytearray)):
+        off = _put(mv, off, _B8, _TAG_BYTES)
+        off = _put(mv, off, _U32, len(v))
+        return _put_bytes(mv, off, bytes(v))
+    if isinstance(v, (tuple, list)):
+        if len(v) > 0xFFFF:
+            raise _Unencodable
+        off = _put(mv, off, _B8,
+                   _TAG_TUPLE if isinstance(v, tuple) else _TAG_LIST)
+        off = _put(mv, off, _U16, len(v))
+        for item in v:
+            off = _enc_value(mv, off, item)
+        return off
+    raise _Unencodable
+
+
+def _enc_header(mv: memoryview, off: int, header: dict) -> int:
+    """Binary header: ``u16 n_items`` then per item ``u8 keylen | key |
+    value``.  Raises :class:`_Unencodable` on non-str keys or rich values
+    (the caller falls back to pickle for the whole header)."""
+    if len(header) > 0xFFFF:
+        raise _Unencodable
+    off = _put(mv, off, _U16, len(header))
+    for k, v in header.items():
+        if not isinstance(k, str):
+            raise _Unencodable
+        kb = k.encode("utf-8")
+        if len(kb) > 0xFF:
+            raise _Unencodable
+        off = _put(mv, off, _B8, len(kb))
+        off = _put_bytes(mv, off, kb)
+        off = _enc_value(mv, off, v)
+    return off
+
+
+def _dec_value(raw: bytes, off: int):
+    tag = raw[off]
+    off += 1
+    if tag == _TAG_NONE:
+        return None, off
+    if tag == _TAG_TRUE:
+        return True, off
+    if tag == _TAG_FALSE:
+        return False, off
+    if tag == _TAG_INT:
+        return _I64.unpack_from(raw, off)[0], off + 8
+    if tag == _TAG_FLOAT:
+        return _F64.unpack_from(raw, off)[0], off + 8
+    if tag == _TAG_STR:
+        (n,) = _U32.unpack_from(raw, off)
+        off += 4
+        return raw[off:off + n].decode("utf-8"), off + n
+    if tag == _TAG_BYTES:
+        (n,) = _U32.unpack_from(raw, off)
+        off += 4
+        return bytes(raw[off:off + n]), off + n
+    if tag in (_TAG_TUPLE, _TAG_LIST):
+        (n,) = _U16.unpack_from(raw, off)
+        off += 2
+        out = []
+        for _ in range(n):
+            v, off = _dec_value(raw, off)
+            out.append(v)
+        return (tuple(out) if tag == _TAG_TUPLE else out), off
+    raise ValueError(f"corrupt binary header (tag {tag})")
+
+
+def _dec_header(raw: bytes, off: int) -> dict:
+    (n,) = _U16.unpack_from(raw, off)
+    off += 2
+    out = {}
+    for _ in range(n):
+        klen = raw[off]
+        off += 1
+        key = raw[off:off + klen].decode("utf-8")
+        off += klen
+        out[key], off = _dec_value(raw, off)
+    return out
 
 
 # ---------------------------------------------------------------------------
@@ -172,7 +361,7 @@ def _unpack(descr, payload: memoryview, copy: bool):
         out = [_unpack(d, payload, copy) for d in descr]
         return out if isinstance(descr, list) else tuple(out)
     dtype = np.dtype(descr.dtype)
-    count = int(np.prod(descr.shape)) if descr.shape else 1
+    count = math.prod(descr.shape)
     arr = np.frombuffer(payload, dtype, count=count,
                         offset=descr.offset).reshape(descr.shape)
     return arr.copy() if copy else arr
@@ -220,7 +409,7 @@ def _unpack_heap(descr, heap: BulkHeap, direction: int, segments,
             out = [walk(v) for v in d]
             return out if isinstance(d, list) else tuple(out)
         dtype = np.dtype(d.dtype)
-        count = int(np.prod(d.shape)) if d.shape else 1
+        count = math.prod(d.shape)
         nbytes = count * dtype.itemsize
         pieces = heap.resolve(direction, segments, d.offset, nbytes,
                               total_nbytes)
@@ -255,7 +444,7 @@ def _writable_heap_tree(descr, heap: BulkHeap, direction: int, segments,
             out = [walk(v) for v in d]
             return out if isinstance(d, list) else tuple(out)
         dtype = np.dtype(d.dtype)
-        count = int(np.prod(d.shape)) if d.shape else 1
+        count = math.prod(d.shape)
         pieces = heap.resolve(direction, segments, d.offset,
                               count * dtype.itemsize, total_nbytes)
         if len(pieces) == 1:
@@ -289,30 +478,113 @@ def tree_nbytes(tree) -> int:
 # completion handles / leases
 # ---------------------------------------------------------------------------
 
+class _Frame:
+    """Sender-side open microbatch frame: one claimed slot being filled
+    with sub-messages (payloads copied at append; table + publish at
+    flush).  Lives under the channel's coalescing lock."""
+
+    __slots__ = ("writer", "kcap", "k", "meta_cursor", "pay_cursor",
+                 "table", "entries", "event", "err", "opened_t",
+                 "copies", "copied_bytes")
+
+    def __init__(self, writer: SlotWriter, kcap: int, opened_t: float):
+        self.writer = writer
+        self.kcap = kcap
+        self.k = 0
+        self.meta_cursor = _FRAME_HDR.size + kcap * _FRAME_ENTRY.size
+        self.pay_cursor = 0
+        self.table: list[tuple[int, int, int, int]] = []
+        self.entries: list[tuple[int, float]] = []   # (nbytes, append µs)
+        self.event = threading.Event()
+        self.err: Optional[BaseException] = None
+        self.opened_t = opened_t
+        self.copies = 0              # accounted once per frame at flush
+        self.copied_bytes = 0
+
+
 class SendHandle:
     """Completion flag for one send (the job-id side of the paper's API);
-    offloaded sends are backed by a copy-engine completion record."""
+    offloaded sends are backed by a copy-engine completion record,
+    coalesced sends by their frame's publish event (``wait`` flushes a
+    still-open frame — the pull side of partial-frame flushing)."""
 
     def __init__(self, channel: "DataChannel", nbytes: int,
-                 job: Optional[CopyJob] = None):
+                 job: Optional[CopyJob] = None,
+                 frame: Optional[_Frame] = None, route: str = INLINE):
         self.nbytes = nbytes
+        self.route = route
         self.submit_t = time.perf_counter()
         self._job = job
+        self._frame = frame
+        self._channel = channel if frame is not None else None
 
     def done(self) -> bool:
         """True once the copy has been published (never blocks)."""
+        if self._frame is not None:
+            return self._frame.event.is_set()
         return self._job is None or self._job.done()
 
     def failed(self) -> bool:
         """True when the offloaded send completed with an exception."""
+        if self._frame is not None:
+            return self._frame.err is not None
         return self._job is not None and self._job.failed()
 
     def wait(self, timeout_s: float = 30.0) -> None:
         """Hybrid-polling completion: size-aware deferral + short waits;
-        re-raises engine-side exceptions (e.g. a timed-out slot acquire)."""
+        re-raises engine-side exceptions (e.g. a timed-out slot acquire).
+        Waiting on a coalesced send flushes its frame first."""
+        if self._frame is not None:
+            if not self._frame.event.is_set():
+                self._channel._flush_frame(self._frame)
+            if self._frame.err is not None:
+                raise self._frame.err
+            self._frame = None
+            self._channel = None
+            return
         if self._job is not None:
+            # the job reference is kept (not nulled): a completed CopyJob's
+            # wait() returns immediately, and the governor reads its
+            # completion-record timestamps after the depth-drain wait
             self._job.wait(timeout_s)
-            self._job = None
+
+
+class _SharedFrameReader:
+    """Refcounted slot reader backing a coalesced frame's K leases: the
+    slot recycles when the LAST lease releases (lease independence —
+    release order is the consumer's business)."""
+
+    __slots__ = ("_reader", "_remaining", "_lock")
+
+    def __init__(self, reader: SlotReader, k: int):
+        self._reader = reader
+        self._remaining = k
+        self._lock = threading.Lock()
+
+    def ref(self) -> "_FrameSlotRef":
+        return _FrameSlotRef(self)
+
+    def _dec(self) -> None:
+        with self._lock:
+            self._remaining -= 1
+            last = self._remaining == 0
+        if last:
+            self._reader.release()
+
+
+class _FrameSlotRef:
+    """One lease's handle on the shared frame reader (duck-types the
+    ``release()`` a :class:`RecvLease` expects)."""
+
+    __slots__ = ("_shared",)
+
+    def __init__(self, shared: _SharedFrameReader):
+        self._shared = shared
+
+    def release(self) -> None:
+        shared, self._shared = self._shared, None
+        if shared is not None:
+            shared._dec()
 
 
 class RecvLease:
@@ -321,9 +593,11 @@ class RecvLease:
     A lease over a heap-routed message additionally owns its extents:
     ``release`` frees them back to the sender's allocator (``on_release``)
     — the *receiver-driven* reclamation that makes heap lifetime equal
-    lease lifetime, and a held lease the sender's backpressure."""
+    lease lifetime, and a held lease the sender's backpressure.  A lease
+    from a coalesced frame shares its slot with the frame's siblings and
+    holds it until the last of them releases."""
 
-    def __init__(self, tree, header: dict, reader: Optional[SlotReader],
+    def __init__(self, tree, header: dict, reader,
                  on_release=None):
         self.tree = tree
         self.header = header
@@ -369,19 +643,22 @@ class TxSlot:
     ``tree`` mirrors the template pytree with numpy views *into the
     destination* — a ring slot's payload region, or (for large templates)
     bulk-heap extents; write results straight into them, then
-    :meth:`publish`.  :meth:`abort` gives an unfillable reservation back
-    (slot path: a skip sentinel the receive path ignores; heap path: the
-    extents return to FREE — no ring slot was claimed yet, so there is
-    nothing to sentinel).  As a context manager it publishes on clean
-    exit and aborts if the block raised.
+    :meth:`publish` (which encodes the cached-descriptor meta directly
+    into the slot's meta region).  :meth:`abort` gives an unfillable
+    reservation back (slot path: a skip sentinel the receive path
+    ignores; heap path: the extents return to FREE — no ring slot was
+    claimed yet, so there is nothing to sentinel).  As a context manager
+    it publishes on clean exit and aborts if the block raised.
     """
 
-    def __init__(self, tree, writer: Optional[SlotWriter], meta: bytes,
+    def __init__(self, tree, writer: Optional[SlotWriter],
+                 descr_bytes: bytes, header: Optional[dict],
                  nbytes: int, channel: "DataChannel",
                  heap_state: Optional[dict] = None):
         self.tree = tree
         self._writer = writer
-        self._meta = meta
+        self._descr_bytes = descr_bytes
+        self._header = header
         self._nbytes = nbytes
         self._channel = channel
         self._heap = heap_state
@@ -408,22 +685,25 @@ class TxSlot:
                 ch._engine.run_sg(sg, injection=ch.policy.injection_enabled(),
                                   tag="heap_stage",
                                   count_copies=len(hs["staged"]))
-            meta = ch._meta_bytes(hs["descr_bytes"], hs["header"],
-                                  hs["segments"])
             with ch._send_lock:
                 w = ch.tx.acquire(hs["timeout_s"])
         except BaseException:
             heap.free(hs["segments"], heap.tx_dir)
             raise
-        w.meta[:len(meta)] = meta
-        w.publish(self._nbytes, len(meta), flags=FLAG_HEAP)
+        try:
+            ch._publish(w, self._descr_bytes, self._header, self._nbytes,
+                        flags=FLAG_HEAP, segments=hs["segments"])
+        except BaseException:
+            heap.free(hs["segments"], heap.tx_dir)
+            raise
         ch.stats.sends += 1
         ch.stats.inline += 1
         ch.stats.heap_sends += 1
         ch.stats.bytes_sent += self._nbytes
 
     def publish(self) -> None:
-        """Write the (cached) descriptor meta and ring the doorbell."""
+        """Encode the (cached) descriptor meta into the slot and ring the
+        doorbell."""
         if self._done:
             return
         self._done = True
@@ -434,8 +714,7 @@ class TxSlot:
             return
         w = self._writer
         self._writer = None
-        w.meta[:len(self._meta)] = self._meta
-        w.publish(self._nbytes, len(self._meta))
+        ch._publish(w, self._descr_bytes, self._header, self._nbytes)
         ch.stats.sends += 1
         ch.stats.inline += 1
         ch.stats.bytes_sent += self._nbytes
@@ -468,7 +747,8 @@ class TxSlot:
 @dataclass
 class ChannelStats(HybridPollStats):
     """Per-channel counters: the shared hybrid-polling fields plus
-    send/recv/byte totals and descriptor-cache effectiveness."""
+    send/recv/byte totals, descriptor-cache effectiveness, coalescing,
+    and the counted meta pickle calls (0 per send/recv steady state)."""
     sends: int = 0
     recvs: int = 0
     bytes_sent: int = 0
@@ -478,6 +758,12 @@ class ChannelStats(HybridPollStats):
     heap_sends: int = 0          # messages routed through bulk-heap extents
     heap_recvs: int = 0
     heap_reassembles: int = 0    # straddling leaves rebuilt with a copy
+    coalesced_sends: int = 0     # messages that rode a microbatch frame
+    coalesced_recvs: int = 0
+    frames_sent: int = 0         # frames published (doorbells for the above)
+    frames_recv: int = 0
+    meta_pickles: int = 0        # pickle.dumps on the send meta path
+    meta_unpickles: int = 0      # pickle.loads on the recv meta path
 
 
 # ---------------------------------------------------------------------------
@@ -485,7 +771,10 @@ class ChannelStats(HybridPollStats):
 # ---------------------------------------------------------------------------
 
 class DataChannel:
-    """Bidirectional typed channel over one tx ring + one rx ring."""
+    """Bidirectional typed channel over one tx ring + one rx ring.
+
+    Receive-side methods (``recv``/``try_recv``/``try_recv_many``) are
+    single-consumer, matching the SPSC ring underneath."""
 
     def __init__(self, tx: Optional[Ring], rx: Optional[Ring],
                  policy: Optional[OffloadPolicy] = None,
@@ -506,6 +795,14 @@ class DataChannel:
         self._cache_enabled = descr_cache
         self._tx_descr_cache: OrderedDict = OrderedDict()
         self._rx_descr_cache: OrderedDict = OrderedDict()
+        # small-message fast path: the open microbatch frame + rx-side
+        # queue of sub-messages already unpacked from a received frame
+        self._coal_lock = threading.Lock()
+        self._frame: Optional[_Frame] = None
+        self._rx_pending: deque = deque()
+        self.governor: Optional[ChannelGovernor] = (
+            ChannelGovernor(self.policy, self.latency)
+            if self.policy.governor == "adaptive" else None)
 
     def bind_heap(self, heap: Optional[BulkHeap]) -> None:
         """Attach the connection's bulk heap: payloads at/over
@@ -520,11 +817,11 @@ class DataChannel:
         return (nbytes > self.tx.spec.slot_bytes
                 or nbytes >= self.policy.heap_threshold_bytes)
 
-    # -- wire encoding (descriptor cache) -------------------------------------
+    # -- wire encoding (descriptor cache + binary headers) --------------------
     def _encode_descr(self, tree):
         """Build (descriptor, descriptor bytes, payload nbytes); the
         descriptor and its pickle are cached by structural signature, so
-        steady-state sends pickle only the small header."""
+        steady-state sends never call ``pickle.dumps`` for it."""
         sig: Optional[tuple] = None
         hit = None
         if self._cache_enabled:
@@ -543,51 +840,163 @@ class DataChannel:
             descr_bytes = pickle.dumps(descr,
                                        protocol=pickle.HIGHEST_PROTOCOL)
             self.stats.descr_cache_misses += 1
+            self.stats.meta_pickles += 1
             if self._cache_enabled:
                 self._tx_descr_cache[sig] = (descr, descr_bytes, nbytes)
                 while len(self._tx_descr_cache) > _DESCR_CACHE_MAX:
                     self._tx_descr_cache.popitem(last=False)
         return descr, descr_bytes, nbytes
 
-    def _meta_bytes(self, descr_bytes: bytes, header: Optional[dict],
-                    segments=None) -> bytes:
-        """Assemble wire meta ``[u32 len | descr pickle | header pickle]``;
-        a heap message rides its scatter list inside the header under a
-        reserved key (stripped again on receive)."""
+    def _encode_meta_into(self, mv: memoryview, descr_bytes: bytes,
+                          header: Optional[dict], segments=None,
+                          count: bool = True) -> int:
+        """Encode one message's wire meta directly into ``mv`` (a slot
+        meta region or a sub-frame slice of it) — no staging bytes, no
+        concatenation.  Binary header when the values fit the flat codec,
+        per-message pickle fallback otherwise (counted).  Returns the
+        encoded length; raises :class:`MetaOverflow` when it cannot fit."""
         if segments is not None:
             header = dict(header or {})
             header[_HX_KEY] = tuple(segments)
-        header_bytes = pickle.dumps(header or {},
-                                    protocol=pickle.HIGHEST_PROTOCOL)
-        meta = _U32.pack(len(descr_bytes)) + descr_bytes + header_bytes
-        if len(meta) > self.tx.spec.meta_bytes:
+        base = _put_bytes(mv, _META_FIXED, descr_bytes)
+        try:
+            end = _enc_header(mv, base, header or {})
+            fmt = META_BINARY
+        except _Unencodable:
+            blob = pickle.dumps(header or {},
+                                protocol=pickle.HIGHEST_PROTOCOL)
+            if count:
+                self.stats.meta_pickles += 1
+            end = _put_bytes(mv, base, blob)
+            fmt = META_PICKLE
+        _B8.pack_into(mv, 0, fmt)
+        _U32.pack_into(mv, 1, len(descr_bytes))
+        return end
+
+    def _publish(self, writer: SlotWriter, descr_bytes: bytes,
+                 header: Optional[dict], nbytes: int, flags: int = 0,
+                 segments=None) -> None:
+        """Encode the meta into the claimed slot and flip it READY; any
+        encode failure (oversized meta, unpicklable header) aborts the
+        slot as a skip sentinel — a WRITING slot left behind would wedge
+        the strictly-ordered SPSC ring forever."""
+        try:
+            mlen = self._encode_meta_into(writer.meta, descr_bytes, header,
+                                          segments)
+        except MetaOverflow:
+            writer.abort()
             raise ValueError(
-                f"meta of {len(meta)} B exceeds meta capacity "
-                f"{self.tx.spec.meta_bytes} B")
-        return meta
+                f"meta exceeds meta capacity {self.tx.spec.meta_bytes} B "
+                f"(raise data_meta_bytes)") from None
+        except BaseException:
+            writer.abort()
+            raise
+        writer.publish(nbytes, mlen, flags=flags)
 
     def _decode_meta(self, raw: bytes):
         """(header, descriptor) from wire meta; descriptors are cached by
-        their pickled bytes so a stable stream skips ``pickle.loads``."""
-        (dlen,) = _U32.unpack_from(raw, 0)
-        descr_bytes = raw[4:4 + dlen]
+        their pickled bytes and binary headers decode without pickle, so
+        a stable stream never calls ``pickle.loads``."""
+        fmt = raw[0]
+        (dlen,) = _U32.unpack_from(raw, 1)
+        descr_bytes = raw[_META_FIXED:_META_FIXED + dlen]
         descr = self._rx_descr_cache.get(descr_bytes)
         if descr is None:
             descr = pickle.loads(descr_bytes)
+            self.stats.meta_unpickles += 1
             if self._cache_enabled:
                 self._rx_descr_cache[descr_bytes] = descr
                 while len(self._rx_descr_cache) > _DESCR_CACHE_MAX:
                     self._rx_descr_cache.popitem(last=False)
         else:
             self._rx_descr_cache.move_to_end(descr_bytes)
-        header = pickle.loads(raw[4 + dlen:])
+        if fmt == META_BINARY:
+            header = _dec_header(raw, _META_FIXED + dlen)
+        else:
+            header = pickle.loads(raw[_META_FIXED + dlen:])
+            self.stats.meta_unpickles += 1
         return header, descr
 
+    # -- route selection (static thresholds or the adaptive governor) ---------
+    def _tx_backlog(self) -> float:
+        """Sender-side queue depth: unconsumed ring slots + engine-queued
+        sends + the open frame's entries (shared-counter reads only)."""
+        backlog = self.tx.produced - self.tx.consumed + len(self._inflight)
+        frame = self._frame
+        if frame is not None:
+            backlog += frame.k
+        return float(backlog)
+
+    def _coalesce_capable(self, nbytes: int, mode: ExecutionMode) -> bool:
+        """Structural coalescing legality: async/pipelined sub-slot
+        message under the size cap, K > 1 possible."""
+        return (mode != ExecutionMode.SYNC
+                and self.policy.coalesce_max > 1
+                and nbytes <= min(self.policy.coalesce_limit_bytes(),
+                                  self.tx.spec.slot_bytes)
+                and not self._use_heap(nbytes))
+
+    def _route(self, nbytes: int, mode: ExecutionMode) -> str:
+        gov = self.governor
+        if gov is None:
+            if self._use_heap(nbytes):
+                return HEAP
+            if (self.policy.coalesce_bytes > 0
+                    and nbytes <= self.policy.coalesce_bytes
+                    and self._coalesce_capable(nbytes, mode)):
+                return COALESCE
+            if (mode == ExecutionMode.SYNC
+                    or not self.policy.should_offload(nbytes)):
+                return INLINE
+            return OFFLOAD
+        heap_ok = self._heap is not None and self._heap.spec.enabled
+        if heap_ok and nbytes > self.tx.spec.slot_bytes:
+            return HEAP                  # mandatory: cannot fit a slot
+        eligible = [INLINE]
+        if mode != ExecutionMode.SYNC and self.policy.device == Device.OFFLOAD:
+            eligible.append(OFFLOAD)
+        if self._coalesce_capable(nbytes, mode):
+            eligible.append(COALESCE)
+        if heap_ok and nbytes >= self._heap.spec.extent_bytes:
+            eligible.append(HEAP)
+        return gov.decide(nbytes, eligible, backlog_fn=self._tx_backlog)
+
+    def _observe_done_handle(self, h: SendHandle) -> None:
+        """Feed the governor an offloaded/heap send's completion-record
+        latency (submit→finish, taken by the engine — no extra clocks)."""
+        gov = self.governor
+        if gov is None or h._job is None or h._job.finished_t is None:
+            return
+        gov.observe(h.route, h.nbytes,
+                    (h._job.finished_t - h._job.submit_t) * 1e6)
+
+    def _track_inflight(self, handle: SendHandle, mode: ExecutionMode,
+                        timeout_s: float) -> None:
+        """Register an offloaded send for FIFO flushes + pipelined depth;
+        prunes cleanly-completed handles (a failed one is kept: flush must
+        surface its exception) and harvests their governor observations."""
+        with self._inflight_lock:
+            while (self._inflight and self._inflight[0].done()
+                   and not self._inflight[0].failed()):
+                self._observe_done_handle(self._inflight.popleft())
+            self._inflight.append(handle)
+        if mode == ExecutionMode.PIPELINED:
+            # bounded in-flight depth (the engine's backpressure, same
+            # shape); handles drained here must still feed the governor —
+            # under sustained offload the depth wait consumes almost every
+            # handle, and without the observation the route's cost would
+            # stay unmeasured while it keeps being picked
+            def waited(h: SendHandle) -> None:
+                h.wait(timeout_s)
+                self._observe_done_handle(h)
+
+            drain_to_depth(self._inflight, self._inflight_lock,
+                           self.policy.pipeline_depth, waited)
+
     # -- send -----------------------------------------------------------------
-    def _fill_and_publish(self, sg: SGList, meta: bytes, nbytes: int) -> None:
-        w: SlotWriter = sg.ctx
-        w.meta[:len(meta)] = meta
-        w.publish(nbytes, len(meta))
+    def _fill_and_publish(self, sg: SGList, descr_bytes: bytes,
+                          header: Optional[dict], nbytes: int) -> None:
+        self._publish(sg.ctx, descr_bytes, header, nbytes)
 
     def _acquire_sg(self, tree, descr, timeout_s: float) -> SGList:
         with self._send_lock:
@@ -621,6 +1030,131 @@ class DataChannel:
         sg.ctx = writer
         return sg
 
+    # -- coalesced (small-message) send path ----------------------------------
+    def _frame_kcap(self) -> int:
+        """Sub-message table capacity: the policy K bounded by what the
+        meta region can hold (table + headroom for the sub-metas)."""
+        room = (self.tx.spec.meta_bytes - _FRAME_HDR.size) // (
+            _FRAME_ENTRY.size * 2)
+        return max(2, min(self.policy.coalesce_max, room))
+
+    def _frame_append(self, frame: _Frame, tree, descr, descr_bytes: bytes,
+                      header: Optional[dict], nbytes: int) -> bool:
+        """Pack one sub-message into the open frame (sub-meta encoded into
+        the slot's meta region, payload gathered into the slot); False
+        when the frame is full (payload, meta, or K capacity)."""
+        if frame.k >= frame.kcap:
+            return False
+        pay_off = _align(frame.pay_cursor)
+        if pay_off + nbytes > self.tx.spec.slot_bytes:
+            return False
+        try:
+            mlen = self._encode_meta_into(
+                frame.writer.meta[frame.meta_cursor:], descr_bytes, header)
+        except MetaOverflow:
+            return False
+        sg = SGList()
+        _gather_sg(tree, descr, frame.writer.payload[pay_off:], sg)
+        self._engine.run_sg(sg, injection=self.policy.injection_enabled(),
+                            tag="send", account=False)
+        frame.copies += len(sg)      # accounted once per frame at flush
+        frame.copied_bytes += sg.nbytes
+        frame.table.append((frame.meta_cursor, mlen, pay_off, nbytes))
+        frame.meta_cursor += mlen
+        frame.pay_cursor = pay_off + nbytes
+        frame.k += 1
+        return True
+
+    def _flush_frame_locked(self, frame: _Frame) -> None:
+        """Write the sub-message table and publish the frame under one
+        state flip (the amortized doorbell).  Caller holds the coalescing
+        lock and has verified ``frame`` is the open one."""
+        t0 = time.perf_counter()
+        mv = frame.writer.meta
+        _FRAME_HDR.pack_into(mv, 0, META_FRAME, frame.k)
+        off = _FRAME_HDR.size
+        for entry in frame.table:
+            _FRAME_ENTRY.pack_into(mv, off, *entry)
+            off += _FRAME_ENTRY.size
+        frame.writer.publish(frame.pay_cursor, frame.meta_cursor,
+                             flags=FLAG_COALESCED)
+        self._frame = None
+        self.stats.frames_sent += 1
+        # one accounting pass per frame: the appends' deferred copy counts
+        # plus the frame/message events the doorbell gate reads
+        self._engine.count("send", frame.copies, frame.copied_bytes,
+                           injection=self.policy.injection_enabled())
+        self._engine.count_event("coalesced_frames")
+        self._engine.count_event("coalesced_msgs", frame.k)
+        gov = self.governor
+        if gov is not None:
+            # per-message cost = an equal share of the WHOLE frame's time
+            # (appends + claim + publish).  Spreading — rather than
+            # per-entry attribution — matters: the slot-acquire wait under
+            # backpressure lands entirely on the frame-opening append, and
+            # diluting it across K keeps that throughput signal in every
+            # observation instead of one outlier the robust EWMA clips
+            total_us = (time.perf_counter() - t0) * 1e6
+            for nbytes, append_us in frame.entries:
+                total_us += append_us
+            per_msg_us = total_us / frame.k
+            for nbytes, _ in frame.entries:
+                gov.observe(COALESCE, nbytes, per_msg_us)
+        frame.event.set()
+
+    def _flush_frame(self, frame: Optional[_Frame] = None) -> None:
+        """Publish the open frame (all of it).  With ``frame`` given, only
+        if that exact frame is still the open one (a handle's pull-flush
+        must not force out a successor frame)."""
+        with self._coal_lock:
+            cur = self._frame
+            if cur is None or (frame is not None and cur is not frame):
+                return
+            self._flush_frame_locked(cur)
+
+    def _coalesce_send(self, tree, descr, descr_bytes: bytes,
+                       header: Optional[dict], nbytes: int,
+                       timeout_s: float) -> Optional[SendHandle]:
+        """Append one message to the open microbatch frame (opening one —
+        which claims the next tx slot — if needed).  Returns None when the
+        message structurally cannot ride a frame (the caller falls back to
+        the inline route)."""
+        t0 = time.perf_counter()
+        with self._coal_lock:
+            frame = self._frame
+            for _ in range(2):
+                if frame is None:
+                    # FIFO: a new frame's slot must be claimed after every
+                    # earlier offloaded send has published — otherwise the
+                    # frame overtakes them on the wire (the inline and
+                    # offload paths enforce the same order via flush())
+                    self._drain_inflight(timeout_s)
+                    with self._send_lock:
+                        writer = self.tx.acquire(timeout_s)
+                    frame = self._frame = _Frame(writer, self._frame_kcap(),
+                                                 t0)
+                if self._frame_append(frame, tree, descr, descr_bytes,
+                                      header, nbytes):
+                    break
+                if frame.k == 0:
+                    # cannot fit even an empty frame (huge descriptor?):
+                    # give the slot back as a skip sentinel, fall back
+                    frame.writer.abort()
+                    self._frame = None
+                    return None
+                self._flush_frame_locked(frame)
+                frame = None
+            self.stats.sends += 1
+            self.stats.inline += 1
+            self.stats.coalesced_sends += 1
+            self.stats.bytes_sent += nbytes
+            now = time.perf_counter()
+            frame.entries.append((nbytes, (now - t0) * 1e6))
+            window_s = self.policy.coalesce_window_us * 1e-6
+            if frame.k >= frame.kcap or now - frame.opened_t >= window_s:
+                self._flush_frame_locked(frame)
+            return SendHandle(self, nbytes, frame=frame, route=COALESCE)
+
     # -- heap (large-message) send path ---------------------------------------
     def _heap_alloc_blocking(self, nbytes: int, timeout_s: float):
         """Blocking extent allocation that converts "peer died while we
@@ -638,7 +1172,15 @@ class DataChannel:
         """Fail a heap send *before* any copy/alloc when even a
         worst-case scatter list cannot fit the ring's meta region."""
         cap = self._heap.spec.dir_bytes
-        self._meta_bytes(descr_bytes, header, ((cap, cap),) * MAX_SEGMENTS)
+        scratch = memoryview(bytearray(self.tx.spec.meta_bytes))
+        try:
+            self._encode_meta_into(scratch, descr_bytes, header,
+                                   ((cap, cap),) * MAX_SEGMENTS, count=False)
+        except MetaOverflow:
+            raise ValueError(
+                f"heap meta exceeds meta capacity "
+                f"{self.tx.spec.meta_bytes} B (raise data_meta_bytes)"
+            ) from None
 
     def _send_heap_inline(self, tree, descr, descr_bytes, header,
                           nbytes: int, timeout_s: float) -> SendHandle:
@@ -654,15 +1196,18 @@ class DataChannel:
             self._engine.run_sg(sg, injection=self.policy.injection_enabled(),
                                 tag="heap_fill",
                                 count_copies=_count_leaves(descr))
-            meta = self._meta_bytes(descr_bytes, header, segs)
             with self._send_lock:
                 w = self.tx.acquire(timeout_s)
         except BaseException:
             heap.free(segs, heap.tx_dir)   # ownership transfers at publish
             raise
-        w.meta[:len(meta)] = meta
-        w.publish(nbytes, len(meta), flags=FLAG_HEAP)
-        return SendHandle(self, nbytes)
+        try:
+            self._publish(w, descr_bytes, header, nbytes, flags=FLAG_HEAP,
+                          segments=segs)
+        except BaseException:
+            heap.free(segs, heap.tx_dir)
+            raise
+        return SendHandle(self, nbytes, route=HEAP)
 
     def _send_heap_offloaded(self, tree, descr, descr_bytes, header,
                              nbytes: int, timeout_s: float) -> SendHandle:
@@ -748,13 +1293,11 @@ class DataChannel:
         def complete_final(sg: SGList):
             writer: SlotWriter = sg.ctx
             try:
-                meta = self._meta_bytes(descr_bytes, header, state["segs"])
+                self._publish(writer, descr_bytes, header, nbytes,
+                              flags=FLAG_HEAP, segments=state["segs"])
             except BaseException:
                 heap.free(state["segs"], heap.tx_dir)
-                writer.abort()
                 raise
-            writer.meta[:len(meta)] = meta
-            writer.publish(nbytes, len(meta), flags=FLAG_HEAP)
 
         inject = self.policy.injection_enabled()
         for i in range(n_chunks):
@@ -771,7 +1314,7 @@ class DataChannel:
                        count_copies=0),
             wq=self, policy=self.policy, latency=self.latency,
             stats=self.stats)
-        return SendHandle(self, nbytes, job=job)
+        return SendHandle(self, nbytes, job=job, route=HEAP)
 
     def _send_heap(self, tree, descr, descr_bytes, header,
                    nbytes: int, mode: ExecutionMode,
@@ -783,33 +1326,39 @@ class DataChannel:
         self.stats.bytes_sent += nbytes
         self.stats.heap_sends += 1
         if mode == ExecutionMode.SYNC or not self.policy.should_offload(nbytes):
-            return self._send_heap_inline(tree, descr, descr_bytes, header,
-                                          nbytes, timeout_s)
+            gov = self.governor
+            t0 = time.perf_counter() if gov is not None else 0.0
+            handle = self._send_heap_inline(tree, descr, descr_bytes, header,
+                                            nbytes, timeout_s)
+            if gov is not None:
+                gov.observe(HEAP, nbytes, (time.perf_counter() - t0) * 1e6)
+            return handle
         handle = self._send_heap_offloaded(tree, descr, descr_bytes, header,
                                            nbytes, timeout_s)
-        with self._inflight_lock:
-            while (self._inflight and self._inflight[0].done()
-                   and not self._inflight[0].failed()):
-                self._inflight.popleft()
-            self._inflight.append(handle)
-        if mode == ExecutionMode.PIPELINED:
-            drain_to_depth(self._inflight, self._inflight_lock,
-                           self.policy.pipeline_depth,
-                           lambda h: h.wait(timeout_s))
+        self._track_inflight(handle, mode, timeout_s)
         return handle
 
     def send(self, tree, header: Optional[dict] = None,
              mode: ExecutionMode | str | None = None,
              timeout_s: float = 30.0) -> SendHandle:
         """Send one pytree under the given (or policy) mode; see module
-        docstring for the sync/async/pipelined semantics.  Payloads at or
-        above ``policy.heap_threshold_bytes`` (or over the slot capacity)
-        take the bulk-heap path when the transport has one."""
+        docstring for the sync/async/pipelined semantics.  The per-message
+        strategy — inline slot copy, engine offload, coalesced microbatch
+        frame, or bulk-heap extents — comes from the static policy
+        thresholds or, with ``policy.governor="adaptive"``, from the
+        channel's measured-break-even governor."""
         if self.tx is None:
             raise RuntimeError("receive-only channel")
         mode = ExecutionMode(mode) if mode is not None else self.policy.mode
         descr, descr_bytes, nbytes = self._encode_descr(tree)
-        if self._use_heap(nbytes):
+        route = self._route(nbytes, mode)
+        if route == HEAP:
+            if not (self._heap is not None and self._heap.spec.enabled):
+                raise ValueError(
+                    f"message of {nbytes} B exceeds slot capacity "
+                    f"{self.tx.spec.slot_bytes} B and no bulk heap is "
+                    f"attached — raise data_slot_bytes or enable "
+                    f"heap_extents")
             return self._send_heap(tree, descr, descr_bytes, header, nbytes,
                                    mode, timeout_s)
         if nbytes > self.tx.spec.slot_bytes:
@@ -817,45 +1366,51 @@ class DataChannel:
                 f"message of {nbytes} B exceeds slot capacity "
                 f"{self.tx.spec.slot_bytes} B and no bulk heap is attached "
                 f"— raise data_slot_bytes or enable heap_extents")
-        meta = self._meta_bytes(descr_bytes, header)
+        if route == COALESCE:
+            handle = self._coalesce_send(tree, descr, descr_bytes, header,
+                                         nbytes, timeout_s)
+            if handle is not None:
+                return handle
+            route = INLINE                 # structural fallback
         self.stats.sends += 1
         self.stats.bytes_sent += nbytes
 
-        if mode == ExecutionMode.SYNC or not self.policy.should_offload(nbytes):
+        if route == INLINE:
+            gov = self.governor
+            # subsample inline observations 4:1 once warm — the EWMA needs
+            # a trickle of fresh cost data, not a pair of clock reads on
+            # every send; while the estimate is cold, observe every send
+            # so the baseline isn't four unlucky draws
+            observe = gov is not None and ((self.stats.sends & 3) == 0
+                                           or gov.wants_sample(INLINE,
+                                                               nbytes))
+            t0 = time.perf_counter() if observe else 0.0
             self.stats.inline += 1
+            self._flush_frame()        # FIFO: publish the open frame first
             self.flush(timeout_s)      # FIFO: inline never overtakes offloads
             sg = self._acquire_sg(tree, descr, timeout_s)
             self._engine.run_sg(sg, injection=self.policy.injection_enabled(),
                                 tag="send")
-            self._fill_and_publish(sg, meta, nbytes)
+            self._fill_and_publish(sg, descr_bytes, header, nbytes)
+            if observe:
+                gov.observe(INLINE, nbytes, (time.perf_counter() - t0) * 1e6)
             return SendHandle(self, nbytes)
 
         self.stats.offloaded += 1
+        self._flush_frame()            # FIFO wrt pending coalesced messages
         acquire_state: dict = {}       # deadline anchored at first attempt
         job = self._engine.submit(
             Descriptor(build=lambda: self._acquire_sg_nonblocking(
                            tree, descr, timeout_s, acquire_state),
                        complete=lambda sg: self._fill_and_publish(
-                           sg, meta, nbytes),
+                           sg, descr_bytes, header, nbytes),
                        nbytes=nbytes,
                        injection=self.policy.injection_enabled(),
                        tag="send"),
             wq=self, policy=self.policy, latency=self.latency,
             stats=self.stats)
-        handle = SendHandle(self, nbytes, job=job)
-        with self._inflight_lock:
-            # track every offloaded send so flush() orders later sync sends
-            # after it; prune cleanly-completed ones so async stays bounded
-            # (a failed handle is kept: flush must surface its exception)
-            while (self._inflight and self._inflight[0].done()
-                   and not self._inflight[0].failed()):
-                self._inflight.popleft()
-            self._inflight.append(handle)
-        if mode == ExecutionMode.PIPELINED:
-            # bounded in-flight depth (the engine's backpressure, same shape)
-            drain_to_depth(self._inflight, self._inflight_lock,
-                           self.policy.pipeline_depth,
-                           lambda h: h.wait(timeout_s))
+        handle = SendHandle(self, nbytes, job=job, route=OFFLOAD)
+        self._track_inflight(handle, mode, timeout_s)
         return handle
 
     def reserve(self, template, header: Optional[dict] = None,
@@ -876,34 +1431,50 @@ class DataChannel:
         descr, descr_bytes, nbytes = self._encode_descr(template)
         if self._use_heap(nbytes):
             self._validate_heap_meta(descr_bytes, header)
+            self._flush_frame()
             self.flush(timeout_s)      # FIFO wrt earlier offloaded sends
             segs = self._heap_alloc_blocking(nbytes, timeout_s)
             tree, staged = _writable_heap_tree(descr, self._heap,
                                                self._heap.tx_dir, segs,
                                                nbytes)
-            return TxSlot(tree, None, b"", nbytes, self,
+            return TxSlot(tree, None, descr_bytes, header, nbytes, self,
                           heap_state={"segments": segs, "staged": staged,
-                                      "descr_bytes": descr_bytes,
-                                      "header": header,
                                       "timeout_s": timeout_s})
         if nbytes > self.tx.spec.slot_bytes:
             raise ValueError(
                 f"message of {nbytes} B exceeds slot capacity "
                 f"{self.tx.spec.slot_bytes} B and no bulk heap is attached "
                 f"— raise data_slot_bytes or enable heap_extents")
-        meta = self._meta_bytes(descr_bytes, header)
+        self._flush_frame()            # FIFO wrt pending coalesced messages
         self.flush(timeout_s)          # FIFO wrt earlier offloaded sends
         with self._send_lock:
             writer = self.tx.acquire(timeout_s)
         tree = _unpack(descr, writer.payload, copy=False)
-        return TxSlot(tree, writer, meta, nbytes, self)
+        return TxSlot(tree, writer, descr_bytes, header, nbytes, self)
 
-    def flush(self, timeout_s: float = 30.0) -> None:
-        """Complete all outstanding pipelined sends (batch-level check)."""
+    def _drain_inflight(self, timeout_s: float) -> None:
+        """Complete every outstanding offloaded send (never touches the
+        coalescing lock, so frame paths may call it while holding it)."""
         with self._inflight_lock:
+            if not self._inflight:
+                return
             pending, self._inflight = self._inflight, deque()
         for h in pending:
             h.wait(timeout_s)
+            self._observe_done_handle(h)
+
+    def flush_open_frame(self) -> None:
+        """Publish the open coalesced frame, if any (cheap no-op
+        otherwise) — the non-blocking half of :meth:`flush` for callers
+        that must put pending framed messages on the wire without waiting
+        out unrelated in-flight offloaded sends."""
+        self._flush_frame()
+
+    def flush(self, timeout_s: float = 30.0) -> None:
+        """Publish the open coalesced frame and complete all outstanding
+        pipelined sends (batch-level check)."""
+        self._flush_frame()
+        self._drain_inflight(timeout_s)
 
     # -- recv -----------------------------------------------------------------
     def _lease_from_heap(self, reader: SlotReader, header: dict, descr,
@@ -937,7 +1508,71 @@ class DataChannel:
         return RecvLease(tree, header, None,
                          on_release=lambda: heap.free(segs))
 
+    def _msgs_from_frame(self, reader: SlotReader, copy: bool) -> list:
+        """Unpack a coalesced frame into its K independent messages.  With
+        ``copy=False`` each message is a lease sharing the refcounted slot
+        reader (the slot recycles when the last one releases); with
+        ``copy=True`` everything is copied out and the slot recycles now."""
+        raw = reader.meta
+        _, k = _FRAME_HDR.unpack_from(raw, 0)
+        shared = None if copy else _SharedFrameReader(reader, k)
+        pay = reader.slot.payload_view
+        out = []
+        off = _FRAME_HDR.size
+        copied_leaves = copied_bytes = 0
+        for _ in range(k):
+            m_off, m_len, p_off, p_len = _FRAME_ENTRY.unpack_from(raw, off)
+            off += _FRAME_ENTRY.size
+            header, descr = self._decode_meta(raw[m_off:m_off + m_len])
+            self.stats.recvs += 1
+            self.stats.coalesced_recvs += 1
+            self.stats.bytes_recv += p_len
+            sub = pay[p_off:]
+            if copy:
+                tree = _unpack(descr, sub, copy=True)
+                copied_leaves += _count_leaves(descr)
+                copied_bytes += p_len
+                out.append((tree, header))
+            else:
+                out.append(RecvLease(_unpack(descr, sub, copy=False),
+                                     header, shared.ref()))
+        if copy:
+            # one counted batch per frame (same tag/totals as per-message
+            # counting; one engine-lock round-trip instead of K)
+            self._engine.count("recv_copy", copied_leaves, copied_bytes)
+            reader.release()
+        self.stats.frames_recv += 1
+        return out
+
+    def _pending_as(self, item, copy: bool):
+        """Adapt a queued frame sub-message to the caller's ``copy``
+        choice: a receive stream may legally alternate modes (e.g. warmup
+        copies, then zero-copy), but a frame was unpacked under the mode
+        of the recv that *polled* it."""
+        if isinstance(item, RecvLease):
+            if not copy:
+                return item
+            def walk(t):
+                if isinstance(t, dict):
+                    return {k: walk(v) for k, v in t.items()}
+                if isinstance(t, (list, tuple)):
+                    out = [walk(v) for v in t]
+                    return out if isinstance(t, list) else tuple(out)
+                return np.array(t)
+            tree, header = walk(item.tree), item.header
+            self._engine.count("recv_copy", _count_leaves(tree),
+                               tree_nbytes(tree))
+            item.release()
+            return tree, header
+        if copy:
+            return item
+        return RecvLease(item[0], item[1], None)   # already copied out
+
     def _lease_from_reader(self, reader: SlotReader, copy: bool):
+        if reader.flags & FLAG_COALESCED:
+            msgs = self._msgs_from_frame(reader, copy)
+            self._rx_pending.extend(msgs[1:])
+            return msgs[0]
         header, descr = self._decode_meta(reader.meta)
         if reader.flags & FLAG_HEAP:
             return self._lease_from_heap(reader, header, descr, copy)
@@ -957,9 +1592,13 @@ class DataChannel:
     def recv(self, timeout_s: float = 30.0, copy: bool = True,
              hint_nbytes: int = 0):
         """Receive one pytree; ``copy=False`` returns a :class:`RecvLease`
-        whose arrays are zero-copy views into the slot."""
+        whose arrays are zero-copy views into the slot.  Sub-messages of a
+        coalesced frame are delivered one at a time, in order — only the
+        first costs a ring poll."""
         if self.rx is None:
             raise RuntimeError("send-only channel")
+        if self._rx_pending:
+            return self._pending_as(self._rx_pending.popleft(), copy)
         deadline = time.perf_counter() + timeout_s
         while True:
             reader = self.rx.wait_recv(
@@ -974,6 +1613,8 @@ class DataChannel:
         """Non-blocking receive; None when no message is ready."""
         if self.rx is None:
             raise RuntimeError("send-only channel")
+        if self._rx_pending:
+            return self._pending_as(self._rx_pending.popleft(), copy)
         while True:
             reader = self.rx.try_poll()
             if reader is None:
@@ -983,10 +1624,33 @@ class DataChannel:
                 continue
             return self._lease_from_reader(reader, copy)
 
+    def try_recv_many(self, limit: int, copy: bool = True) -> list:
+        """Drain up to ``limit`` ready messages in one sweep — pending
+        frame sub-messages first, then ring polls.  A coalesced frame's K
+        messages cost ONE poll here (the receive half of the amortized
+        doorbell); the reactor uses this to feed a whole frame into batch
+        formation without K separate poll iterations."""
+        if self.rx is None:
+            raise RuntimeError("send-only channel")
+        out: list = []
+        while len(out) < limit:
+            if self._rx_pending:
+                out.append(self._pending_as(self._rx_pending.popleft(),
+                                            copy))
+                continue
+            reader = self.rx.try_poll()
+            if reader is None:
+                break
+            if reader.meta_nbytes == 0:     # aborted reserve: skip sentinel
+                reader.release()
+                continue
+            out.append(self._lease_from_reader(reader, copy))
+        return out
+
     # -- lifecycle ------------------------------------------------------------
     def close(self, timeout_s: float = 5.0) -> None:
-        """Flush outstanding sends (the shared copy engine stays up — it
-        serves every other channel in the process)."""
+        """Flush the open frame + outstanding sends (the shared copy
+        engine stays up — it serves every other channel in the process)."""
         try:
             self.flush(timeout_s)
         except (TimeoutError, ChannelClosed):

@@ -13,6 +13,12 @@ closed reply path marks the connection dead for reaping, so a vanished
 client costs one bounded stall rather than a 30s head-of-line block per
 outstanding reply.
 
+**Batched drain**: each poll iteration pulls *all* ready messages from a
+connection in one ``try_recv_many`` sweep (bounded by the fairness
+quantum and the admission cap) — a client's coalesced frame of K
+sub-messages costs one ring poll and one ``on_messages`` handoff into
+batch formation, not K callback iterations.
+
 **Zero-copy drain** (default, ``policy.zero_copy_serving``): requests are
 received as :class:`~repro.ipc.channel.RecvLease` views into the shared
 slot — no receive-side staging copy — and handed to ``on_message`` still
@@ -131,6 +137,7 @@ class ReactorStats:
     errors: int = 0            # on_message raised (message dropped, loop lives)
     zero_copy_recvs: int = 0   # requests delivered as held leases (no copy)
     heap_reaped: int = 0       # leaked bulk-heap extents freed at reap time
+    batched_drains: int = 0    # drain pulls that yielded >1 message at once
 
 
 class Reactor:
@@ -141,6 +148,13 @@ class Reactor:
     carry the request, and when ``lease.held`` the views point into the
     client's ring slot — the consumer must ``release()`` it once the
     payload is consumed (the fabric does this after batch gather).
+
+    ``on_messages(conn, leases)``, when given, takes precedence: each
+    drain pull hands over *every* message it got in one call — a client's
+    coalesced frame (K sub-messages behind one ring poll, see
+    :meth:`~repro.ipc.channel.DataChannel.try_recv_many`) flows into
+    batch formation as one list instead of K separate callback+poll
+    iterations.
     """
 
     def __init__(self, policy: Optional[OffloadPolicy] = None,
@@ -149,9 +163,12 @@ class Reactor:
                  on_disconnect: Optional[Callable[[Connection], None]] = None,
                  max_drain_per_sweep: int = 8,
                  max_inflight: int = 16,
-                 zero_copy: Optional[bool] = None):
+                 zero_copy: Optional[bool] = None,
+                 on_messages: Optional[Callable[[Connection,
+                                                 list], None]] = None):
         self.policy = policy or OffloadPolicy()
         self.on_message = on_message
+        self.on_messages = on_messages
         self.on_disconnect = on_disconnect
         self.max_drain_per_sweep = max_drain_per_sweep
         self.max_inflight = max_inflight
@@ -199,36 +216,58 @@ class Reactor:
 
     # -- the sweep ------------------------------------------------------------
     def _drain(self, conn: Connection) -> int:
-        """Pull up to the fairness quantum from one connection's rx ring."""
+        """Pull up to the fairness quantum from one connection's rx ring,
+        in batched sweeps: one ``try_recv_many`` drains a whole coalesced
+        frame (or several queued small messages) per poll iteration."""
         drained = 0
         while drained < self.max_drain_per_sweep and not conn.dead:
-            if conn.inflight >= self.max_inflight:
+            budget = min(self.max_drain_per_sweep - drained,
+                         self.max_inflight - conn.inflight)
+            if budget <= 0:
                 self.stats.throttled += 1
                 return drained          # admission cap: leave rest in its ring
             try:
-                item = conn.transport.data.try_recv(copy=not self.zero_copy)
+                items = conn.transport.data.try_recv_many(
+                    budget, copy=not self.zero_copy)
             except ChannelClosed:
-                item = None
-            if item is None:
+                items = []
+            if not items:
                 break
-            if isinstance(item, RecvLease):
-                lease = item
-                self.stats.zero_copy_recvs += 1
-            else:                       # copy-out mode: already released
-                lease = RecvLease(item[0], item[1], None)
-            drained += 1
-            conn.begin()
-            if self.on_message is not None:
+            if len(items) > 1:
+                self.stats.batched_drains += 1
+            drained += len(items)
+            leases = []
+            for item in items:
+                if isinstance(item, RecvLease):
+                    leases.append(item)
+                    self.stats.zero_copy_recvs += 1
+                else:                   # copy-out mode: already released
+                    leases.append(RecvLease(item[0], item[1], None))
+                conn.begin()
+            if self.on_messages is not None:
                 try:
-                    self.on_message(conn, lease)
+                    self.on_messages(conn, leases)
                 except Exception:
-                    # one malformed message must not kill the sweep thread
-                    # (which serves every client); drop it, settle accounting
-                    lease.release()
-                    conn.done()
+                    # a failing batch handoff must not kill the sweep
+                    # thread (which serves every client); drop the batch,
+                    # settle accounting
+                    for lease in leases:
+                        lease.release()
+                        conn.done()
                     self.stats.errors += 1
+            elif self.on_message is not None:
+                for lease in leases:
+                    try:
+                        self.on_message(conn, lease)
+                    except Exception:
+                        # one malformed message must not kill the sweep
+                        # thread; drop it, settle accounting
+                        lease.release()
+                        conn.done()
+                        self.stats.errors += 1
             else:
-                lease.release()
+                for lease in leases:
+                    lease.release()
         return drained
 
     def poll_once(self) -> int:

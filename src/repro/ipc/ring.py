@@ -23,6 +23,7 @@ are first-touched at creation, so steady state never faults.
 """
 from __future__ import annotations
 
+import math
 import time
 from dataclasses import dataclass
 from typing import Optional
@@ -42,7 +43,12 @@ EMPTY, WRITING, READY, READING = 0, 1, 2, 3
 # message-kind flags (slot header word 4, published with the state flip):
 # FLAG_HEAP marks a large message whose payload lives in bulk-heap extents
 # (ipc/heap.py); the slot carries only the compact extent descriptor.
+# FLAG_COALESCED marks a microbatch frame: the slot carries K independent
+# sub-messages (sub-message table in the meta region, payloads packed
+# back-to-back) published under ONE state flip — the small-message fast
+# path that amortizes slot claim, meta encode, and doorbell K-ways.
 FLAG_HEAP = 1
+FLAG_COALESCED = 2
 
 
 class ChannelClosed(EOFError):
@@ -216,9 +222,8 @@ class SlotReader:
                       copy: bool = True) -> np.ndarray:
         """Typed view (or copy) of a sub-range of the payload."""
         dtype = np.dtype(dtype)
-        nbytes = int(np.prod(shape)) * dtype.itemsize
-        arr = np.frombuffer(self.slot.payload_view, dtype,
-                            count=int(np.prod(shape)),
+        count = math.prod(shape)
+        arr = np.frombuffer(self.slot.payload_view, dtype, count=count,
                             offset=offset).reshape(shape)
         return arr.copy() if copy else arr
 

@@ -241,13 +241,16 @@ class ShmTransport:
         return self.ctrl.recv_msg(**kw)
 
     def stats(self) -> dict:
-        """Channel-, ring-, and heap-level counters for this endpoint."""
+        """Channel-, ring-, heap-, and governor-level counters for this
+        endpoint."""
         out = {
             "data": self.data.stats.snapshot(),
             "rings": {k: vars(r.stats) for k, r in self._rings.items()},
         }
         if self.heap is not None:
             out["heap"] = self.heap.stats.snapshot()
+        if self.data.governor is not None:
+            out["governor"] = self.data.governor.snapshot()
         return out
 
     # -- lifecycle ------------------------------------------------------------

@@ -292,7 +292,7 @@ class ServingFabric:
         self.policy = policy or dispatcher.policy
         self.reply_timeout_s = reply_timeout_s
         self._own_dispatcher = own_dispatcher
-        self.reactor = Reactor(self.policy, on_message=self._on_message,
+        self.reactor = Reactor(self.policy, on_messages=self._on_messages,
                                max_drain_per_sweep=max_drain_per_sweep,
                                max_inflight=max_inflight)
         self.listener = Listener(name, spec, self.policy, latency,
@@ -305,8 +305,10 @@ class ServingFabric:
         """The rendezvous name clients connect to."""
         return self.listener.name
 
-    def _on_message(self, conn, lease) -> None:
-        """Reactor thread: route one client request into the dispatcher.
+    def _prepare(self, conn, lease) -> Optional[dict]:
+        """Reactor thread: turn one drained request lease into a
+        dispatcher submit item (or handle it right here: shutdown
+        messages and malformed requests never reach the dispatcher).
 
         ``lease`` is a :class:`~repro.ipc.channel.RecvLease`; under the
         zero-copy datapath its ``tree["data"]`` is a view straight into
@@ -318,7 +320,7 @@ class ServingFabric:
         if header.get("shutdown"):
             lease.release()
             conn.done()     # settle accounting; reaped once its flag is seen
-            return
+            return None
         job_id = header.get("job_id", -1)
         op, mode = header.get("op"), header.get("mode", "sync")
         tree = lease.tree
@@ -335,8 +337,10 @@ class ServingFabric:
 
         try:
             data = tree["data"] if isinstance(tree, dict) else None
-            self.dispatcher.submit(op, data, mode=mode, on_complete=reply,
-                                   lease=lease if lease.held else None)
+            return {"op": op, "data": data,
+                    "mode": ExecutionMode(mode),   # validated HERE, not
+                    "on_complete": reply,          # mid-batch in submit_many
+                    "lease": lease if lease.held else None}
         except Exception as e:
             # malformed request (missing data, bad mode string, ...): tell
             # the client instead of letting it time out.  reply() settles
@@ -347,6 +351,16 @@ class ServingFabric:
                 reply(job_id, e)
             except Exception:
                 pass
+            return None
+
+    def _on_messages(self, conn, leases) -> None:
+        """Reactor thread: feed one drained batch — e.g. a client's whole
+        coalesced frame — into the dispatcher as one ``submit_many``, so
+        K wire-microbatched requests enter the batching window together."""
+        items = [it for it in (self._prepare(conn, lease)
+                               for lease in leases) if it is not None]
+        if items:
+            self.dispatcher.submit_many(items)
 
     def start(self) -> "ServingFabric":
         """Begin accepting and serving (both in daemon threads)."""
@@ -460,7 +474,14 @@ class RemoteDispatcherClient:
         return job_id
 
     def query(self, job_id: int, timeout: float = 60.0):
-        """Hybrid-polling wait for one job's result (raises server errors)."""
+        """Hybrid-polling wait for one job's result (raises server errors).
+
+        Publishes any open coalesced frame first: a request still sitting
+        in one must reach the wire before we block on its reply.  (Only
+        the frame — a full ``flush()`` would block on, and re-raise the
+        failures of, unrelated in-flight sends from other threads.)
+        """
+        self.transport.data.flush_open_frame()
         out = self.queries.query(job_id, timeout)
         if isinstance(out, Exception):
             raise out

@@ -1,0 +1,500 @@
+"""Adaptive governor + small-message fast path (coalesced frames).
+
+Governor units drive :class:`~repro.core.governor.ChannelGovernor` with
+synthetic size/occupancy/cost traces — no clocks, no processes — and
+assert the decision flips exactly at the recorded break-evens.  The
+frame tests cover the coalesced wire format end to end: K-message
+round-trips across spawned processes (byte-identical, headers in order),
+partial-frame flush on idle via ``handle.wait()``/``flush()``, lease
+independence on the shared slot, shutdown mid-frame, and the
+pickle-free binary meta path (counted, not timed).
+"""
+import multiprocessing as mp
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.governor import (
+    COALESCE,
+    HEAP,
+    INLINE,
+    OFFLOAD,
+    ChannelGovernor,
+    size_class,
+)
+from repro.core.policy import OffloadPolicy
+from repro.ipc import ChannelClosed, RecvLease, Reactor, ShmTransport, TransportSpec
+
+
+def _gov(**kw):
+    """A governor with exploration/caching disabled unless asked: decisions
+    become a pure deterministic function of the observed costs."""
+    kw.setdefault("explore_every", 0)
+    kw.setdefault("refresh_every", 1)
+    kw.setdefault("min_samples", 1)
+    kw.setdefault("explore_burst", 1)
+    kw.setdefault("occupancy_alpha", 1.0)   # occupancy = last observation
+    return ChannelGovernor(OffloadPolicy(), **kw)
+
+
+# ---------------------------------------------------------------------------
+# governor units (synthetic traces)
+# ---------------------------------------------------------------------------
+
+def test_size_class_buckets():
+    assert size_class(1) == 10          # sub-KB shares one class
+    assert size_class(1 << 10) == 10
+    assert size_class((1 << 10) + 1) == 11
+    assert size_class(64 << 10) == 16
+    assert size_class((64 << 10) + 1) == 17
+
+
+def test_decides_cheapest_measured_route():
+    gov = _gov()
+    for _ in range(4):
+        gov.observe(INLINE, 4096, 50.0)
+        gov.observe(OFFLOAD, 4096, 120.0)
+    assert gov.decide(4096, (INLINE, OFFLOAD)) == INLINE
+
+
+def test_break_even_flip_on_synthetic_trace():
+    """The decision flips when the measured costs cross the recorded
+    break-even — the static threshold replaced by feedback."""
+    gov = _gov(alpha=0.5)
+    for _ in range(4):
+        gov.observe(INLINE, 64 << 10, 40.0)
+        gov.observe(OFFLOAD, 64 << 10, 200.0)
+    assert gov.decide(64 << 10, (INLINE, OFFLOAD)) == INLINE
+    # offload gets drastically cheaper (e.g. a queue drained): EWMA crosses
+    for _ in range(16):
+        gov.observe(OFFLOAD, 64 << 10, 5.0)
+        gov.observe(INLINE, 64 << 10, 40.0)
+    assert gov.decide(64 << 10, (INLINE, OFFLOAD)) == OFFLOAD
+    assert gov.stats.flips >= 1
+
+
+def test_hysteresis_blocks_jitter_flips():
+    """A challenger inside the switch margin does not displace the
+    incumbent — measurement jitter cannot cause route flapping."""
+    gov = _gov(switch_margin=0.75)
+    for _ in range(4):
+        gov.observe(INLINE, 4096, 100.0)
+        gov.observe(COALESCE, 4096, 110.0)
+    gov.observe_occupancy(8.0)
+    assert gov.decide(4096, (INLINE, COALESCE)) == INLINE
+    # coalesce now *slightly* cheaper (90 vs 100): within margin, no flip
+    for _ in range(8):
+        gov.observe(COALESCE, 4096, 90.0)
+    assert gov.decide(4096, (INLINE, COALESCE)) == INLINE
+    assert gov.stats.flips == 0
+    # decisively cheaper: flips
+    for _ in range(16):
+        gov.observe(COALESCE, 4096, 20.0)
+    assert gov.decide(4096, (INLINE, COALESCE)) == COALESCE
+    assert gov.stats.flips == 1
+
+
+def test_occupancy_gates_coalesce():
+    """Coalescing needs queue depth: a depth-1 request/reply stream never
+    coalesces no matter how cheap it measured (load-aware coordination)."""
+    gov = _gov(min_coalesce_occupancy=1.5)
+    for _ in range(4):
+        gov.observe(INLINE, 4096, 100.0)
+        gov.observe(COALESCE, 4096, 10.0)
+    gov.observe_occupancy(0.2)          # idle channel
+    assert gov.decide(4096, (INLINE, COALESCE)) == INLINE
+    for _ in range(50):
+        gov.observe_occupancy(4.0)      # stream built up a backlog
+    assert gov.decide(4096, (INLINE, COALESCE)) == COALESCE
+
+
+def test_cold_start_explores_every_route_in_bursts():
+    gov = _gov(min_samples=2, explore_burst=2, refresh_every=1)
+    seen = []
+    for _ in range(12):
+        pick = gov.decide(4096, (INLINE, OFFLOAD, COALESCE))
+        seen.append(pick)
+        gov.observe(pick, 4096, 50.0)
+        gov.observe_occupancy(8.0)
+    assert {INLINE, OFFLOAD, COALESCE} <= set(seen)
+    # bursts: the cold probes come in consecutive pairs, not interleaved
+    assert seen[0] == seen[1] and seen[2] == seen[3] and seen[4] == seen[5]
+
+
+def test_reprobe_backoff_scales_with_cost_ratio():
+    """A 60x-worse route is re-probed ~60x more rarely than a near-cost
+    one, so confirming a terrible route costs a vanishing stream share."""
+    gov = _gov(explore_every=50, explore_burst=1, refresh_every=1,
+               min_samples=1)
+    gov.observe(INLINE, 4096, 10.0)
+    gov.observe(OFFLOAD, 4096, 600.0)   # 60x worse
+    gov.observe(COALESCE, 4096, 12.0)   # near-cost
+    gov.observe_occupancy(8.0)
+    picks = []
+    for _ in range(300):
+        pick = gov.decide(4096, (INLINE, OFFLOAD, COALESCE))
+        picks.append(pick)
+        gov.observe(pick, 4096, {INLINE: 10.0, OFFLOAD: 600.0,
+                                 COALESCE: 12.0}[pick])
+    assert picks.count(OFFLOAD) == 0          # due at ~50*60 decisions
+    assert picks.count(COALESCE) >= 2         # due every ~50-60 decisions
+
+
+def test_winsorized_ewma_survives_one_outlier():
+    """One 100x scheduling outlier on the incumbent must not flip the
+    route (coarse-timer kernels: a stray quantum sleep is ~1 ms)."""
+    gov = _gov()
+    for _ in range(8):
+        gov.observe(INLINE, 4096, 30.0)
+        gov.observe(OFFLOAD, 4096, 60.0)
+    gov.observe(INLINE, 4096, 3000.0)   # one stray sleep
+    assert gov.decide(4096, (INLINE, OFFLOAD)) == INLINE
+
+
+def test_prior_seeding_matches_static_policy():
+    """Before any measurement, the governor's priors reproduce the static
+    Table III choice: small below-threshold messages go inline."""
+    gov = _gov(min_samples=0)
+    assert gov.decide(4096, (INLINE, OFFLOAD)) == INLINE
+
+
+def test_snapshot_is_plain_data():
+    gov = _gov()
+    gov.observe(INLINE, 4096, 30.0)
+    gov.decide(4096, (INLINE, OFFLOAD))
+    snap = gov.snapshot()
+    assert snap["decisions"] == 1
+    assert snap["classes"][size_class(4096)][INLINE]["samples"] == 1
+    assert isinstance(snap["occupancy"], float)
+
+
+# ---------------------------------------------------------------------------
+# coalesced frames (single-process pair)
+# ---------------------------------------------------------------------------
+
+WIDE = OffloadPolicy(coalesce_bytes=256 << 10, coalesce_max=4,
+                     coalesce_window_us=10e6,     # never flush on time
+                     offload_threshold_bytes=1 << 62)
+SPEC = TransportSpec(data_slots=4, data_slot_bytes=1 << 20, heap_extents=0)
+
+
+def _pair(policy=WIDE):
+    a = ShmTransport.create(spec=SPEC, policy=policy)
+    b = ShmTransport.attach(a.name, policy=policy)
+    return a, b
+
+
+def test_frames_amortize_doorbells_and_roundtrip():
+    a, b = _pair()
+    try:
+        arrs = [np.arange(64, dtype=np.int64) * (i + 1) for i in range(8)]
+        handles = [a.send({"x": arr}, header={"i": i}, mode="pipelined")
+                   for i, arr in enumerate(arrs)]
+        a.data.flush()
+        for i, arr in enumerate(arrs):
+            tree, header = b.recv(timeout_s=10)
+            assert header["i"] == i
+            np.testing.assert_array_equal(tree["x"], arr)
+        assert all(h.done() for h in handles)
+        assert a.data.stats.sends == 8
+        assert a.data.stats.coalesced_sends == 8
+        assert a.data.stats.frames_sent == 2       # K=4: two frames
+        assert a._rings["tx_data"].produced == 2   # doorbells/msg = 0.25
+        assert b.data.stats.frames_recv == 2
+        assert b.data.stats.coalesced_recvs == 8
+    finally:
+        b.close()
+        a.close()
+
+
+def test_partial_frame_flush_on_wait_and_flush():
+    a, b = _pair()
+    try:
+        h1 = a.send({"x": np.arange(8)}, mode="pipelined")
+        h2 = a.send({"x": np.arange(8) + 1}, mode="pipelined")
+        assert not h1.done() and not h2.done()     # frame still open
+        assert b.data.try_recv() is None           # nothing published yet
+        h1.wait()                                  # pull-flush: whole frame
+        assert h1.done() and h2.done()
+        for off in (0, 1):
+            tree, _ = b.recv(timeout_s=10)
+            np.testing.assert_array_equal(tree["x"], np.arange(8) + off)
+        # explicit flush() publishes an open partial frame too
+        a.send({"x": np.arange(4)}, mode="pipelined")
+        a.data.flush()
+        tree, _ = b.recv(timeout_s=10)
+        np.testing.assert_array_equal(tree["x"], np.arange(4))
+    finally:
+        b.close()
+        a.close()
+
+
+def test_frame_lease_independence_slot_recycles_on_last_release():
+    a, b = _pair()
+    try:
+        for i in range(4):
+            a.send({"x": np.full(16, i)}, mode="pipelined")
+        a.data.flush()
+        ring = b.data.rx
+        leases = [b.recv(timeout_s=10, copy=False) for _ in range(4)]
+        consumed0 = ring.consumed
+        # release out of order; the shared slot must survive until the last
+        leases[2].release()
+        leases[0].release()
+        leases[3].release()
+        assert ring.consumed == consumed0          # still held by lease 1
+        np.testing.assert_array_equal(leases[1].tree["x"], np.full(16, 1))
+        leases[1].release()
+        assert ring.consumed == consumed0 + 1      # now recycled
+    finally:
+        b.close()
+        a.close()
+
+
+def test_mixed_copy_modes_on_one_frame():
+    """A frame drained under one copy mode can be consumed under the
+    other (the pending queue adapts per recv call)."""
+    a, b = _pair()
+    try:
+        for i in range(4):
+            a.send({"x": np.full(16, i)}, mode="pipelined")
+        a.data.flush()
+        t0, _ = b.recv(timeout_s=10, copy=True)        # polls the frame
+        lease = b.recv(timeout_s=10, copy=False)       # pending -> lease
+        t2, _ = b.recv(timeout_s=10, copy=True)        # pending -> copy
+        np.testing.assert_array_equal(t0["x"], np.full(16, 0))
+        np.testing.assert_array_equal(lease.tree["x"], np.full(16, 1))
+        np.testing.assert_array_equal(t2["x"], np.full(16, 2))
+        lease.release()
+        b.recv(timeout_s=10)
+    finally:
+        b.close()
+        a.close()
+
+
+def test_try_recv_many_drains_frame_in_one_poll():
+    a, b = _pair()
+    try:
+        for i in range(4):
+            a.send({"x": np.full(8, i)}, header={"i": i}, mode="pipelined")
+        a.data.flush()
+        polls0 = b.data.rx.stats.consumed
+        items = b.data.try_recv_many(16)
+        assert [h["i"] for _, h in items] == [0, 1, 2, 3]
+    finally:
+        b.close()
+        a.close()
+
+
+def test_sync_send_flushes_open_frame_first():
+    """FIFO: a sync send behind pending coalesced messages publishes the
+    frame before claiming its own slot."""
+    a, b = _pair()
+    try:
+        a.send({"x": np.arange(8)}, header={"i": 0}, mode="pipelined")
+        a.send({"x": np.arange(8)}, header={"i": 1}, mode="sync")
+        for expect in (0, 1):
+            _, header = b.recv(timeout_s=10)
+            assert header["i"] == expect
+    finally:
+        b.close()
+        a.close()
+
+
+def test_unencodable_header_fails_cleanly_without_wedging_ring():
+    """A header the meta encoder cannot serialize (binary codec AND
+    pickle both refuse) must abort the claimed slot as a skip sentinel —
+    a leaked WRITING slot would wedge the in-order SPSC ring forever."""
+    import threading
+    a, b = _pair()
+    try:
+        with pytest.raises(TypeError):
+            a.send({"x": np.arange(8)}, header={"bad": threading.Lock()},
+                   mode="sync")
+        a.send({"x": np.arange(8)}, header={"i": 1}, mode="sync")
+        tree, header = b.recv(timeout_s=10)
+        assert header["i"] == 1
+        np.testing.assert_array_equal(tree["x"], np.arange(8))
+    finally:
+        b.close()
+        a.close()
+
+
+def test_coalesced_frame_never_overtakes_offloaded_send():
+    """FIFO across routes: a frame opened behind an in-flight offloaded
+    send must not publish its slot first."""
+    pol = OffloadPolicy(coalesce_bytes=16 << 10, coalesce_max=4,
+                        coalesce_window_us=10e6,
+                        offload_threshold_bytes=64 << 10)
+    a = ShmTransport.create(spec=SPEC, policy=pol)
+    b = ShmTransport.attach(a.name, policy=pol)
+    try:
+        # 4 messages = 4 ring slots (no concurrent drain in this test)
+        for i in range(4):
+            if i % 2 == 0:       # 128 KB: offloaded on the engine thread
+                a.send({"x": np.full(16 << 10, i, np.int64)},
+                       header={"i": i}, mode="async")
+            else:                # 4 KB: coalesce-eligible
+                a.send({"x": np.full(512, i, np.int64)},
+                       header={"i": i}, mode="async")
+        a.data.flush()
+        order = [b.recv(timeout_s=10)[1]["i"] for _ in range(4)]
+        assert order == list(range(4))
+    finally:
+        b.close()
+        a.close()
+
+
+def test_shutdown_with_open_frame_delivers_then_closes():
+    a, b = _pair()
+    try:
+        a.send({"x": np.arange(8)}, mode="pipelined")
+        a.send({"x": np.arange(8) + 1}, mode="pipelined")
+        a.close()                  # flushes the open frame, raises the flag
+        for off in (0, 1):
+            tree, _ = b.recv(timeout_s=10)
+            np.testing.assert_array_equal(tree["x"], np.arange(8) + off)
+        with pytest.raises(ChannelClosed):
+            b.data.try_recv()
+            b.ctrl.try_recv_msg()      # flag up + drained -> ChannelClosed
+    finally:
+        b.close()
+        a.close()
+
+
+def test_binary_meta_is_pickle_free_steady_state():
+    """Counted, not timed: after the first descriptor-cache miss, sends
+    and recvs with flat headers perform ZERO meta pickle calls; a rich
+    header transparently falls back (and is counted)."""
+    a, b = _pair()
+    try:
+        header = {"step": 7, "name": "x", "f": 1.5, "blob": b"ab",
+                  "pair": (1, 2), "none": None, "flag": True}
+        a.send({"x": np.arange(8)}, header=header, mode="sync")
+        tree, got = b.recv(timeout_s=10)
+        assert got == header
+        base_tx = a.data.stats.meta_pickles       # 1: descriptor miss
+        base_rx = b.data.stats.meta_unpickles
+        for i in range(10):
+            a.send({"x": np.arange(8) + i}, header=header, mode="sync")
+            b.recv(timeout_s=10)
+        assert a.data.stats.meta_pickles == base_tx
+        assert b.data.stats.meta_unpickles == base_rx
+        # rich header: per-message pickle fallback, counted on both ends
+        a.send({"x": np.arange(8)}, header={"obj": {"nested": [1]}},
+               mode="sync")
+        _, got = b.recv(timeout_s=10)
+        assert got == {"obj": {"nested": [1]}}
+        assert a.data.stats.meta_pickles == base_tx + 1
+        assert b.data.stats.meta_unpickles == base_rx + 1
+    finally:
+        b.close()
+        a.close()
+
+
+def test_adaptive_governor_end_to_end_converges():
+    """An adaptive channel under a deep pipelined stream converges to a
+    coherent route and moves every byte correctly."""
+    pol = OffloadPolicy(governor="adaptive", coalesce_max=4,
+                        coalesce_window_us=10e6)
+    a = ShmTransport.create(spec=SPEC, policy=pol)
+    b = ShmTransport.attach(a.name, policy=OffloadPolicy())
+    try:
+        assert a.data.governor is not None
+        rng = np.random.default_rng(0)
+        arrs = [rng.integers(0, 1 << 30, 256).astype(np.int64)
+                for _ in range(60)]
+        got = []
+        for arr in arrs:
+            a.send({"x": arr}, mode="pipelined")
+            while True:                       # drain opportunistically
+                item = b.data.try_recv()
+                if item is None:
+                    break
+                got.append(item[0]["x"])
+        a.data.flush()
+        while len(got) < len(arrs):
+            tree, _ = b.recv(timeout_s=10)
+            got.append(tree["x"])
+        for sent, recvd in zip(arrs, got):
+            np.testing.assert_array_equal(sent, recvd)
+        snap = a.data.governor.snapshot()
+        assert snap["decisions"] == len(arrs)
+        assert sum(snap["picks"].values()) == len(arrs)
+        assert "governor" in a.stats()
+    finally:
+        b.close()
+        a.close()
+
+
+def test_reactor_batched_drain_delivers_frame_as_one_list():
+    """The reactor's on_messages handoff receives a whole coalesced frame
+    from one poll sweep (no K separate callback iterations)."""
+    batches = []
+
+    def on_messages(conn, leases):
+        batches.append(len(leases))
+        for lease in leases:
+            lease.release()
+            conn.done()
+
+    reactor = Reactor(policy=WIDE, on_messages=on_messages,
+                      max_drain_per_sweep=16)
+    server = ShmTransport.create(spec=SPEC, policy=WIDE)
+    client = ShmTransport.attach(server.name, policy=WIDE)
+    try:
+        reactor.add(server)
+        for i in range(4):
+            client.send({"x": np.full(8, i)}, mode="pipelined")
+        client.data.flush()
+        deadline = time.perf_counter() + 10
+        while sum(batches) < 4 and time.perf_counter() < deadline:
+            reactor.poll_once()
+            time.sleep(0.001)
+        assert sum(batches) == 4
+        assert max(batches) == 4          # the frame arrived as ONE batch
+        assert reactor.stats.batched_drains >= 1
+    finally:
+        client.close()
+        reactor.close()
+
+
+# ---------------------------------------------------------------------------
+# spawned-process round-trip (module-level child: spawn-safe)
+# ---------------------------------------------------------------------------
+
+def _frame_producer(name: str, n: int) -> None:
+    pol = OffloadPolicy(coalesce_bytes=256 << 10, coalesce_max=4,
+                        coalesce_window_us=10e6,
+                        offload_threshold_bytes=1 << 62)
+    t = ShmTransport.attach(name, policy=pol)
+    for i in range(n):
+        arr = (np.arange(512, dtype=np.int64) * 7919 + i)
+        t.send({"x": arr}, header={"i": i}, mode="pipelined")
+    t.data.flush()
+    t.recv_msg(timeout_s=30)      # hold the mapping until the parent is done
+    t.close()
+
+
+def test_spawn_coalesced_frames_byte_identical():
+    n = 11                        # deliberately not a multiple of K
+    ctx = mp.get_context("spawn")
+    t = ShmTransport.create(spec=SPEC, policy=WIDE)
+    p = ctx.Process(target=_frame_producer, args=(t.name, n), daemon=True)
+    p.start()
+    try:
+        for i in range(n):
+            tree, header = t.recv(timeout_s=30)
+            assert header["i"] == i
+            np.testing.assert_array_equal(
+                tree["x"], np.arange(512, dtype=np.int64) * 7919 + i)
+        stats = t.data.stats
+        assert stats.recvs == n
+        assert stats.coalesced_recvs == n
+        assert stats.frames_recv == 3          # 4+4+3
+        assert stats.meta_unpickles == 1       # descriptor miss only
+        t.send_msg("done", timeout_s=30)
+    finally:
+        p.join(timeout=30)
+        t.close()
