@@ -1,0 +1,111 @@
+"""Traced phase decomposition of the serving datapath (fig12 companion).
+
+Answers "where do the microseconds of one served request actually go?"
+by running the *same* cross-client serving workload as
+``benchmarks/fig13_copy_path.py`` (k client processes streaming 4 MB
+pipelined requests into one fabric) with the :mod:`repro.obs` tracer
+enabled, A/B over ``zero_copy_serving`` — the two datapaths behind the
+recorded ``fig13copy/zerocopy_speedup`` row.
+
+Every process involved (server fabric, spawned clients) writes spans into
+its own shared-memory trace ring; after the sweep the measurement child
+collects all rings of its session into one timeline and reduces them to
+per-phase log-bucket histograms (:func:`repro.obs.hist.phase_histograms`).
+The emitted rows give per-request µs for each phase of both modes, plus a
+``diagnosis`` row naming the phases where the 2-copy baseline *beats* the
+single-copy path — the written explanation for a sub-1x speedup row.
+
+This module must stay jax-free: the measurement runs in a spawn child
+that imports only this module + numpy + repro (see fig13_copy_path).
+
+Run: ``PYTHONPATH=src python -m benchmarks.run --only fig12phase``
+"""
+from __future__ import annotations
+
+import multiprocessing as mp
+import traceback
+
+from benchmarks.fig13_copy_path import CLIENTS, N_PER_CLIENT, _serve, fmt_row
+
+#: phases shown per mode (by total time); the rest still count toward the
+#: coverage figure but would drown the CSV in near-zero rows
+TOP_PHASES = 8
+
+
+def _measure_entry(out_q) -> None:
+    """Spawn-child main: warm up untraced, then trace one serving sweep
+    per datapath mode under a fresh trace session each."""
+    try:
+        from repro.obs import trace as obs_trace
+        from repro.obs.hist import phase_histograms
+
+        _serve(True)                       # warmup: page cache, spawn tails
+        out = {}
+        for zero_copy in (True, False):
+            obs_trace.enable()             # fresh session: clean ring set
+            wall, _copies, _dbytes, mean_batch = _serve(zero_copy)
+            view = obs_trace.collect(unlink=True)
+            obs_trace.disable()
+            out["zerocopy" if zero_copy else "baseline"] = {
+                "wall_s": wall,
+                "mean_batch": mean_batch,
+                "records": view.total_records,
+                "drops": view.total_drops,
+                "phases": {name: h.to_dict()
+                           for name, h in phase_histograms(view).items()},
+            }
+        out_q.put(("ok", out))
+    except BaseException:
+        out_q.put(("err", traceback.format_exc()))
+
+
+def _per_req_us(mode: dict) -> dict:
+    """Phase name -> µs per request (histogram totals / request count)."""
+    n = CLIENTS * N_PER_CLIENT
+    return {name: d["total"] / 1e3 / n for name, d in mode["phases"].items()}
+
+
+def run():
+    """Yield CSV rows: per-mode e2e + per-phase µs/req, then the
+    diagnosis row naming where the baseline beats zero-copy."""
+    total = CLIENTS * N_PER_CLIENT
+    ctx = mp.get_context("spawn")
+    out_q = ctx.Queue()
+    proc = ctx.Process(target=_measure_entry, args=(out_q,))
+    proc.start()
+    status, payload = out_q.get(timeout=600)
+    proc.join(timeout=60)
+    if status != "ok":
+        raise RuntimeError(f"fig12phase measurement child failed:\n{payload}")
+
+    for tag in ("zerocopy", "baseline"):
+        mode = payload[tag]
+        e2e_us = mode["wall_s"] / total * 1e6
+        per_req = _per_req_us(mode)
+        # server-side phases only: client send/wait overlap the server
+        # pipeline, so summing them against wall clock double-counts
+        server = {k: v for k, v in per_req.items()
+                  if not k.startswith(("client.", "query."))}
+        yield fmt_row(
+            f"fig12phase/{tag}", e2e_us,
+            f"{mode['records']}records;drops={mode['drops']};"
+            f"batch{mode['mean_batch']:.1f};"
+            f"server_phase_us={sum(server.values()):.0f}")
+        for name in sorted(per_req, key=lambda k: -per_req[k])[:TOP_PHASES]:
+            d = mode["phases"][name]
+            yield fmt_row(
+                f"fig12phase/{tag}/{name}", per_req[name],
+                f"n={d['n']};mean_us={d['total'] / 1e3 / max(d['n'], 1):.1f}")
+
+    # the diagnosis: per-phase µs/req delta, zerocopy minus baseline —
+    # positive = the single-copy datapath spends MORE here than the
+    # 2-copy baseline (the phases a sub-1x speedup row comes from)
+    zc, bl = _per_req_us(payload["zerocopy"]), _per_req_us(payload["baseline"])
+    delta = {k: zc.get(k, 0.0) - bl.get(k, 0.0) for k in set(zc) | set(bl)
+             if not k.startswith(("client.", "query."))}
+    losses = sorted(((v, k) for k, v in delta.items() if v > 0), reverse=True)
+    wins = sorted(((-v, k) for k, v in delta.items() if v < 0), reverse=True)
+    loss_s = ";".join(f"{k}+{v:.0f}us/req" for v, k in losses[:3]) or "none"
+    win_s = ";".join(f"{k}-{v:.0f}us/req" for v, k in wins[:2]) or "none"
+    yield fmt_row("fig12phase/diagnosis", 0.0,
+                  f"zerocopy_loses:{loss_s}|zerocopy_wins:{win_s}")

@@ -37,6 +37,7 @@ from benchmarks import (
     fig10_modes,
     fig11_batch_sweep,
     fig12_decomposition,
+    fig12_phase,
     fig13_instruction_counts,
     fig13_copy_path,
     fig14_multiclient,
@@ -56,6 +57,7 @@ MODULES = {
     "fig10": fig10_modes,
     "fig11": fig11_batch_sweep,
     "fig12": fig12_decomposition,
+    "fig12phase": fig12_phase,
     "fig13": fig13_instruction_counts,
     "fig13copy": fig13_copy_path,
     "fig14": fig14_multiclient,
@@ -185,7 +187,14 @@ def main() -> None:
                     help="compare this run's COUNTED metrics (copies/req, "
                          "doorbells/req) against a recorded snapshot and "
                          "exit nonzero on regression — the non-timing CI "
-                         "gate (e.g. --only fig6 --check BENCH_IPC.json)")
+                         "gate (e.g. --only fig6 --check BENCH_IPC.json); "
+                         "also gates that an untraced run wrote exactly 0 "
+                         "trace records")
+    ap.add_argument("--trace", metavar="PATH", default=None,
+                    help="run with repro.obs tracing enabled (this process "
+                         "AND every spawned child) and export the joined "
+                         "timeline as Chrome/Perfetto trace JSON to PATH; "
+                         "a per-phase decomposition table goes to stderr")
     args = ap.parse_args()
     names = args.only.split(",") if args.only else list(MODULES)
     unknown = [n for n in names if n not in MODULES]
@@ -198,6 +207,9 @@ def main() -> None:
             assert callable(mod.run), name
             print(f"{name},DRY,{mod.__name__}")
         return
+    if args.trace:
+        from repro.obs import trace as obs_trace
+        obs_trace.enable()          # env-inherited: spawn children trace too
     print("name,us_per_call,derived")
     collected: list[str] = []
     failures: list[str] = []
@@ -213,6 +225,27 @@ def main() -> None:
     # check BEFORE record: --check gates against the *committed* snapshot,
     # which --record (same path in CI) is about to overwrite
     problems = _check(args.check, collected) if args.check else []
+    if args.trace:
+        from repro.obs import hist as obs_hist
+        from repro.obs import trace as obs_trace
+        view = obs_trace.collect(unlink=True)
+        obs_trace.disable()
+        view.save_chrome(args.trace)
+        print(f"# trace: {view.total_records} records from "
+              f"{len(view.rings)} rings ({len(view.pids)} processes, "
+              f"{view.total_drops} dropped) -> {args.trace}",
+              file=sys.stderr)
+        print(obs_hist.phase_report(view), file=sys.stderr)
+    elif args.check:
+        # the tracing-overhead gate, disabled half: an untraced benchmark
+        # run must write EXACTLY zero trace records in this process —
+        # tracing off means off, not "cheap"
+        from repro.obs import trace as obs_trace
+        emitted = obs_trace.emitted_count()
+        if emitted:
+            problems.append(
+                f"tracing is disabled but {emitted} trace records were "
+                f"written — a span site is missing its enabled guard")
     if args.record:
         _record(args.record, collected, failures)
     for p in problems:

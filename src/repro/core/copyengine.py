@@ -54,6 +54,7 @@ import numpy as np
 
 from repro.core.latency import LatencyModel
 from repro.core.policy import OffloadPolicy
+from repro.obs import trace as _trace
 
 
 
@@ -375,8 +376,12 @@ class CopyEngine:
         round-trip instead of K on the small-message hot path)."""
         inject = (self.policy.injection_enabled() if injection is None
                   else injection)
+        t0 = _trace.now() if _trace.TRACE.enabled else 0
         for e in sg.entries:
             self._copy_entry(e, streaming=not inject)
+        if t0:
+            _trace.emit(_trace.COPY_JOB, t0,
+                        arg=min(sg.nbytes, 0xFFFFFFFF))
         if account:
             self._account(sg.entries, sg.nbytes, inject, tag, count_copies)
 
@@ -458,8 +463,12 @@ class CopyEngine:
             if sg is not None and len(sg):
                 inject = (self.policy.injection_enabled()
                           if descr.injection is None else descr.injection)
+                t0 = _trace.now() if _trace.TRACE.enabled else 0
                 for e in sg.entries:
                     self._copy_entry(e, streaming=not inject)
+                if t0:
+                    _trace.emit(_trace.COPY_JOB, t0,
+                                arg=min(sg.nbytes, 0xFFFFFFFF))
                 self._account(sg.entries, sg.nbytes, inject, descr.tag,
                               descr.count_copies)
             value = descr.complete(sg) if descr.complete is not None else None

@@ -37,6 +37,7 @@ from repro.core.copyengine import SGList, get_engine
 from repro.core.latency import LatencyModel
 from repro.core.policy import ExecutionMode, OffloadPolicy
 from repro.core.queuepair import BufferPool
+from repro.obs import trace as _trace
 
 
 @dataclass
@@ -57,6 +58,9 @@ class Request:
     # after completion for solo execution.  Anything with a ``release()``
     # and a ``held`` attribute qualifies (tests pass stubs).
     lease: Optional[Any] = None
+    # trace request id (0 = untraced): propagated from the wire by the
+    # serving fabric so dispatcher spans join the cross-process timeline
+    rid: int = 0
 
     def _release_lease(self) -> None:
         if self.lease is not None:
@@ -240,7 +244,8 @@ class RequestDispatcher:
                 next(self._ids), it["op"], data, mode,
                 nbytes=int(np.asarray(data).nbytes)
                 if isinstance(data, np.ndarray) else 0,
-                callback=it.get("on_complete"), lease=it.get("lease")))
+                callback=it.get("on_complete"), lease=it.get("lease"),
+                rid=it.get("rid", 0)))
         self.stats.requests += len(reqs)
         for req in reqs:
             if req.callback is None:
@@ -266,6 +271,7 @@ class RequestDispatcher:
             if req is None:
                 break
             if req.mode == ExecutionMode.PIPELINED:
+                t0 = _trace.now() if _trace.TRACE.enabled else 0
                 batch = [req]
                 deadline = time.perf_counter() + self._max_wait
                 while len(batch) < self.policy.max_batch:
@@ -283,6 +289,9 @@ class RequestDispatcher:
                         self._execute([nxt])
                         continue
                     batch.append(nxt)
+                if t0:      # the batch-formation window wait, per batch
+                    _trace.emit(_trace.DISPATCH_WAIT, t0, rid=batch[0].rid,
+                                arg=len(batch))
                 self._execute(batch)
             else:
                 self._execute([req])
@@ -312,6 +321,7 @@ class RequestDispatcher:
         a pooled slab (THE server-side payload memcpy), zero the padding,
         then release every lease — the slots recycle before the handler
         runs.  Returns ``(slab, shapes, rows)``."""
+        t0 = _trace.now() if _trace.TRACE.enabled else 0
         datas = [r.data for r in batch]
         ndim = datas[0].ndim
         maxdims = tuple(max(d.shape[k] for d in datas) for k in range(ndim))
@@ -330,6 +340,8 @@ class RequestDispatcher:
         self.stats.gathered_requests += len(batch)
         for r in batch:
             r._release_lease()           # released right after the gather
+        if t0:
+            _trace.emit(_trace.GATHER, t0, rid=batch[0].rid, arg=len(batch))
         return slab, [d.shape for d in datas], rows
 
     def _recycle_slab(self, slab: np.ndarray, results: Sequence) -> None:
@@ -353,6 +365,7 @@ class RequestDispatcher:
         leased = any(r.lease is not None for r in batch)
         pipelined = batch[0].mode == ExecutionMode.PIPELINED
         slab = None
+        t0 = _trace.now() if _trace.TRACE.enabled else 0
         # errors are contained per request: a failing handler completes its
         # job(s) with the exception instead of killing the worker loop
         try:
@@ -392,6 +405,9 @@ class RequestDispatcher:
                         results.append(self._handlers[op](r.data))
                     except Exception as e:
                         results.append(e)
+            if t0:      # batch compute: gather (nested sub-span) + handler
+                _trace.emit(_trace.HANDLER, t0, rid=batch[0].rid,
+                            arg=len(batch))
             for r, out in zip(batch, results):
                 # a query-path result computed from a still-leased view (or
                 # the recyclable slab) must not alias memory about to be

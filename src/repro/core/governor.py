@@ -57,6 +57,7 @@ from typing import Optional, Sequence
 
 from repro.core.latency import LatencyModel
 from repro.core.policy import OffloadPolicy
+from repro.obs import trace as _trace
 
 # route names (wire-stable: they appear in stats snapshots and benchmarks)
 INLINE, OFFLOAD, COALESCE, HEAP = "inline", "offload", "coalesce", "heap"
@@ -166,6 +167,9 @@ class ChannelGovernor:
         """Feed one measured per-message cost (µs) for a route."""
         if us < 0.0:
             return
+        if _trace.TRACE.enabled:
+            _trace.instant(_trace.GOV_OBSERVE,
+                           arg=min(nbytes, 0xFFFFFFFF))
         cls = size_class(nbytes)
         with self._lock:
             cell = self._cell(cls, route)
@@ -241,6 +245,18 @@ class ChannelGovernor:
         only called on the (every ``refresh_every``-th) full evaluation,
         keeping shared-counter reads off the per-message fast path.
         """
+        if _trace.TRACE.enabled:
+            t0 = _trace.now()
+            try:
+                return self._decide(nbytes, eligible, backlog_fn)
+            finally:
+                _trace.emit(_trace.GOV_DECIDE, t0,
+                            arg=min(nbytes, 0xFFFFFFFF))
+        return self._decide(nbytes, eligible, backlog_fn)
+
+    def _decide(self, nbytes: int, eligible: Sequence[str],
+                backlog_fn=None) -> str:
+        """Untraced body of :meth:`decide`."""
         cls = size_class(nbytes)
         backlog = None
         with self._lock:

@@ -112,6 +112,7 @@ from repro.core.latency import LatencyModel
 from repro.core.policy import Device, ExecutionMode, OffloadPolicy
 from repro.core.queuepair import drain_to_depth
 from repro.ipc.heap import MAX_SEGMENTS, BulkHeap, HeapExhausted
+from repro.obs import trace as _trace
 from repro.ipc.ring import (
     FLAG_COALESCED,
     FLAG_HEAP,
@@ -603,6 +604,19 @@ class RecvLease:
         self.header = header
         self._reader = reader
         self._on_release = on_release
+        # lease birth timestamp: with tracing on, release() emits a
+        # LEASE_HOLD span covering delivery → release (how long this
+        # message pinned its ring slot / heap extents)
+        self._t0 = _trace.now() if _trace.TRACE.enabled else 0
+
+    @property
+    def rid(self) -> int:
+        """Request id propagated in the wire meta (0 when untraced)."""
+        header = self.header
+        if isinstance(header, dict):
+            v = header.get(_trace.RID_KEY, 0)
+            return v if isinstance(v, int) else 0
+        return 0
 
     @property
     def held(self) -> bool:
@@ -623,6 +637,8 @@ class RecvLease:
             cb, self._on_release = self._on_release, None
             cb()
             released = True
+        if released and self._t0 and _trace.TRACE.enabled:
+            _trace.emit(_trace.LEASE_HOLD, self._t0, rid=self.rid)
         if released:
             # the views are invalid once the slot/extents are recycled;
             # drop them so they can't pin the arena mapping open
@@ -880,6 +896,7 @@ class DataChannel:
         encode failure (oversized meta, unpicklable header) aborts the
         slot as a skip sentinel — a WRITING slot left behind would wedge
         the strictly-ordered SPSC ring forever."""
+        t0 = _trace.now() if _trace.TRACE.enabled else 0
         try:
             mlen = self._encode_meta_into(writer.meta, descr_bytes, header,
                                           segments)
@@ -892,6 +909,10 @@ class DataChannel:
             writer.abort()
             raise
         writer.publish(nbytes, mlen, flags=flags)
+        if t0:
+            rid = (header.get(_trace.RID_KEY, 0)
+                   if isinstance(header, dict) else 0)
+            _trace.emit(_trace.CH_PUBLISH, t0, rid=rid, arg=nbytes)
 
     def _decode_meta(self, raw: bytes):
         """(header, descriptor) from wire meta; descriptors are cached by
@@ -1346,7 +1367,27 @@ class DataChannel:
         strategy — inline slot copy, engine offload, coalesced microbatch
         frame, or bulk-heap extents — comes from the static policy
         thresholds or, with ``policy.governor="adaptive"``, from the
-        channel's measured-break-even governor."""
+        channel's measured-break-even governor.
+
+        When tracing is enabled a request id is minted (or reused from
+        ``header``) under the reserved :data:`repro.obs.trace.RID_KEY`
+        header key so the message's lifecycle joins across processes; the
+        wire bytes are unchanged when tracing is off."""
+        if not _trace.TRACE.enabled:
+            return self._send_impl(tree, header, mode, timeout_s)
+        header = {} if header is None else header
+        rid = header.get(_trace.RID_KEY) or _trace.mint_rid()
+        header[_trace.RID_KEY] = rid
+        t0 = _trace.now()
+        try:
+            return self._send_impl(tree, header, mode, timeout_s)
+        finally:
+            _trace.emit(_trace.CH_SEND, t0, rid=rid)
+
+    def _send_impl(self, tree, header: Optional[dict],
+                   mode: ExecutionMode | str | None,
+                   timeout_s: float) -> SendHandle:
+        """Untraced body of :meth:`send` (route, encode, publish)."""
         if self.tx is None:
             raise RuntimeError("receive-only channel")
         mode = ExecutionMode(mode) if mode is not None else self.policy.mode

@@ -67,6 +67,7 @@ from repro.core.policy import OffloadPolicy
 from repro.ipc.channel import RecvLease
 from repro.ipc.ring import ChannelClosed
 from repro.ipc.transport import ShmTransport
+from repro.obs import trace as _trace
 
 
 @dataclass
@@ -107,6 +108,7 @@ class Connection:
         at most one bounded stall — not a 30s head-of-line block per
         reply while every other client starves.
         """
+        t0 = _trace.now() if _trace.TRACE.enabled else 0
         try:
             arr = tree.get("result") if isinstance(tree, dict) else None
             if (isinstance(arr, np.ndarray) and len(tree) == 1):
@@ -124,6 +126,10 @@ class Connection:
             raise
         finally:
             self.done()
+            if t0:
+                rid = header.get(_trace.RID_KEY, 0) if header else 0
+                _trace.emit(_trace.REPLY_FILL, t0,
+                            rid=rid if isinstance(rid, int) else 0)
 
 
 @dataclass
@@ -226,6 +232,7 @@ class Reactor:
             if budget <= 0:
                 self.stats.throttled += 1
                 return drained          # admission cap: leave rest in its ring
+            t0 = _trace.now() if _trace.TRACE.enabled else 0
             try:
                 items = conn.transport.data.try_recv_many(
                     budget, copy=not self.zero_copy)
@@ -233,6 +240,8 @@ class Reactor:
                 items = []
             if not items:
                 break
+            if t0:
+                _trace.emit(_trace.REACTOR_DRAIN, t0, arg=len(items))
             if len(items) > 1:
                 self.stats.batched_drains += 1
             drained += len(items)

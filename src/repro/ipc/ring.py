@@ -33,6 +33,7 @@ import numpy as np
 from repro.core.latency import LatencyModel
 from repro.core.policy import OffloadPolicy
 from repro.ipc.shm import SharedMemoryArena
+from repro.obs import trace as _trace
 
 SLOT_HEADER_BYTES = 64
 _ALIGN = 64
@@ -305,6 +306,16 @@ class Ring:
         """Wait for ``slot.state == want`` with deferral + short waits."""
         if slot.state == want:
             return True
+        if _trace.TRACE.enabled:           # slow path only: fast path above
+            tt0 = _trace.now()
+            ok = self._wait_state_slow(slot, want, timeout_s, hint_nbytes)
+            _trace.emit(_trace.RING_WAIT, tt0, arg=hint_nbytes)
+            return ok
+        return self._wait_state_slow(slot, want, timeout_s, hint_nbytes)
+
+    def _wait_state_slow(self, slot: _Slot, want: int, timeout_s: float,
+                         hint_nbytes: int) -> bool:
+        """Deferral + spin + passive-quantum body of :meth:`_wait_state`."""
         t0 = time.perf_counter()
         if hint_nbytes > 0:
             # size-aware deferral: sleep most of the predicted copy latency

@@ -253,6 +253,17 @@ class ShmTransport:
             out["governor"] = self.data.governor.snapshot()
         return out
 
+    def metrics(self) -> dict:
+        """The same counters as :meth:`stats`, flattened to dot-keys via
+        the unified :class:`~repro.obs.metrics.MetricsRegistry` shape
+        (``"data.sends"``, ``"rings.tx_data.polls"``, ...) — one flat dict
+        a dashboard or benchmark row can diff with
+        :meth:`~repro.obs.metrics.MetricsRegistry.delta`."""
+        from repro.obs.metrics import MetricsRegistry
+        reg = MetricsRegistry()
+        reg.register("", self.stats)    # empty prefix: keys start at "data."
+        return reg.snapshot()
+
     # -- lifecycle ------------------------------------------------------------
     def announce_close(self) -> None:
         """Raise this endpoint's closed flag so the peer's blocked ring

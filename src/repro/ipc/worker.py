@@ -42,6 +42,8 @@ from repro.core.latency import LatencyModel
 from repro.core.policy import ExecutionMode, OffloadPolicy
 from repro.ipc.ring import ChannelClosed
 from repro.ipc.transport import ShmTransport, TransportSpec
+from repro.obs import trace as _trace
+from repro.obs.metrics import MetricsRegistry, SLOTracker
 
 
 # ---------------------------------------------------------------------------
@@ -298,6 +300,17 @@ class ServingFabric:
         self.listener = Listener(name, spec, self.policy, latency,
                                  max_clients=max_clients,
                                  on_accept=self.reactor.add)
+        # unified metrics plane: every stats surface in the fabric behind
+        # one flat snapshot, plus the per-request SLO monitor (previously
+        # orphaned ft/monitor.py + core/latency.py, now fed by replies)
+        self.slo = SLOTracker(latency or getattr(dispatcher, "latency", None))
+        self.metrics = MetricsRegistry()
+        self.metrics.register("reactor", lambda: self.reactor.stats)
+        self.metrics.register("dispatcher", lambda: self.dispatcher.stats)
+        self.metrics.register("slo", self.slo)
+        self.metrics.register(
+            "listener", lambda: {"accepted": self.listener.accepted,
+                                 "clients": len(self.reactor)})
         self._closed = False
 
     @property
@@ -324,22 +337,32 @@ class ServingFabric:
         job_id = header.get("job_id", -1)
         op, mode = header.get("op"), header.get("mode", "sync")
         tree = lease.tree
+        rid = lease.rid
+        t_arr = time.perf_counter()
+        req_nbytes = 0              # rebound below once data is extracted
 
         def reply(_jid: int, out) -> None:
-            if isinstance(out, Exception):
-                conn.reply({}, {"job_id": job_id,
-                                "error": f"{type(out).__name__}: {out}"},
-                           timeout_s=self.reply_timeout_s)
-            else:
-                conn.reply({"result": np.asarray(out)},
-                           {"job_id": job_id, "error": None},
-                           timeout_s=self.reply_timeout_s)
+            hdr = ({"job_id": job_id, _trace.RID_KEY: rid} if rid
+                   else {"job_id": job_id})
+            try:
+                if isinstance(out, Exception):
+                    hdr["error"] = f"{type(out).__name__}: {out}"
+                    conn.reply({}, hdr, timeout_s=self.reply_timeout_s)
+                else:
+                    hdr["error"] = None
+                    conn.reply({"result": np.asarray(out)}, hdr,
+                               timeout_s=self.reply_timeout_s)
+            finally:
+                # SLO clock: reactor delivery -> reply sent (service time)
+                self.slo.observe(time.perf_counter() - t_arr, req_nbytes)
 
         try:
             data = tree["data"] if isinstance(tree, dict) else None
+            req_nbytes = int(getattr(data, "nbytes", 0) or 0)
             return {"op": op, "data": data,
                     "mode": ExecutionMode(mode),   # validated HERE, not
                     "on_complete": reply,          # mid-batch in submit_many
+                    "rid": rid,
                     "lease": lease if lease.held else None}
         except Exception as e:
             # malformed request (missing data, bad mode string, ...): tell
@@ -370,18 +393,20 @@ class ServingFabric:
 
     def stats(self) -> dict:
         """Fabric-level counters: listener, reactor, per-client (including
-        each connection's data-channel heap counters), dispatcher."""
+        each connection's full transport stats — channel, rings, heap,
+        governor), dispatcher, and the request SLO snapshot.  The
+        ``metrics`` key is the same data as one flat dot-keyed dict (the
+        :class:`~repro.obs.metrics.MetricsRegistry` view)."""
         return {
             "accepted": self.listener.accepted,
             "reactor": vars(self.reactor.stats),
             "clients": {c.cid: {"received": c.received, "replied": c.replied,
                                 "inflight": c.inflight,
-                                "heap_recvs":
-                                    c.transport.data.stats.heap_recvs,
-                                "heap_sends":
-                                    c.transport.data.stats.heap_sends}
+                                "transport": c.transport.stats()}
                         for c in self.reactor.connections()},
             "dispatcher": vars(self.dispatcher.stats),
+            "slo": self.slo.snapshot(),
+            "metrics": self.metrics.snapshot(),
         }
 
     def close(self) -> None:
@@ -416,6 +441,7 @@ class RemoteDispatcherClient:
         self.queries = QueryHandler(self.latency, self.policy)
         self._own_transport = own_transport
         self._ids = iter(range(1, 1 << 62))
+        self._rids: dict[int, int] = {}    # job_id -> trace request id
         self._lock = threading.Lock()
         self._recv_thread: Optional[threading.Thread] = None
         self._stop = threading.Event()
@@ -451,6 +477,10 @@ class RemoteDispatcherClient:
                 break
             err = header.get("error")
             result = RuntimeError(err) if err else tree["result"]
+            if _trace.TRACE.enabled:
+                rid = header.get(_trace.RID_KEY, 0)
+                if isinstance(rid, int) and rid:
+                    _trace.instant(_trace.CLIENT_RECV, rid=rid)
             self.queries.complete(header["job_id"], result)
 
     def request(self, op: str, data: np.ndarray,
@@ -462,13 +492,24 @@ class RemoteDispatcherClient:
             job_id = next(self._ids)
         data = np.asarray(data)
         header = {"job_id": job_id, "op": op, "mode": mode.value}
+        rid = 0
+        if _trace.TRACE.enabled:
+            # mint the request id HERE — the whole lifecycle (wire, reactor,
+            # dispatcher, handler, reply) joins on it across processes
+            rid = _trace.mint_rid()
+            header[_trace.RID_KEY] = rid
+            self._rids[job_id] = rid
         # all modes go through the receiver thread + QueryHandler: replies
         # are matched by job_id, so concurrent client threads can't steal
         # each other's results off the SPSC rx ring
         self._ensure_receiver()
         self.queries.register(Request(job_id, op, None, mode,
                                       nbytes=int(data.nbytes)))
+        t0 = _trace.now() if rid else 0
         self.transport.send({"data": data}, header=header, mode=mode)
+        if rid:
+            _trace.emit(_trace.CLIENT_SEND, t0, rid=rid,
+                        arg=min(int(data.nbytes), 0xFFFFFFFF))
         if mode == ExecutionMode.SYNC:
             return self.query(job_id)
         return job_id
@@ -482,7 +523,12 @@ class RemoteDispatcherClient:
         failures of, unrelated in-flight sends from other threads.)
         """
         self.transport.data.flush_open_frame()
-        out = self.queries.query(job_id, timeout)
+        if not _trace.TRACE.enabled:
+            out = self.queries.query(job_id, timeout)
+        else:
+            rid = self._rids.pop(job_id, 0)
+            with _trace.span(_trace.QUERY_WAIT, rid=rid):
+                out = self.queries.query(job_id, timeout)
         if isinstance(out, Exception):
             raise out
         return out

@@ -1,0 +1,35 @@
+"""Observability plane: cross-process tracing, histograms, unified metrics.
+
+The paper's contribution is *characterizing* where IPC wall clock goes —
+synchronization, cache visibility, copy placement — and this package is
+the runtime's instrument for doing the same to itself:
+
+- :mod:`repro.obs.trace` — an always-on-capable span recorder writing
+  fixed-size binary records into per-thread shared-memory rings
+  (single-writer, no locks, no allocation on the hot path), a request id
+  that rides the existing binary wire meta across processes, and a
+  collector + Chrome-trace exporter that joins every process's spans
+  into one timeline without any extra IPC;
+- :mod:`repro.obs.hist` — fixed-size log-bucket latency histograms,
+  mergeable across processes, built straight from collected trace
+  records (per-phase decomposition);
+- :mod:`repro.obs.metrics` — a :class:`MetricsRegistry` that unifies the
+  stack's ad-hoc ``*Stats`` objects behind one flat snapshot/delta API,
+  plus the :class:`SLOTracker` that finally wires ``ft/monitor.py`` and
+  ``core/latency.py`` into the serving path.
+
+Nothing here imports jax (benchmark measurement children stay jax-free),
+and with tracing disabled (the default) the hot-path cost is one
+attribute check — zero records are written, which CI gates on.
+"""
+from repro.obs import hist, metrics, trace
+from repro.obs.hist import Histogram, phase_histograms, phase_report
+from repro.obs.metrics import MetricsRegistry, SLOTracker
+from repro.obs.trace import TRACE, TraceView, collect, disable, enable
+
+__all__ = [
+    "trace", "hist", "metrics",
+    "TRACE", "TraceView", "collect", "disable", "enable",
+    "Histogram", "phase_histograms", "phase_report",
+    "MetricsRegistry", "SLOTracker",
+]

@@ -1,0 +1,145 @@
+"""Log-bucket latency histograms: fixed int arrays, mergeable anywhere.
+
+A :class:`Histogram` is 64 int64 bucket counts (bucket *b* holds values
+``v`` with ``v.bit_length() == b``, i.e. ``2^(b-1) <= v < 2^b``; bucket 0
+holds zeros) plus exact count/sum side totals.  That representation is:
+
+- **fixed-size** — no allocation while recording, safe in hot paths;
+- **mergeable** — merging is element-wise addition, so per-process (or
+  per-ring) histograms combine into one cross-process distribution
+  without resampling;
+- **good enough for decomposition** — log buckets answer "which phase
+  eats the microseconds" questions (p50/p95 within a factor of 2), which
+  is the resolution the fig12 phase report needs.
+
+Histograms are usually built straight from collected trace records
+(:func:`phase_histograms`); :func:`phase_report` renders the per-phase
+decomposition table used by ``benchmarks/fig12_decomposition.py``.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+
+N_BUCKETS = 64
+
+
+def _bucket_of(values: np.ndarray) -> np.ndarray:
+    """Vectorized ``int.bit_length`` (log2 bucket index, 0 for zeros)."""
+    v = np.asarray(values, np.float64)
+    out = np.zeros(v.shape, np.int64)
+    pos = v > 0
+    out[pos] = np.floor(np.log2(v[pos])).astype(np.int64) + 1
+    return np.clip(out, 0, N_BUCKETS - 1)
+
+
+class Histogram:
+    """Fixed 64-bucket log2 histogram with exact count/sum side totals."""
+
+    __slots__ = ("counts", "n", "total")
+
+    def __init__(self, counts: Optional[np.ndarray] = None,
+                 n: int = 0, total: int = 0):
+        self.counts = (np.zeros(N_BUCKETS, np.int64) if counts is None
+                       else np.asarray(counts, np.int64).copy())
+        self.n = int(n)
+        self.total = int(total)
+
+    # -- recording ----------------------------------------------------------
+    def add(self, value: int) -> None:
+        """Record one non-negative value (e.g. a span duration in ns)."""
+        v = max(int(value), 0)
+        self.counts[min(v.bit_length(), N_BUCKETS - 1)] += 1
+        self.n += 1
+        self.total += v
+
+    def add_many(self, values: np.ndarray) -> None:
+        """Record an array of values in one vectorized pass."""
+        v = np.maximum(np.asarray(values, np.int64), 0)
+        if v.size == 0:
+            return
+        self.counts += np.bincount(_bucket_of(v), minlength=N_BUCKETS)
+        self.n += int(v.size)
+        self.total += int(v.sum())
+
+    # -- merging ------------------------------------------------------------
+    def merge(self, other: "Histogram") -> "Histogram":
+        """Fold another histogram into this one (element-wise add)."""
+        self.counts += other.counts
+        self.n += other.n
+        self.total += other.total
+        return self
+
+    def __iadd__(self, other: "Histogram") -> "Histogram":
+        return self.merge(other)
+
+    # -- queries ------------------------------------------------------------
+    @property
+    def mean(self) -> float:
+        """Exact mean of recorded values (side totals, not buckets)."""
+        return self.total / self.n if self.n else 0.0
+
+    def percentile(self, p: float) -> int:
+        """Upper bound of the bucket containing the p-th percentile
+        (log-bucket resolution: within 2x of the true value)."""
+        if self.n == 0:
+            return 0
+        rank = max(1, int(np.ceil(self.n * p / 100.0)))
+        cum = np.cumsum(self.counts)
+        b = int(np.searchsorted(cum, rank))
+        return (1 << b) - 1 if b else 0
+
+    def to_dict(self) -> dict:
+        """Serializable form (registry snapshots, JSON records)."""
+        return {"counts": self.counts.tolist(), "n": self.n,
+                "total": self.total}
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "Histogram":
+        """Rebuild from :meth:`to_dict` output."""
+        return cls(np.asarray(d["counts"], np.int64), d["n"], d["total"])
+
+    @classmethod
+    def from_durations(cls, durations_ns: np.ndarray) -> "Histogram":
+        """Histogram of an array of span durations."""
+        h = cls()
+        h.add_many(durations_ns)
+        return h
+
+    def __repr__(self) -> str:
+        return (f"Histogram(n={self.n}, mean={self.mean / 1e3:.1f}us, "
+                f"p95<={self.percentile(95) / 1e3:.1f}us)")
+
+
+def phase_histograms(view) -> dict:
+    """Per-phase duration histograms from a collected
+    :class:`~repro.obs.trace.TraceView` — kind name → :class:`Histogram`."""
+    from repro.obs.trace import KIND_NAMES
+    out = {}
+    for kind, name in KIND_NAMES.items():
+        d = view.durations_ns(kind)
+        if len(d):
+            out[name] = Histogram.from_durations(d)
+    return out
+
+
+def phase_report(view, per: int = 1) -> str:
+    """Text decomposition table: per-phase count, total, mean, p95.
+
+    ``per`` divides totals into a per-item rate (e.g. pass the request
+    count to read µs *per request* directly).
+    """
+    hists = phase_histograms(view)
+    lines = [f"{'phase':<26}{'count':>8}{'total_ms':>12}"
+             f"{'us/item':>12}{'mean_us':>10}{'p95_us':>10}"]
+    for name in sorted(hists, key=lambda k: -hists[k].total):
+        h = hists[name]
+        lines.append(
+            f"{name:<26}{h.n:>8}{h.total / 1e6:>12.2f}"
+            f"{h.total / 1e3 / max(per, 1):>12.1f}"
+            f"{h.mean / 1e3:>10.1f}{h.percentile(95) / 1e3:>10.1f}")
+    if view.total_drops:
+        lines.append(f"(dropped {view.total_drops} records to ring "
+                     f"wraparound — totals are floors)")
+    return "\n".join(lines)

@@ -1,0 +1,163 @@
+"""Unified metrics plane: one snapshot/delta API over the ad-hoc stats.
+
+The stack grew nine independent ``*Stats`` objects (Channel, CopyEngine,
+Engine, Reactor, Heap, Ring, Governor, Dispatcher, Pool) with three
+different shapes: plain dataclasses, objects with ``snapshot()``, and raw
+dicts.  :class:`MetricsRegistry` flattens all of them into labeled dot
+keys (``"reactor.sweeps"``, ``"governor.decisions"``) behind one
+``snapshot()``/``delta()`` pair, so callers read the *whole* runtime in
+one call and can diff two snapshots to get per-interval rates — the
+"stats completeness" fix for ``ShmTransport.stats()`` and
+``ServingFabric.stats()``.
+
+:class:`SLOTracker` wires the previously-orphaned serving SLO pieces —
+``ft/monitor.py``'s :class:`~repro.ft.monitor.StepTimer` /
+:class:`~repro.ft.monitor.StragglerMonitor` and ``core/latency.py``'s
+:class:`~repro.core.latency.LatencyModel` — into the request path: the
+fabric observes every request's service time, the straggler monitor
+flags tail blowups against the rolling median, and the latency model
+turns into a live predicted-vs-observed ratio instead of dead code.
+"""
+from __future__ import annotations
+
+from collections import deque
+from typing import Callable, Optional, Union
+
+from repro.core.latency import LatencyModel
+from repro.ft.monitor import StepTimer, StragglerMonitor
+
+_MB = float(1 << 20)
+
+
+def _materialize(source) -> dict:
+    """One source → a plain dict: call it, ``snapshot()`` it, copy it, or
+    fall back to ``vars()`` (plain dataclass stats)."""
+    if callable(source):
+        source = source()
+    snap = getattr(source, "snapshot", None)
+    if callable(snap):
+        source = snap()
+    if isinstance(source, dict):
+        return dict(source)
+    return dict(vars(source))
+
+
+def _flatten(prefix: str, value, out: dict) -> None:
+    """Recursively flatten nested dicts into ``a.b.c`` keys."""
+    if isinstance(value, dict):
+        for k, v in value.items():
+            _flatten(f"{prefix}.{k}" if prefix else str(k), v, out)
+    else:
+        out[prefix] = value
+
+
+class MetricsRegistry:
+    """Named metric sources unified behind flat snapshot/delta calls.
+
+    A *source* may be a stats object (dataclass or ``snapshot()``-bearing),
+    a dict, or a zero-arg callable returning any of those — so dynamic
+    collections (per-connection transports, a lazily-created governor)
+    register once as a closure and stay current.
+    """
+
+    def __init__(self):
+        self._sources: dict[str, object] = {}
+
+    def register(self, name: str,
+                 source: Union[object, dict, Callable]) -> None:
+        """Add (or replace) a named source."""
+        self._sources[name] = source
+
+    def unregister(self, name: str) -> None:
+        """Drop a source (idempotent)."""
+        self._sources.pop(name, None)
+
+    def names(self) -> list:
+        """Registered source names (sorted)."""
+        return sorted(self._sources)
+
+    def snapshot(self) -> dict:
+        """Flat ``source.field`` → value dict across every source.
+
+        A source that raises is reported as ``"<name>.error"`` instead of
+        poisoning the rest of the snapshot (stats must never take the
+        data path down)."""
+        out: dict = {}
+        for name in sorted(self._sources):
+            try:
+                _flatten(name, _materialize(self._sources[name]), out)
+            except Exception as e:               # pragma: no cover - defensive
+                out[f"{name}.error"] = repr(e)
+        return out
+
+    @staticmethod
+    def delta(prev: dict, cur: dict) -> dict:
+        """Numeric difference ``cur - prev`` per key (non-numeric values
+        and keys missing from ``prev`` pass through as-is) — turns two
+        lifetime-counter snapshots into a per-interval reading."""
+        out = {}
+        for k, v in cur.items():
+            p = prev.get(k)
+            if isinstance(v, bool) or not isinstance(v, (int, float)):
+                out[k] = v
+            elif isinstance(p, (int, float)) and not isinstance(p, bool):
+                out[k] = v - p
+            else:
+                out[k] = v
+        return out
+
+
+class SLOTracker:
+    """Per-request serving-latency SLO monitor for the fabric.
+
+    Feeds every completed request's service time (reactor delivery →
+    reply sent) into a rolling :class:`StepTimer` (p50/p95) and a
+    :class:`StragglerMonitor` (tail blowups vs. the rolling median), and
+    — when a :class:`LatencyModel` is present — tracks the EWMA ratio of
+    observed to predicted service time, making the model a live
+    calibration check instead of dead code.
+    """
+
+    def __init__(self, latency: Optional[LatencyModel] = None,
+                 window: int = 256, straggler_threshold: float = 4.0,
+                 patience: int = 3):
+        self.model = latency
+        # StepTimer's dataclass default deque is pinned at maxlen=64;
+        # widen it to the requested window
+        self.timer = StepTimer(window=window, times=deque(maxlen=window))
+        self.straggler = StragglerMonitor(threshold=straggler_threshold,
+                                          patience=patience)
+        self.requests = 0
+        self.bytes_in = 0
+        self._ratio_ewma = 0.0
+
+    def observe(self, seconds: float, nbytes: int = 0) -> None:
+        """Record one request's observed service time (and payload size,
+        which the latency model predicts from)."""
+        self.requests += 1
+        self.bytes_in += int(nbytes)
+        self.timer.record(seconds)
+        self.straggler.record_step(seconds)
+        if self.model is not None and nbytes > 0:
+            predicted_s = self.model.predict_us(nbytes) * 1e-6
+            if predicted_s > 0:
+                ratio = seconds / predicted_s
+                self._ratio_ewma = (ratio if self._ratio_ewma == 0.0 else
+                                    0.9 * self._ratio_ewma + 0.1 * ratio)
+
+    def snapshot(self) -> dict:
+        """Flat SLO counters: volume, p50/p95 ms, straggler events, and
+        the observed/predicted latency-model ratio (0 = no model/data)."""
+        return {
+            "requests": self.requests,
+            "mb_in": self.bytes_in / _MB,
+            "p50_ms": self.timer.median() * 1e3,
+            "p95_ms": self.timer.p95() * 1e3,
+            "stragglers": len(self.straggler.events),
+            "consecutive_slow": self.straggler.consecutive_slow,
+            "model_ratio": self._ratio_ewma,
+            "model_l_fixed_us": (self.model.l_fixed_us
+                                 if self.model else 0.0),
+            "model_alpha_us_per_mb": (self.model.alpha_us_per_mb
+                                      if self.model else 0.0),
+        }

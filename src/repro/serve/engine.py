@@ -25,6 +25,7 @@ from repro.core.engine import AsyncTransferEngine
 from repro.core.latency import LatencyModel
 from repro.core.policy import ExecutionMode, OffloadPolicy
 from repro.models.registry import ModelAPI
+from repro.obs import trace as _trace
 
 
 @dataclass(frozen=True)
@@ -56,6 +57,7 @@ class BatchedServer:
     def generate_batch(self, batch: dict, new_tokens: Optional[int] = None
                        ) -> np.ndarray:
         n_new = new_tokens or self.scfg.max_new_tokens
+        tt0 = _trace.now() if _trace.TRACE.enabled else 0
         t0 = time.perf_counter()
         dev_batch = self.engine.submit(batch).get()
         logits, cache = self._prefill(self.params, dev_batch)
@@ -74,6 +76,8 @@ class BatchedServer:
         self.stats["decode_s"] += time.perf_counter() - t0
         self.stats["batches"] += 1
         self.stats["tokens_out"] += result.size
+        if tt0:
+            _trace.emit(_trace.SERVE_BATCH, tt0, arg=result.shape[0])
         return result
 
     # -- request-level API (dispatcher integration) ------------------------------
@@ -137,6 +141,7 @@ class BatchedServer:
                                heap_extents=heap_extents),
             policy=self.policy, latency=latency, max_clients=max_clients,
             own_dispatcher=True)
+        fabric.metrics.register("server", lambda: self.stats)
         return fabric.start()
 
     def _pack(self, prompts: list[np.ndarray]) -> dict:

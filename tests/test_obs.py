@@ -1,0 +1,328 @@
+"""Observability plane: trace rings, cross-process join, metrics registry.
+
+The trace tests drive the real shared-memory span rings (enable → emit →
+collect) inside one process first — wraparound loss accounting, span
+nesting, Chrome export — then prove the headline property end to end: a
+request issued by a *spawned client process* produces spans on both sides
+of the fabric that join into one timeline on the request id, and the
+client-side phase spans sum to the measured end-to-end latency.
+
+The disabled-path test is the counted zero-overhead gate: tracing off
+must write exactly 0 records (``emitted_count()``), not "few".
+"""
+import json
+import multiprocessing as mp
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.dispatcher import RequestDispatcher
+from repro.core.policy import OffloadPolicy
+from repro.ipc import RemoteDispatcherClient, ServingFabric, TransportSpec
+from repro.obs import hist as obs_hist
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
+
+TIGHT = OffloadPolicy(offload_threshold_bytes=1, poll_interval_us=50.0)
+SMALL = TransportSpec(data_slots=4, data_slot_bytes=1 << 20,
+                      ctrl_slots=4, ctrl_slot_bytes=4 << 10)
+
+
+@pytest.fixture
+def traced():
+    """Fresh trace session; everything unlinked afterwards no matter what."""
+    session = obs_trace.enable(capacity=1 << 12)
+    try:
+        yield session
+    finally:
+        obs_trace.collect(session, unlink=True)
+        obs_trace.disable(unlink=True)
+
+
+# ---------------------------------------------------------------------------
+# disabled = zero records (the counted gate)
+# ---------------------------------------------------------------------------
+
+def test_disabled_tracing_writes_exactly_zero_records():
+    assert not obs_trace.TRACE.enabled
+    before = obs_trace.emitted_count()
+    t0 = obs_trace.now()
+    obs_trace.emit(obs_trace.HANDLER, t0, rid=1, arg=2)
+    obs_trace.instant(obs_trace.GOV_OBSERVE)
+    with obs_trace.span(obs_trace.GATHER):
+        pass
+    assert obs_trace.emitted_count() == before == 0
+    assert obs_trace.dropped_count() == 0
+
+
+def test_disabled_fabric_roundtrip_writes_zero_records_and_clean_wire():
+    """An instrumented end-to-end request with tracing off: no records,
+    and no rid key smuggled into reply headers."""
+    assert not obs_trace.TRACE.enabled
+    d = RequestDispatcher(TIGHT)
+    d.register_handler("double", lambda x: x * 2,
+                       batch_fn=lambda xs: [x * 2 for x in xs])
+    with ServingFabric(d, spec=SMALL, policy=TIGHT,
+                       own_dispatcher=True).start() as fab:
+        client = RemoteDispatcherClient.connect(fab.name, policy=TIGHT)
+        out = client.request("double", np.arange(8, dtype=np.float32),
+                             mode="sync")
+        np.testing.assert_array_equal(out, np.arange(8, dtype=np.float32) * 2)
+        client.close()
+    assert obs_trace.emitted_count() == 0
+
+
+# ---------------------------------------------------------------------------
+# single-process ring mechanics
+# ---------------------------------------------------------------------------
+
+def test_span_nesting_and_collection(traced):
+    rid = obs_trace.mint_rid()
+    with obs_trace.span(obs_trace.HANDLER, rid=rid, arg=3):
+        time.sleep(0.002)
+        with obs_trace.span(obs_trace.GATHER, rid=rid):
+            time.sleep(0.001)
+    view = obs_trace.collect(traced)
+    assert view.total_records == 2 and view.total_drops == 0
+    outer = view.records_of(obs_trace.HANDLER)[0]
+    inner = view.records_of(obs_trace.GATHER)[0]
+    # nested span sits strictly inside its parent on the shared timebase
+    assert outer["t0"] <= inner["t0"] <= inner["t1"] <= outer["t1"]
+    assert int(outer["rid"]) == int(inner["rid"]) == rid
+    assert int(outer["arg"]) == 3
+    totals = view.phase_totals()
+    assert totals["dispatcher.handler"][0] == 1
+    assert totals["dispatcher.handler"][1] >= totals["dispatcher.gather"][1]
+    assert view.kinds_for_rid(rid).keys() == {obs_trace.HANDLER,
+                                              obs_trace.GATHER}
+
+
+def test_wraparound_overwrites_oldest_and_counts_drops():
+    cap = 64
+    session = obs_trace.enable(capacity=cap)
+    try:
+        n = 3 * cap + 7
+        for i in range(n):
+            t = obs_trace.now()
+            obs_trace.emit(obs_trace.COPY_JOB, t, arg=i, t1=t)
+        assert obs_trace.emitted_count() == n
+        assert obs_trace.dropped_count() == n - cap
+        view = obs_trace.collect(session)
+        assert view.total_records == cap          # ring holds the newest cap
+        assert view.total_drops == n - cap        # loss is counted, not silent
+        args = view.records_of(obs_trace.COPY_JOB)["arg"]
+        # survivors are exactly the newest records, oldest → newest order
+        assert list(args) == list(range(n - cap, n))
+    finally:
+        obs_trace.collect(session, unlink=True)
+        obs_trace.disable(unlink=True)
+
+
+def test_collect_unlink_destroys_rings(traced):
+    obs_trace.instant(obs_trace.GOV_OBSERVE)
+    assert obs_trace.discover(traced)
+    view = obs_trace.collect(traced, unlink=True)
+    assert view.total_records == 1
+    assert obs_trace.discover(traced) == []
+
+
+def test_chrome_trace_export_is_valid_json(traced, tmp_path):
+    rid = obs_trace.mint_rid()
+    with obs_trace.span(obs_trace.CLIENT_SEND, rid=rid, arg=4096):
+        time.sleep(0.001)
+    view = obs_trace.collect(traced)
+    path = tmp_path / "trace.json"
+    view.save_chrome(str(path))
+    doc = json.loads(path.read_text())          # must round-trip as JSON
+    events = doc["traceEvents"]
+    assert len(events) == 1
+    ev = events[0]
+    assert ev["ph"] == "X" and ev["name"] == "client.send"
+    assert ev["dur"] >= 1000.0                  # µs; slept 1 ms inside
+    assert ev["args"]["rid"] == rid and ev["args"]["arg"] == 4096
+    assert doc["otherData"]["drops"] == 0
+
+
+# ---------------------------------------------------------------------------
+# cross-process: spawned client's spans join the server's on the rid
+# ---------------------------------------------------------------------------
+
+def _traced_client_entry(name: str, out_q) -> None:
+    """Spawn-child: tracing auto-enabled by the inherited environment; one
+    pipelined request, report (rid, measured e2e ns)."""
+    from repro.obs import trace as child_trace
+    assert child_trace.TRACE.enabled           # env inheritance worked
+    client = RemoteDispatcherClient.connect(name, policy=TIGHT, timeout_s=60)
+    data = np.arange(1 << 14, dtype=np.float32)
+    t0 = child_trace.now()
+    jid = client.request("slow", data, mode="pipelined")
+    rid = client._rids[jid]                    # query() pops it; grab it now
+    out = client.query(jid, timeout=60)
+    e2e_ns = child_trace.now() - t0
+    client.close()
+    ok = bool(np.array_equal(out, data * 2))
+    out_q.put((rid, e2e_ns, ok))
+
+
+def test_cross_process_rid_join_and_phase_sum(tmp_path):
+    def slow(x):
+        time.sleep(0.02)
+        return x * 2
+
+    d = RequestDispatcher(TIGHT)
+    d.register_handler("slow", slow, batch_fn=lambda xs: [slow(x) for x in xs])
+    session = obs_trace.enable(capacity=1 << 14)
+    try:
+        with ServingFabric(d, spec=SMALL, policy=TIGHT,
+                           own_dispatcher=True).start() as fab:
+            ctx = mp.get_context("spawn")
+            out_q = ctx.Queue()
+            proc = ctx.Process(target=_traced_client_entry,
+                               args=(fab.name, out_q))
+            proc.start()
+            rid, e2e_ns, ok = out_q.get(timeout=120)
+            proc.join(timeout=120)
+            assert proc.exitcode == 0 and ok
+        view = obs_trace.collect(session)
+        assert view.total_drops == 0
+        # spans from BOTH processes landed in one session
+        child_pid = proc.pid
+        assert child_pid in view.pids and len(view.pids) >= 2
+        joined = view.kinds_for_rid(rid)
+        # client side of the request…
+        assert obs_trace.CLIENT_SEND in joined
+        assert obs_trace.QUERY_WAIT in joined
+        # …joins the server side on the same rid (byte-exact through the wire)
+        assert obs_trace.HANDLER in joined
+        assert obs_trace.REPLY_FILL in joined
+        client_kinds = {k for k, spans in joined.items()
+                        if any(pid == child_pid for pid, _, _ in spans)}
+        server_kinds = {k for k, spans in joined.items()
+                        if any(pid != child_pid for pid, _, _ in spans)}
+        assert obs_trace.CLIENT_SEND in client_kinds
+        assert obs_trace.HANDLER in server_kinds
+
+        # the client's phase spans decompose its measured e2e latency: send
+        # + completion-wait cover everything but sub-µs bookkeeping, so the
+        # sum lands within 10% of the wall clock the child itself measured
+        client_ns = sum(t1 - t0 for kind in (obs_trace.CLIENT_SEND,
+                                             obs_trace.QUERY_WAIT)
+                        for pid, t0, t1 in joined[kind] if pid == child_pid)
+        assert abs(client_ns - e2e_ns) <= 0.10 * e2e_ns, (client_ns, e2e_ns)
+
+        # and the joined timeline exports as loadable Chrome-trace JSON
+        path = tmp_path / "xproc.json"
+        view.save_chrome(str(path))
+        doc = json.loads(path.read_text())
+        assert {e["pid"] for e in doc["traceEvents"]} >= {child_pid}
+    finally:
+        obs_trace.collect(session, unlink=True)
+        obs_trace.disable(unlink=True)
+
+
+# ---------------------------------------------------------------------------
+# metrics registry + SLO tracker
+# ---------------------------------------------------------------------------
+
+class _SnapStats:
+    def snapshot(self):
+        return {"a": 1, "nested": {"b": 2.5}}
+
+
+def test_metrics_registry_snapshot_shapes_and_delta():
+    reg = obs_metrics.MetricsRegistry()
+    reg.register("dict", {"x": 1})
+    reg.register("call", lambda: {"y": 2})
+    reg.register("snap", _SnapStats())
+    assert reg.names() == ["call", "dict", "snap"]
+    snap = reg.snapshot()
+    assert snap == {"dict.x": 1, "call.y": 2,
+                    "snap.a": 1, "snap.nested.b": 2.5}
+    later = dict(snap, **{"call.y": 10, "snap.nested.b": 3.0, "tag": "v"})
+    delta = obs_metrics.MetricsRegistry.delta(snap, later)
+    assert delta["call.y"] == 8
+    assert delta["snap.nested.b"] == 0.5
+    assert delta["dict.x"] == 0
+    assert delta["tag"] == "v"                 # non-numeric passes through
+    reg.unregister("dict")
+    assert "dict.x" not in reg.snapshot()
+
+
+def test_slo_tracker_observes_and_rates_model():
+    from repro.core.latency import LatencyModel
+    model = LatencyModel(l_fixed_us=10.0, alpha_us_per_mb=100.0)
+    slo = obs_metrics.SLOTracker(model, window=16)
+    for _ in range(8):
+        slo.observe(0.001, nbytes=1 << 20)     # 1 ms on 1 MB
+    snap = slo.snapshot()
+    assert snap["requests"] == 8
+    assert snap["mb_in"] == pytest.approx(8.0)
+    assert snap["p50_ms"] == pytest.approx(1.0, rel=0.2)
+    # predicted 110 µs vs observed 1 ms → ratio ≈ 9.09, EWMA of a constant
+    assert snap["model_ratio"] == pytest.approx(1000.0 / 110.0, rel=0.05)
+
+
+def test_fabric_exposes_unified_metrics_and_slo():
+    d = RequestDispatcher(TIGHT)
+    d.register_handler("double", lambda x: x * 2,
+                       batch_fn=lambda xs: [x * 2 for x in xs])
+    with ServingFabric(d, spec=SMALL, policy=TIGHT,
+                       own_dispatcher=True).start() as fab:
+        client = RemoteDispatcherClient.connect(fab.name, policy=TIGHT)
+        for _ in range(3):
+            client.request("double", np.ones(16, np.float32), mode="sync")
+        deadline = time.perf_counter() + 10
+        while fab.slo.requests < 3:            # reply sent → observe raced
+            assert time.perf_counter() < deadline
+            time.sleep(0.005)
+        snap = fab.metrics.snapshot()
+        full = fab.stats()
+        client.close()
+    assert snap["slo.requests"] >= 3
+    assert snap["slo.p50_ms"] > 0
+    assert snap["listener.accepted"] == 1
+    assert any(k.startswith("reactor.") for k in snap)
+    assert any(k.startswith("dispatcher.") for k in snap)
+    assert full["slo"]["requests"] >= 3
+    assert full["metrics"]["slo.requests"] >= 3
+
+
+# ---------------------------------------------------------------------------
+# histograms
+# ---------------------------------------------------------------------------
+
+def test_histogram_buckets_merge_and_percentile():
+    h = obs_hist.Histogram()
+    h.add(0)
+    h.add(1)
+    h.add(1000)
+    assert h.counts[0] == 1                    # zeros live in bucket 0
+    assert h.counts[1] == 1                    # 2^0 <= 1 < 2^1
+    assert h.counts[10] == 1                   # 2^9 <= 1000 < 2^10
+    assert h.n == 3 and h.total == 1001
+    assert h.mean == pytest.approx(1001 / 3)
+
+    g = obs_hist.Histogram.from_durations(np.full(97, 1000, np.int64))
+    g.merge(h)
+    assert g.n == 100 and g.total == 97 * 1000 + 1001
+    # 100 values, 97 of them 1000 → p95 falls in the 1000s bucket
+    assert 512 <= g.percentile(95) <= 1023
+    assert g.percentile(1) == 0
+
+    rt = obs_hist.Histogram.from_dict(g.to_dict())
+    assert rt.n == g.n and rt.total == g.total
+    assert np.array_equal(rt.counts, g.counts)
+
+
+def test_phase_histograms_and_report_from_view(traced):
+    for _ in range(4):
+        with obs_trace.span(obs_trace.RING_WAIT):
+            time.sleep(0.001)
+    view = obs_trace.collect(traced)
+    hists = obs_hist.phase_histograms(view)
+    assert set(hists) == {"ring.wait"}
+    assert hists["ring.wait"].n == 4
+    assert hists["ring.wait"].mean >= 1e6      # slept ≥ 1 ms per span
+    report = obs_hist.phase_report(view, per=4)
+    assert "ring.wait" in report and "us/item" in report
