@@ -1,0 +1,201 @@
+"""Fig. 15 analogue: SLO saturation sweep — per-lane latency, goodput, sheds.
+
+The SLO serving claim: under saturating offered load a lane-ordered server
+keeps its *priority* lane inside its deadline by shedding the best-effort
+lane, and sharding the drain loop raises the saturation ceiling.  This
+sweep measures exactly that on the multi-client fabric: 4 client processes
+(2 per lane) open-loop-pace pipelined requests at a configured offered
+load, every request carrying ``(priority, deadline_ms)`` wire meta, against
+a 2-shard :class:`~repro.ipc.ServingFabric` whose dispatcher runs a
+matching worker pool.
+
+The ``work`` handler has the same decode-step cost structure as fig14: a
+*fixed* per-call sleep (weight streaming — simulated for the same reason as
+``common.simulated_dsa_put``: on a small CI box real matmuls fight the
+client processes for cores) so one worker's capacity is exactly
+``MAX_BATCH / FIXED_CALL_S`` req/s and "2x offered load" means something.
+
+Per sweep point and lane the row reports server-side p50/p99 service time
+(reactor delivery → reply), goodput-at-deadline (completed on time / wall),
+and the counted shed/miss totals.  Two extra rows carry the *counted,
+timing-independent* CI gates (see ``run.py CHECKED_METRICS``):
+
+- ``fig15/accounting`` — ``slo_lost/req`` (every submitted request got
+  exactly one reply: ok, shed, or error — 0 by construction unless the
+  reply path drops one) and ``shed_drift`` (server-counted sheds ==
+  client-observed shed errors — sheds are *counted* replies, never silent);
+- ``fig15/shards_1to2`` — aggregate goodput ratio of 2 reactor shards
+  (+ 2 dispatcher workers) over 1 at the 2x point, the sharding headline
+  (timing-derived, so recorded but not gated).
+
+Run: ``PYTHONPATH=src python -m benchmarks.run --only fig15``
+"""
+from __future__ import annotations
+
+import multiprocessing as mp
+import time
+
+import numpy as np
+
+from benchmarks.common import fmt_row
+
+D_MODEL = 256                  # request payload width (1KB — stays inline)
+FIXED_CALL_S = 0.040           # per-batch weight-streaming latency (simulated)
+MAX_BATCH = 4                  # server batch capacity
+CAP1 = MAX_BATCH / FIXED_CALL_S      # one worker's capacity, req/s (= 100)
+SWEEP_S = 2.5                  # paced send window per point
+# lane plan: lane 0 (priority) offers 30% of the load with a roomier
+# deadline, lane 1 (best effort) 70% with a tight one — at 2x the lane-0
+# share stays under capacity, so lane ordering + shedding keeps it on SLO
+LANES = (
+    {"lane": 0, "share": 0.30, "deadline_ms": 250.0, "clients": 2},
+    {"lane": 1, "share": 0.70, "deadline_ms": 150.0, "clients": 2},
+)
+_POLL_US = {"server": 500.0, "client": 1000.0}
+
+
+def _client_entry(name: str, lane: int, interval_s: float, n: int,
+                  deadline_ms: float, out_q) -> None:
+    """One client: gate, then open-loop-pace n pipelined SLO requests."""
+    from repro.core.policy import OffloadPolicy
+    from repro.ipc import RemoteDispatcherClient
+
+    policy = OffloadPolicy(poll_interval_us=_POLL_US["client"])
+    client = RemoteDispatcherClient.connect(name, policy=policy,
+                                            timeout_s=60, lane=lane)
+    submitted = replies = 0
+    vec = np.ones((D_MODEL,), np.float32)
+    while True:
+        submitted += 1
+        gate_open = int(client.request("gate", vec[:1], mode="sync")[0])
+        replies += 1                   # sync gate polls are replies too
+        if gate_open != 0:
+            break
+        time.sleep(0.002)
+    t0 = time.time()                   # wall clock: comparable cross-process
+    jobs = []
+    next_t = time.perf_counter()
+    for _ in range(n):
+        now = time.perf_counter()
+        if now < next_t:
+            time.sleep(next_t - now)
+        next_t += interval_s           # absolute schedule: no pacing drift
+        jobs.append(client.request("work", vec, mode="pipelined",
+                                   deadline_ms=deadline_ms))
+        submitted += 1
+    shed = 0
+    for jid in jobs:
+        try:
+            client.query(jid, timeout=120)
+        except RuntimeError as e:
+            if str(e).startswith("DeadlineExceeded"):
+                shed += 1
+        replies += 1                   # ok, shed, and error replies all count
+    out_q.put({"lane": lane, "t0": t0, "t1": time.time(),
+               "submitted": submitted, "replies": replies, "shed": shed})
+    client.close()
+
+
+def _run_point(load_x: float, reactors: int) -> dict:
+    """One sweep point: offered ``load_x`` × the 2-worker capacity against
+    ``reactors`` shards (dispatcher workers match the shard count)."""
+    from repro.core.dispatcher import RequestDispatcher
+    from repro.core.policy import OffloadPolicy
+    from repro.ipc import ServingFabric, TransportSpec
+
+    gate = [0.0]
+
+    def work_batch(xs: list[np.ndarray]) -> list[np.ndarray]:
+        time.sleep(FIXED_CALL_S)       # fixed per-call cost (the weights)
+        return [x + 1.0 for x in xs]
+
+    policy = OffloadPolicy(offload_threshold_bytes=1, max_batch=MAX_BATCH,
+                           poll_interval_us=_POLL_US["server"])
+    dispatcher = RequestDispatcher(policy, max_batch_wait_s=0.005,
+                                   workers=reactors)
+    dispatcher.register_handler("gate", lambda x: np.float32(gate[0]) + x)
+    dispatcher.register_handler("work", lambda x: work_batch([x])[0],
+                                batch_fn=work_batch)
+    spec = TransportSpec(data_slots=8, data_slot_bytes=1 << 20,
+                         ctrl_slots=4, ctrl_slot_bytes=16 << 10)
+    offered = load_x * 2 * CAP1        # x is relative to the SHARDED capacity
+    ctx = mp.get_context("spawn")
+    out_q = ctx.Queue()
+    with ServingFabric(dispatcher, spec=spec, policy=policy,
+                       own_dispatcher=True, reactors=reactors,
+                       max_inflight=64).start() as fabric:
+        procs = []
+        for cfg in LANES:
+            rate = offered * cfg["share"] / cfg["clients"]   # req/s per client
+            n = max(1, int(round(rate * SWEEP_S)))
+            for _ in range(cfg["clients"]):
+                procs.append(ctx.Process(
+                    target=_client_entry,
+                    args=(fabric.name, cfg["lane"], 1.0 / rate, n,
+                          cfg["deadline_ms"], out_q),
+                    daemon=True))
+        for p in procs:
+            p.start()
+        while fabric.listener.accepted < len(procs):
+            time.sleep(0.005)
+        gate[0] = 1.0                  # all connected: release together
+        reports = [out_q.get(timeout=180) for _ in procs]
+        for p in procs:
+            p.join(timeout=60)
+        stats = fabric.stats()
+    wall = (max(r["t1"] for r in reports) - min(r["t0"] for r in reports))
+    return {"reports": reports, "stats": stats, "wall": wall,
+            "load_x": load_x, "reactors": reactors}
+
+
+def _lane_rows(point: dict):
+    """Per-lane CSV rows for one sweep point (server-side SLO clock)."""
+    stats, wall = point["stats"], point["wall"]
+    slo, disp = stats["slo"], stats["dispatcher"]
+    tag = f"fig15/load{point['load_x']:g}x"
+    for cfg in LANES:
+        lane = cfg["lane"]
+        ls = slo.get(f"lane{lane}", {})
+        n = disp["lane_requests"].get(lane, 0)
+        shed = disp["lane_shed"].get(lane, 0)
+        miss = ls.get("misses", 0)
+        goodput = max(0, n - shed - miss) / wall
+        yield fmt_row(f"{tag}_lane{lane}", ls.get("p50_ms", 0.0) * 1e3,
+                      f"p99={ls.get('p99_ms', 0.0):.1f}ms "
+                      f"{goodput:.0f}good/s shed{shed} miss{miss}")
+
+
+def _goodput(point: dict) -> float:
+    """Aggregate on-time completions per second for one point."""
+    disp = point["stats"]["dispatcher"]
+    slo = point["stats"]["slo"]
+    n = sum(disp["lane_requests"].values())
+    shed = sum(disp["lane_shed"].values())
+    miss = slo.get("deadline_misses", 0)
+    return max(0, n - shed - miss) / point["wall"]
+
+
+def run():
+    """Yield the sweep rows, the counted accounting gate, and the
+    1→2-shard goodput comparison."""
+    points = [_run_point(0.5, reactors=2), _run_point(2.0, reactors=2)]
+    for point in points:
+        yield from _lane_rows(point)
+    solo = _run_point(2.0, reactors=1)       # sharding headline comparison
+
+    # counted, timing-independent gates over ALL runs (incl. the 1-shard
+    # one): every submitted request produced exactly one reply, and the
+    # server's shed counter matches the client-observed shed errors
+    submitted = replies = client_shed = server_shed = 0
+    for point in points + [solo]:
+        for r in point["reports"]:
+            submitted += r["submitted"]
+            replies += r["replies"]
+            client_shed += r["shed"]
+        server_shed += point["stats"]["dispatcher"]["shed"]
+    lost = (submitted - replies) / max(1, submitted)
+    yield fmt_row("fig15/accounting", 0.0,
+                  f"n={submitted};slo_lost/req={lost:.4f};"
+                  f"shed_drift={abs(server_shed - client_shed)}")
+    yield fmt_row("fig15/shards_1to2", 0.0,
+                  f"{_goodput(points[1]) / max(_goodput(solo), 1e-9):.2f}x")

@@ -41,6 +41,7 @@ from benchmarks import (
     fig13_instruction_counts,
     fig13_copy_path,
     fig14_multiclient,
+    fig15_saturation,
     table1_workload_bytes,
 )
 
@@ -61,6 +62,7 @@ MODULES = {
     "fig13": fig13_instruction_counts,
     "fig13copy": fig13_copy_path,
     "fig14": fig14_multiclient,
+    "fig15": fig15_saturation,
 }
 
 # counted (non-timing) metrics gated by ``--check``: metric token ->
@@ -82,11 +84,20 @@ MODULES = {
 # pickle/send counts meta-path pickle calls per message across both
 # endpoints — 0 in steady state (binary headers + descriptor caches), so
 # any regression that reintroduces per-send pickling fails the gate.
+#
+# The fig15 SLO-accounting metrics are timing-independent *identities* with
+# zero slack: slo_lost/req is the fraction of submitted requests that never
+# produced a reply (ok, shed error, or other error — anything nonzero means
+# the reply path dropped one), and shed_drift is the absolute difference
+# between the server's counted sheds and the shed errors clients observed
+# (a shed must always be a counted, replied-to event — never silent).
 CHECKED_METRICS = {
     "copies/req": (1.0, 0.01),
     "doorbells/req": (1.0, 3.0),
     "doorbells/msg": (1.5, 0.1),
     "pickle/send": (1.0, 0.01),
+    "slo_lost/req": (1.0, 0.0),
+    "shed_drift": (1.0, 0.0),
 }
 
 
@@ -109,8 +120,11 @@ def _parse_counted(derived: str) -> dict:
 def _check(path: str, rows: list[str]) -> list[str]:
     """Compare this run's counted metrics against the committed snapshot;
     returns human-readable regression strings (empty = pass).  Only rows
-    present in BOTH are compared, so adding benches never breaks the
-    gate — regressing copies/request or doorbells does."""
+    present in BOTH are compared, so adding benches never breaks the gate
+    — but a gated metric that *disappears* from a produced row's derived
+    field is a failure with an explicit diff, not a vacuous pass (a
+    refactor that stops emitting ``copies/req`` must not turn the gate
+    off silently)."""
     with open(path) as f:
         snapshot = json.load(f)
     baseline = {}
@@ -118,23 +132,29 @@ def _check(path: str, rows: list[str]) -> list[str]:
         counted = _parse_counted(row.get("derived") or "")
         if counted:
             baseline[row["bench"]] = counted
-    problems, compared = [], 0
+    produced = {}
     for row in rows:
         name, _, derived = (row.split(",", 2) + ["", ""])[:3]
-        counted = _parse_counted(derived)
-        base = baseline.get(name)
-        if not counted or base is None:
-            continue
-        for key, new_val in counted.items():
-            if key not in base:
+        produced[name] = _parse_counted(derived)
+    problems, compared = [], 0
+    for name, base in baseline.items():
+        counted = produced.get(name)
+        if counted is None:
+            continue                   # row not produced (e.g. --only subset)
+        for key, base_val in base.items():
+            if key not in counted:
+                problems.append(
+                    f"{name}: gated metric {key!r} disappeared "
+                    f"(baseline {base_val:g}, this run has no such token)")
                 continue
+            new_val = counted[key]
             compared += 1
             factor, slack = CHECKED_METRICS[key]
-            limit = base[key] * factor + slack
+            limit = base_val * factor + slack
             if new_val > limit:
                 problems.append(
                     f"{name}: {key}={new_val:g} exceeds baseline "
-                    f"{base[key]:g} (limit {limit:g})")
+                    f"{base_val:g} (limit {limit:g})")
     print(f"# --check: compared {compared} counted metrics against {path}",
           file=sys.stderr)
     if compared == 0:

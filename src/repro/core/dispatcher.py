@@ -21,9 +21,22 @@ before the handler runs, so ring slots recycle at copy speed rather than
 model speed.  Handlers registered with ``slab_fn`` receive the pooled
 batch buffer directly (no second per-row packing copy); plain ``batch_fn``
 handlers receive row views into it.
+
+**SLO lanes** (deadline-aware serving): every request carries a
+``(priority, deadline_ns)`` pair (defaults: lane 0, no deadline).  Batch
+formation pops a priority heap ordered ``(priority, deadline, seq)``
+instead of a FIFO — lane 0 drains first, earliest deadline first within a
+lane — and at pop time a :class:`~repro.core.latency.ServiceTimeModel`
+(observed per-op service EWMA over the transfer model) predicts whether
+the request can still make its deadline; one that can't is **shed**:
+counted in ``DispatcherStats.shed`` and completed immediately with
+:class:`DeadlineExceeded` (an error reply on the wire, never a silent
+drop).  Completions that ran anyway but landed late count
+``deadline_miss``.
 """
 from __future__ import annotations
 
+import heapq
 import itertools
 import queue
 import threading
@@ -34,10 +47,20 @@ from typing import Any, Callable, Optional, Sequence
 import numpy as np
 
 from repro.core.copyengine import SGList, get_engine
-from repro.core.latency import LatencyModel
+from repro.core.latency import LatencyModel, ServiceTimeModel
 from repro.core.policy import ExecutionMode, OffloadPolicy
 from repro.core.queuepair import BufferPool
 from repro.obs import trace as _trace
+
+
+class DeadlineExceeded(RuntimeError):
+    """A request was shed (or would complete) past its deadline.
+
+    Raised to the submitter through the normal completion path — a shed is
+    an *immediate error reply*, never a silent drop: the request is counted
+    (``DispatcherStats.shed``), its lease released, and its callback/query
+    completed with this exception before any batch slot is spent on it.
+    """
 
 
 @dataclass
@@ -61,6 +84,12 @@ class Request:
     # trace request id (0 = untraced): propagated from the wire by the
     # serving fabric so dispatcher spans join the cross-process timeline
     rid: int = 0
+    # SLO lane: 0 = highest priority; batch formation pops lanes in order
+    priority: int = 0
+    # absolute deadline in time.perf_counter_ns() ticks (0 = none); set by
+    # the client (cross-process CLOCK_MONOTONIC timebase) or the fabric's
+    # default.  A request the service model predicts past this is shed.
+    deadline_ns: int = 0
 
     def _release_lease(self) -> None:
         if self.lease is not None:
@@ -92,6 +121,72 @@ class DispatcherStats:
     gathers: int = 0             # batch-formation gathers (SG submissions)
     gathered_requests: int = 0   # requests copied slot → batch buffer
     slab_batches: int = 0        # batches handed to a slab_fn handler
+    shed: int = 0                # requests refused pre-execution (counted,
+                                 # each one got a DeadlineExceeded reply)
+    deadline_miss: int = 0       # requests completed but past their deadline
+    lane_requests: dict = field(default_factory=dict)  # per-priority intake
+    lane_shed: dict = field(default_factory=dict)      # per-priority sheds
+
+
+class _LaneQueue:
+    """Priority-lane request queue: min-heap on (priority, deadline, seq).
+
+    Replaces the FIFO batch-formation feed: the front of the queue is
+    always the most urgent pending request — lowest priority value first,
+    earliest deadline inside a lane (no-deadline requests sort last in
+    their lane), submit order as the final tiebreak.
+
+    ``get(match=...)`` only pops while the *front* satisfies the
+    predicate: when a higher-urgency request of a different op/lane
+    arrives mid-window, the batch closes instead of reordering past it.
+    A ``put(None)`` sentinel sorts after all real work and stops one
+    worker (push one per worker).
+    """
+
+    _NO_DEADLINE = 1 << 62
+
+    def __init__(self):
+        self._heap: list = []
+        self._cond = threading.Condition()
+        self._seq = itertools.count()
+
+    def put(self, req: Optional[Request]) -> None:
+        with self._cond:
+            if req is None:
+                entry = (1 << 30, self._NO_DEADLINE, next(self._seq), None)
+            else:
+                entry = (req.priority, req.deadline_ns or self._NO_DEADLINE,
+                         next(self._seq), req)
+            heapq.heappush(self._heap, entry)
+            self._cond.notify()
+
+    def get(self, timeout: Optional[float] = None,
+            match: Optional[Callable[[Request], bool]] = None
+            ) -> Optional[Request]:
+        """Pop the front request; ``None`` = stop sentinel.  Raises
+        :class:`queue.Empty` on timeout or (with ``match``) when the
+        front request doesn't satisfy the predicate."""
+        deadline = (time.perf_counter() + timeout
+                    if timeout is not None else None)
+        with self._cond:
+            while True:
+                if self._heap:
+                    front = self._heap[0][3]
+                    if front is None:
+                        heapq.heappop(self._heap)
+                        return None
+                    if match is not None and not match(front):
+                        raise queue.Empty
+                    return heapq.heappop(self._heap)[3]
+                remain = (deadline - time.perf_counter()
+                          if deadline is not None else None)
+                if remain is not None and remain <= 0:
+                    raise queue.Empty
+                self._cond.wait(remain)
+
+    def __len__(self) -> int:
+        with self._cond:
+            return len(self._heap)
 
 
 class QueryHandler:
@@ -149,21 +244,33 @@ class RequestDispatcher:
 
     def __init__(self, policy: OffloadPolicy = OffloadPolicy(),
                  latency: Optional[LatencyModel] = None,
-                 max_batch_wait_s: float = 0.002):
+                 max_batch_wait_s: float = 0.002,
+                 workers: int = 1):
         self.policy = policy
         self.latency = latency or LatencyModel()
         self.queries = QueryHandler(self.latency, policy)
         self.stats = DispatcherStats()
+        # admission predictor: per-op observed service EWMA over the
+        # transfer model — drives deadline-miss shedding in the serve loop
+        self.service = ServiceTimeModel(self.latency)
         self._handlers: dict[str, Callable] = {}
         self._batch_handlers: dict[str, Callable] = {}
         self._slab_handlers: dict[str, Callable] = {}
         self._pool = BufferPool(max_per_key=4)   # pooled batch buffers
-        self._q: "queue.Queue[Optional[Request]]" = queue.Queue()
+        self._q = _LaneQueue()
         self._ids = itertools.count()
         self._max_wait = max_batch_wait_s
-        self._worker = threading.Thread(target=self._serve_loop, daemon=True)
+        self._slock = threading.Lock()           # stats (workers > 1 race)
         self._running = True
-        self._worker.start()
+        # a worker pool (sized to the fabric's reactor shards) lets batches
+        # execute concurrently — all workers pop the same lane queue, so
+        # global lane order is preserved even with several execution lanes
+        self._workers = [threading.Thread(target=self._serve_loop,
+                                          daemon=True)
+                         for _ in range(max(1, workers))]
+        for w in self._workers:
+            w.start()
+        self._worker = self._workers[0]          # backwards-compat alias
 
     # -- handler registration (paper: workload-specific handlers) ------------
     def register_handler(self, op: str, fn: Callable,
@@ -182,14 +289,25 @@ class RequestDispatcher:
 
     # -- client API (paper Listing 1) -----------------------------------------
     def request(self, op: str, data: Any,
-                mode: ExecutionMode | str | None = None) -> int | Any:
+                mode: ExecutionMode | str | None = None,
+                priority: int = 0, deadline_ns: int = 0) -> int | Any:
         mode = ExecutionMode(mode) if mode is not None else self.policy.mode
         req = Request(next(self._ids), op, data, mode,
                       nbytes=int(np.asarray(data).nbytes)
-                      if isinstance(data, np.ndarray) else 0)
-        self.stats.requests += 1
+                      if isinstance(data, np.ndarray) else 0,
+                      priority=priority, deadline_ns=deadline_ns)
+        self._count_in(req)
         if mode == ExecutionMode.SYNC:
-            return self._handlers[op](data)
+            # inline fast path — still SLO-accounted: an expired deadline
+            # sheds here too, and a late completion is a counted miss
+            err = self._shed_verdict(req)
+            if err is not None:
+                raise err
+            t0 = time.perf_counter()
+            out = self._handlers[op](data)
+            self.service.observe(op, time.perf_counter() - t0)
+            self._note_late(req)
+            return out
         self.queries.register(req)
         self._q.put(req)
         return req.job_id
@@ -197,7 +315,8 @@ class RequestDispatcher:
     def submit(self, op: str, data: Any,
                mode: ExecutionMode | str | None = None,
                on_complete: Optional[Callable[[int, Any], None]] = None,
-               lease: Optional[Any] = None) -> int:
+               lease: Optional[Any] = None,
+               priority: int = 0, deadline_ns: int = 0) -> int:
         """Enqueue a request without ever blocking the caller.
 
         Unlike :meth:`request`, sync mode is *not* executed inline: every
@@ -216,8 +335,9 @@ class RequestDispatcher:
         req = Request(next(self._ids), op, data, mode,
                       nbytes=int(np.asarray(data).nbytes)
                       if isinstance(data, np.ndarray) else 0,
-                      callback=on_complete, lease=lease)
-        self.stats.requests += 1
+                      callback=on_complete, lease=lease,
+                      priority=priority, deadline_ns=deadline_ns)
+        self._count_in(req)
         if on_complete is None:
             self.queries.register(req)
         self._q.put(req)
@@ -233,7 +353,9 @@ class RequestDispatcher:
         window together — the serve loop's first ``get`` then assembles
         the whole batch without waiting out ``max_batch_wait_s`` between
         members, so a microbatch on the wire becomes a batch in the
-        handler without K separate submit round-trips."""
+        handler without K separate submit round-trips.  Optional item
+        keys ``priority`` and ``deadline_ns`` place the request in its
+        SLO lane (see :class:`_LaneQueue`)."""
         reqs = []
         for it in items:
             mode = it.get("mode")
@@ -245,9 +367,10 @@ class RequestDispatcher:
                 nbytes=int(np.asarray(data).nbytes)
                 if isinstance(data, np.ndarray) else 0,
                 callback=it.get("on_complete"), lease=it.get("lease"),
-                rid=it.get("rid", 0)))
-        self.stats.requests += len(reqs)
+                rid=it.get("rid", 0), priority=it.get("priority", 0),
+                deadline_ns=it.get("deadline_ns", 0)))
         for req in reqs:
+            self._count_in(req)
             if req.callback is None:
                 self.queries.register(req)
             self._q.put(req)
@@ -261,6 +384,53 @@ class RequestDispatcher:
             raise out.error
         return out
 
+    # -- admission: counted intake + deadline-miss shedding ---------------------
+    def _count_in(self, req: Request) -> None:
+        with self._slock:
+            self.stats.requests += 1
+            lanes = self.stats.lane_requests
+            lanes[req.priority] = lanes.get(req.priority, 0) + 1
+
+    def _shed_verdict(self, req: Request) -> Optional[DeadlineExceeded]:
+        """Counted shed decision: when the service model predicts the
+        request past its deadline, count it (total + per lane) and return
+        the error to deliver; ``None`` admits the request."""
+        if not req.deadline_ns:
+            return None
+        now_ns = time.perf_counter_ns()
+        pred_ns = int(self.service.predict_s(req.op, req.nbytes) * 1e9)
+        if now_ns + pred_ns <= req.deadline_ns:
+            return None
+        with self._slock:
+            self.stats.shed += 1
+            lane = self.stats.lane_shed
+            lane[req.priority] = lane.get(req.priority, 0) + 1
+        late_ms = (now_ns + pred_ns - req.deadline_ns) / 1e6
+        return DeadlineExceeded(
+            f"shed op={req.op!r} lane={req.priority}: predicted completion "
+            f"{late_ms:.2f} ms past deadline")
+
+    def _note_late(self, req: Request) -> None:
+        """Count a completion that landed past its deadline (ran anyway)."""
+        if req.deadline_ns and time.perf_counter_ns() > req.deadline_ns:
+            with self._slock:
+                self.stats.deadline_miss += 1
+
+    def _maybe_shed(self, req: Request) -> bool:
+        """Shed a request the service model predicts past its deadline.
+
+        Called at pop time (batch formation), where queueing delay has
+        already consumed part of the budget.  A shed is never silent: the
+        lease is released, ``stats.shed`` counted, and the submitter gets
+        an immediate :class:`DeadlineExceeded` completion instead of a
+        batch slot."""
+        err = self._shed_verdict(req)
+        if err is None:
+            return False
+        req._release_lease()
+        self._complete(req, err)
+        return True
+
     # -- server loop -----------------------------------------------------------
     def _serve_loop(self) -> None:
         while self._running:
@@ -270,8 +440,15 @@ class RequestDispatcher:
                 continue
             if req is None:
                 break
+            if self._maybe_shed(req):
+                continue
             if req.mode == ExecutionMode.PIPELINED:
                 t0 = _trace.now() if _trace.TRACE.enabled else 0
+
+                def same_lane(r, _op=req.op, _prio=req.priority):
+                    return (r.op == _op and r.priority == _prio
+                            and r.mode == ExecutionMode.PIPELINED)
+
                 batch = [req]
                 deadline = time.perf_counter() + self._max_wait
                 while len(batch) < self.policy.max_batch:
@@ -279,14 +456,18 @@ class RequestDispatcher:
                     if remain <= 0:
                         break
                     try:
-                        nxt = self._q.get(timeout=remain)
+                        # lane-ordered batch fill: only pop while the queue
+                        # front matches this batch's (op, lane); a more
+                        # urgent arrival closes the window instead of being
+                        # reordered behind it (it stays at the front for
+                        # the next iteration)
+                        nxt = self._q.get(timeout=remain, match=same_lane)
                     except queue.Empty:
                         break
                     if nxt is None:
                         self._running = False
                         break
-                    if nxt.op != req.op or nxt.mode != ExecutionMode.PIPELINED:
-                        self._execute([nxt])
+                    if self._maybe_shed(nxt):
                         continue
                     batch.append(nxt)
                 if t0:      # the batch-formation window wait, per batch
@@ -336,8 +517,9 @@ class RequestDispatcher:
             rows.append(dst)
         get_engine().run_sg(sg, injection=self.policy.injection_enabled(),
                             tag="gather")
-        self.stats.gathers += 1
-        self.stats.gathered_requests += len(batch)
+        with self._slock:
+            self.stats.gathers += 1
+            self.stats.gathered_requests += len(batch)
         for r in batch:
             r._release_lease()           # released right after the gather
         if t0:
@@ -357,9 +539,12 @@ class RequestDispatcher:
         if not batch:
             return
         op = batch[0].op
-        self.stats.batches += 1
-        self.stats.batched_requests += len(batch)
-        self.stats.mean_batch = self.stats.batched_requests / self.stats.batches
+        with self._slock:
+            self.stats.batches += 1
+            self.stats.batched_requests += len(batch)
+            self.stats.mean_batch = (self.stats.batched_requests
+                                     / self.stats.batches)
+        t_exec = time.perf_counter()
         sfn = self._slab_handlers.get(op)
         bfn = self._batch_handlers.get(op)
         leased = any(r.lease is not None for r in batch)
@@ -408,6 +593,17 @@ class RequestDispatcher:
             if t0:      # batch compute: gather (nested sub-span) + handler
                 _trace.emit(_trace.HANDLER, t0, rid=batch[0].rid,
                             arg=len(batch))
+            # feed the admission predictor with each request's share of
+            # the batch wall time, and count completions that nonetheless
+            # landed past their deadline (miss ≠ shed: the work ran)
+            share_s = (time.perf_counter() - t_exec) / len(batch)
+            self.service.observe(op, share_s)
+            now_ns = time.perf_counter_ns()
+            late = sum(1 for r in batch
+                       if r.deadline_ns and now_ns > r.deadline_ns)
+            if late:
+                with self._slock:
+                    self.stats.deadline_miss += late
             for r, out in zip(batch, results):
                 # a query-path result computed from a still-leased view (or
                 # the recyclable slab) must not alias memory about to be
@@ -441,8 +637,10 @@ class RequestDispatcher:
 
     def close(self) -> None:
         self._running = False
-        self._q.put(None)
-        self._worker.join(timeout=5)
+        for _ in self._workers:
+            self._q.put(None)            # one stop sentinel per worker
+        for w in self._workers:
+            w.join(timeout=5)
 
     def __enter__(self):
         return self

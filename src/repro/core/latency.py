@@ -47,6 +47,42 @@ class LatencyModel:
         return int(np.clip(need, 2, max_depth))
 
 
+class ServiceTimeModel:
+    """Online service-time predictor for SLO admission (load shedding).
+
+    Layers a per-op EWMA of *observed* handler service time over the
+    structural transfer model: ``predict_s(op, nbytes)`` returns the max
+    of the transfer-latency prediction and the op's observed EWMA, so the
+    dispatcher can ask "will this request make its deadline if I run it
+    now?" before spending a batch slot on it.  Before the first
+    observation the transfer model alone answers (microseconds — the
+    model never sheds a request it knows nothing about), and every
+    completed batch tightens the estimate (`observe` with the per-request
+    share of the batch's wall time).
+    """
+
+    def __init__(self, latency: Optional[LatencyModel] = None,
+                 ewma: float = 0.2):
+        self.latency = latency or LatencyModel()
+        self.ewma = ewma
+        self._per_op: dict = {}
+
+    def observe(self, op: str, seconds: float) -> None:
+        """Feed one request's observed service time (batch share)."""
+        prev = self._per_op.get(op)
+        self._per_op[op] = (seconds if prev is None
+                            else (1 - self.ewma) * prev + self.ewma * seconds)
+
+    def predict_s(self, op: str, nbytes: int = 0) -> float:
+        """Predicted service seconds for one request of ``op``."""
+        floor = self.latency.predict_us(nbytes) * 1e-6
+        return max(floor, self._per_op.get(op, 0.0))
+
+    def snapshot(self) -> dict:
+        """Per-op EWMA milliseconds (introspection/metrics)."""
+        return {f"{op}_ms": s * 1e3 for op, s in sorted(self._per_op.items())}
+
+
 def calibrate(transfer_fn: Callable[[np.ndarray], None],
               sizes_bytes: Sequence[int] = (1 << 16, 1 << 18, 1 << 20,
                                             1 << 22, 1 << 23),

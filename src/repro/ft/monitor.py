@@ -75,6 +75,9 @@ class StepTimer:
     def p95(self) -> float:
         return float(np.percentile(list(self.times), 95)) if self.times else 0.0
 
+    def p99(self) -> float:
+        return float(np.percentile(list(self.times), 99)) if self.times else 0.0
+
 
 class StragglerMonitor:
     """Flags slow steps/hosts; pluggable mitigation callback.
@@ -110,6 +113,75 @@ class StragglerMonitor:
         else:
             self.consecutive_slow = 0
         return is_slow
+
+
+class SLOMonitor:
+    """Live SLO watchdog over the unified metrics plane.
+
+    Consumes any object with a ``snapshot() -> flat dict`` (in practice a
+    :class:`~repro.obs.metrics.MetricsRegistry`, duck-typed to keep this
+    module free of an ``obs`` import cycle) and evaluates declarative
+    upper-bound rules against the *live* counters — the piece that turns
+    the serving stack's SLO metrics (per-lane p95/p99, shed and miss
+    counts) into violations a runner can act on, the way
+    :class:`StragglerMonitor` acts on step times.
+
+    Two rule kinds:
+
+    - ``"max"``  — the metric's current level must stay ≤ bound
+      (e.g. ``slo.p95_ms`` within the deadline);
+    - ``"rate"`` — the metric's increase *since the last check* must stay
+      ≤ bound (e.g. ``dispatcher.shed`` growing at most N per interval —
+      lifetime counters become per-interval readings, like
+      ``MetricsRegistry.delta``).
+
+    ``check()`` returns the new violations (also appended to
+    ``violations`` and reported through ``on_violation``).
+    """
+
+    def __init__(self, metrics, rules: Optional[dict] = None,
+                 on_violation: Optional[Callable[[dict], None]] = None):
+        self.metrics = metrics
+        self.rules: dict = dict(rules or {})
+        self.on_violation = on_violation
+        self.checks = 0
+        self.violations: list[dict] = []
+        self._prev: dict = {}
+
+    def add_rule(self, key: str, bound: float, kind: str = "max") -> None:
+        """Bound one flat metric key (``kind``: ``"max"`` or ``"rate"``)."""
+        if kind not in ("max", "rate"):
+            raise ValueError(f"unknown SLO rule kind {kind!r}")
+        self.rules[key] = (kind, float(bound))
+
+    def check(self) -> list[dict]:
+        """Evaluate every rule against a fresh snapshot; returns the new
+        violations (empty = all SLOs held this interval)."""
+        snap = self.metrics.snapshot()
+        self.checks += 1
+        new = []
+        for key, rule in self.rules.items():
+            kind, bound = rule if isinstance(rule, tuple) else ("max", rule)
+            cur = snap.get(key)
+            if isinstance(cur, bool) or not isinstance(cur, (int, float)):
+                continue
+            prev = self._prev.get(key)
+            value = (cur - prev if kind == "rate"
+                     and isinstance(prev, (int, float)) else cur)
+            if value > bound:
+                new.append({"key": key, "kind": kind, "value": float(value),
+                            "bound": bound, "check": self.checks})
+        self._prev = snap
+        self.violations.extend(new)
+        if self.on_violation is not None:
+            for v in new:
+                self.on_violation(v)
+        return new
+
+    def snapshot(self) -> dict:
+        """Watchdog counters for the metrics plane itself."""
+        return {"checks": self.checks, "rules": len(self.rules),
+                "violations": len(self.violations)}
 
 
 class RestartManager:

@@ -23,6 +23,8 @@ The paper's runtime, made an actual inter-process transport (see
 from repro.ipc.shm import SeqLock, SharedMemoryArena, ShmMutex, attach_retry
 from repro.ipc.ring import ChannelClosed, Ring, RingSpec, SlotReader, SlotWriter
 from repro.ipc.channel import (
+    DEADLINE_KEY,
+    PRIO_KEY,
     ChannelStats,
     ControlChannel,
     DataChannel,
@@ -45,7 +47,8 @@ from repro.ipc.worker import (
 )
 
 __all__ = [
-    "BulkHeap", "ChannelClosed", "ChannelStats", "Connection",
+    "BulkHeap", "ChannelClosed", "ChannelStats", "Connection", "DEADLINE_KEY",
+    "PRIO_KEY",
     "ControlChannel", "DataChannel", "DispatcherServer", "HeapExhausted",
     "HeapSpec", "Listener", "ProducerHandle",
     "Reactor", "RecvLease", "RemoteDispatcherClient", "Ring", "RingSpec",

@@ -131,6 +131,17 @@ _DESCR_CACHE_MAX = 64
 # the header dict reaches the application)
 _HX_KEY = "__rocket_hx__"
 
+# SLO wire meta: reserved header keys carrying a request's priority class
+# and absolute deadline.  Both values are plain ints, so they ride the
+# META_BINARY tag codec (``_TAG_INT``) — adding a lane or a deadline to a
+# request never demotes its header to the pickle fallback.  The serving
+# fabric strips them before the header reaches application handlers.
+#: priority lane (0 = highest; requests without the key default to lane 0)
+PRIO_KEY = "__rocket_prio__"
+#: absolute deadline in ``time.perf_counter_ns()`` ticks (CLOCK_MONOTONIC
+#: on Linux — the same cross-process timebase the tracer uses; 0 = none)
+DEADLINE_KEY = "__rocket_dl__"
+
 # ---------------------------------------------------------------------------
 # wire meta formats (first byte of the slot meta region)
 # ---------------------------------------------------------------------------

@@ -131,6 +131,10 @@ class Listener:
             transport = ShmTransport.create(
                 f"{self.name}.c{cid}-{record.get('pid', 0)}",
                 self.spec, policy=self.policy, latency=self.latency)
+            # accept-time registration metadata (e.g. a client's lane
+            # hint) rides the transport to on_accept, where the serving
+            # fabric partitions clients across its reactor shards
+            transport.accept_meta = record.get("meta") or {}
             reply = {"name": transport.name, "client_id": cid}
         _write_mailbox(self._arena, _W_REP_LOCK, _REP_OFF, reply)
         if transport is not None:
@@ -178,12 +182,16 @@ class Listener:
 
 def connect(listener_name: str, policy: Optional[OffloadPolicy] = None,
             latency: Optional[LatencyModel] = None,
-            timeout_s: float = 30.0) -> ShmTransport:
+            timeout_s: float = 30.0,
+            meta: Optional[dict] = None) -> ShmTransport:
     """Client side: register with a listener, get a dedicated transport.
 
     Serializes with other connecting clients through the registration mutex,
     posts a request, waits for the server's ACK with short passive waits, and
-    attaches to the transport the server created for us.
+    attaches to the transport the server created for us.  ``meta`` is an
+    optional picklable registration dict delivered to the server's accept
+    path (``transport.accept_meta``) — e.g. ``{"lane": 0}`` to hint the
+    client's SLO lane at accept time.
     """
     deadline = time.perf_counter() + timeout_s
 
@@ -193,7 +201,8 @@ def connect(listener_name: str, policy: Optional[OffloadPolicy] = None,
         if int(words[_W_ALIVE]) == 0:
             raise ConnectionError(f"listener {listener_name!r} is shut down")
         # under the mutex the mailbox is ours; post and await the answer
-        _write_mailbox(arena, _W_REQ_LOCK, _REQ_OFF, {"pid": os.getpid()})
+        _write_mailbox(arena, _W_REQ_LOCK, _REQ_OFF,
+                       {"pid": os.getpid(), "meta": meta})
         ticket = int(words[_W_REQ]) + 1
         words[_W_REQ] = ticket
         while int(words[_W_ACK]) < ticket:

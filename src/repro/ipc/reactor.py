@@ -19,6 +19,14 @@ quantum and the admission cap) — a client's coalesced frame of K
 sub-messages costs one ring poll and one ``on_messages`` handoff into
 batch formation, not K callback iterations.
 
+**Lane-ordered sweep** (SLO serving): each connection remembers the most
+urgent priority class its last drain saw (the wire's reserved
+:data:`~repro.ipc.channel.PRIO_KEY` header), and every sweep visits
+connections sorted ``(lane, cid)`` — a priority-0 client's ring is
+drained before best-effort lanes under the same per-connection quantum,
+so lane ordering holds end to end (wire → drain → dispatcher heap)
+without starving anyone: the quantum and admission caps are unchanged.
+
 **Zero-copy drain** (default, ``policy.zero_copy_serving``): requests are
 received as :class:`~repro.ipc.channel.RecvLease` views into the shared
 slot — no receive-side staging copy — and handed to ``on_message`` still
@@ -64,7 +72,7 @@ import numpy as np
 
 from repro.core.copyengine import SGList, get_engine
 from repro.core.policy import OffloadPolicy
-from repro.ipc.channel import RecvLease
+from repro.ipc.channel import PRIO_KEY, RecvLease
 from repro.ipc.ring import ChannelClosed
 from repro.ipc.transport import ShmTransport
 from repro.obs import trace as _trace
@@ -79,6 +87,8 @@ class Connection:
     replied: int = 0           # replies sent back to this client
     inflight: int = 0          # dispatched, reply not yet sent (admission cap)
     dead: bool = False         # reply path failed: reap at the next sweep
+    lane: int = 0              # SLO lane: last priority class seen on this
+                               # client's wire (sweep visits low lanes first)
     _lock: threading.Lock = field(default_factory=threading.Lock, repr=False)
 
     def begin(self) -> None:
@@ -253,6 +263,12 @@ class Reactor:
                 else:                   # copy-out mode: already released
                     leases.append(RecvLease(item[0], item[1], None))
                 conn.begin()
+            # lane tracking: remember the most urgent priority class this
+            # drain saw, so the next sweep visits this client in lane order
+            prios = [p for p in ((lease.header or {}).get(PRIO_KEY, 0)
+                                 for lease in leases) if isinstance(p, int)]
+            if prios:
+                conn.lane = min(prios)
             if self.on_messages is not None:
                 try:
                     self.on_messages(conn, leases)
@@ -280,10 +296,15 @@ class Reactor:
         return drained
 
     def poll_once(self) -> int:
-        """One fair sweep over every connection; returns messages drained."""
+        """One fair sweep over every connection, in lane order (each
+        client's last-seen priority class, then client id — a lane-0
+        client is drained before best-effort lanes within every sweep,
+        while the per-connection quantum still bounds any one client's
+        share); returns messages drained."""
         self.stats.sweeps += 1
         total = 0
-        for conn in self.connections():
+        for conn in sorted(self.connections(),
+                           key=lambda c: (c.lane, c.cid)):
             n = self._drain(conn)
             total += n
             # reap only after an *empty* drain: a closing peer's in-flight

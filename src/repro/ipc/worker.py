@@ -37,9 +37,12 @@ from typing import Optional
 
 import numpy as np
 
-from repro.core.dispatcher import QueryHandler, Request, RequestDispatcher
+from repro.core.dispatcher import (DeadlineExceeded, QueryHandler, Request,
+                                   RequestDispatcher)
 from repro.core.latency import LatencyModel
 from repro.core.policy import ExecutionMode, OffloadPolicy
+from repro.ft.monitor import SLOMonitor
+from repro.ipc.channel import DEADLINE_KEY, PRIO_KEY
 from repro.ipc.ring import ChannelClosed
 from repro.ipc.transport import ShmTransport, TransportSpec
 from repro.obs import trace as _trace
@@ -254,17 +257,31 @@ class DispatcherServer:
 
 
 class ServingFabric:
-    """Multi-client serving: listener + reactor + one shared dispatcher.
+    """Multi-client serving: listener + reactor shards + shared dispatcher.
 
     The paper's server generalized from one queue pair to N (§IV-C at
     fleet scale): a :class:`~repro.ipc.listener.Listener` accepts client
-    registrations and mints each one a dedicated transport; a
-    :class:`~repro.ipc.reactor.Reactor` multiplexes all of them in one
-    thread with round-robin fairness; and every drained request is fed to
-    *one* :class:`RequestDispatcher`, so pipelined requests arriving from
+    registrations and mints each one a dedicated transport; ``reactors``
+    :class:`~repro.ipc.reactor.Reactor` shards multiplex them (clients
+    partitioned round-robin at accept time — one drain loop stops being
+    the serving ceiling) with round-robin fairness inside each shard; and
+    every drained request is fed to *one* shared
+    :class:`RequestDispatcher`, so pipelined requests arriving from
     **different processes** inside the batching window are packed into a
     single handler call (cross-client batch formation) and the results are
     demultiplexed back to the right transports by completion callbacks.
+
+    **SLO serving**: requests carrying the reserved priority/deadline
+    header keys (:data:`~repro.ipc.channel.PRIO_KEY` /
+    :data:`~repro.ipc.channel.DEADLINE_KEY` — set by
+    :meth:`RemoteDispatcherClient.request`) are drained, batched, and
+    executed in lane order; the dispatcher sheds requests its service
+    model predicts past deadline (counted + immediate error reply), the
+    per-lane :class:`~repro.obs.metrics.SLOTracker` records latency and
+    misses, and a :class:`~repro.ft.monitor.SLOMonitor` watchdog
+    evaluates rule bounds over the live metrics plane
+    (``fabric.monitor.check()``).  ``default_deadline_ms`` applies a
+    server-side deadline (from arrival) to requests that carry none.
 
     The large-message datapath is transparent here: a client request (or a
     server reply) at/over ``policy.heap_threshold_bytes`` rides the
@@ -286,7 +303,9 @@ class ServingFabric:
                  max_drain_per_sweep: int = 8,
                  max_inflight: int = 16,
                  reply_timeout_s: float = 5.0,
-                 own_dispatcher: bool = False):
+                 own_dispatcher: bool = False,
+                 reactors: int = 1,
+                 default_deadline_ms: Optional[float] = None):
         from repro.ipc.listener import Listener
         from repro.ipc.reactor import Reactor
 
@@ -294,29 +313,76 @@ class ServingFabric:
         self.policy = policy or dispatcher.policy
         self.reply_timeout_s = reply_timeout_s
         self._own_dispatcher = own_dispatcher
-        self.reactor = Reactor(self.policy, on_messages=self._on_messages,
-                               max_drain_per_sweep=max_drain_per_sweep,
-                               max_inflight=max_inflight)
+        # server-side deadline applied (from arrival time) to requests that
+        # carry none of their own — 0 disables
+        self.default_deadline_ns = int((default_deadline_ms or 0) * 1e6)
+        # sharded reactors: N independent drain loops, clients partitioned
+        # round-robin at accept time so one sweep thread stops being the
+        # serving ceiling; shard 0 doubles as the legacy ``.reactor`` view
+        self.reactors = [
+            Reactor(self.policy, on_messages=self._on_messages,
+                    max_drain_per_sweep=max_drain_per_sweep,
+                    max_inflight=max_inflight)
+            for _ in range(max(1, reactors))]
+        self.reactor = self.reactors[0]
+        self._accept_lock = threading.Lock()
+        self._next_shard = 0
         self.listener = Listener(name, spec, self.policy, latency,
                                  max_clients=max_clients,
-                                 on_accept=self.reactor.add)
+                                 on_accept=self._accept)
         # unified metrics plane: every stats surface in the fabric behind
         # one flat snapshot, plus the per-request SLO monitor (previously
         # orphaned ft/monitor.py + core/latency.py, now fed by replies)
         self.slo = SLOTracker(latency or getattr(dispatcher, "latency", None))
         self.metrics = MetricsRegistry()
-        self.metrics.register("reactor", lambda: self.reactor.stats)
+        self.metrics.register("reactor", self._reactor_stats)
         self.metrics.register("dispatcher", lambda: self.dispatcher.stats)
         self.metrics.register("slo", self.slo)
         self.metrics.register(
             "listener", lambda: {"accepted": self.listener.accepted,
-                                 "clients": len(self.reactor)})
+                                 "clients": sum(len(r)
+                                                for r in self.reactors)})
+        # live SLO watchdog over the metrics plane (ft/monitor.SLOMonitor):
+        # rules read the same flat keys metrics.snapshot() exposes
+        self.monitor = SLOMonitor(self.metrics)
+        if self.default_deadline_ns:
+            self.monitor.add_rule("slo.p95_ms",
+                                  self.default_deadline_ns / 1e6)
+        self.metrics.register("slo_monitor", self.monitor)
         self._closed = False
 
     @property
     def name(self) -> str:
         """The rendezvous name clients connect to."""
         return self.listener.name
+
+    # -- sharding ---------------------------------------------------------------
+    def _accept(self, transport: ShmTransport) -> None:
+        """Accept-time partitioning: each new client lands on one reactor
+        shard (round-robin — balanced under churn without rebalancing
+        live connections, which would break the per-ring SPSC contract),
+        its lane seeded from the registration hint so the very first
+        sweep already drains it in lane order."""
+        with self._accept_lock:
+            shard = self._next_shard
+            self._next_shard = (self._next_shard + 1) % len(self.reactors)
+        conn = self.reactors[shard].add(transport)
+        lane = (getattr(transport, "accept_meta", None) or {}).get("lane", 0)
+        if isinstance(lane, int) and not isinstance(lane, bool):
+            conn.lane = lane
+
+    def _all_connections(self) -> list:
+        """Live connections across every reactor shard."""
+        return [c for r in self.reactors for c in r.connections()]
+
+    def _reactor_stats(self) -> dict:
+        """Reactor counters summed across shards (+ the shard count)."""
+        agg: dict = {}
+        for r in self.reactors:
+            for k, v in vars(r.stats).items():
+                agg[k] = agg.get(k, 0) + v
+        agg["shards"] = len(self.reactors)
+        return agg
 
     def _prepare(self, conn, lease) -> Optional[dict]:
         """Reactor thread: turn one drained request lease into a
@@ -336,6 +402,17 @@ class ServingFabric:
             return None
         job_id = header.get("job_id", -1)
         op, mode = header.get("op"), header.get("mode", "sync")
+        # SLO wire meta: strip the reserved lane/deadline keys before the
+        # header reaches any handler; a request without its own deadline
+        # inherits the fabric default (clocked from arrival)
+        priority = header.pop(PRIO_KEY, 0)
+        if not isinstance(priority, int) or isinstance(priority, bool):
+            priority = 0
+        deadline_ns = header.pop(DEADLINE_KEY, 0)
+        if not isinstance(deadline_ns, int) or isinstance(deadline_ns, bool):
+            deadline_ns = 0
+        if not deadline_ns and self.default_deadline_ns:
+            deadline_ns = time.perf_counter_ns() + self.default_deadline_ns
         tree = lease.tree
         rid = lease.rid
         t_arr = time.perf_counter()
@@ -353,8 +430,15 @@ class ServingFabric:
                     conn.reply({"result": np.asarray(out)}, hdr,
                                timeout_s=self.reply_timeout_s)
             finally:
-                # SLO clock: reactor delivery -> reply sent (service time)
-                self.slo.observe(time.perf_counter() - t_arr, req_nbytes)
+                # SLO clock: reactor delivery -> reply sent (service time);
+                # a reply landing past the request's deadline is a counted
+                # per-lane miss (distinct from a shed: the work ran, so a
+                # shed error reply is never double-counted as a miss)
+                miss = (not isinstance(out, DeadlineExceeded)
+                        and bool(deadline_ns)
+                        and time.perf_counter_ns() > deadline_ns)
+                self.slo.observe(time.perf_counter() - t_arr, req_nbytes,
+                                 lane=priority, miss=miss)
 
         try:
             data = tree["data"] if isinstance(tree, dict) else None
@@ -363,6 +447,7 @@ class ServingFabric:
                     "mode": ExecutionMode(mode),   # validated HERE, not
                     "on_complete": reply,          # mid-batch in submit_many
                     "rid": rid,
+                    "priority": priority, "deadline_ns": deadline_ns,
                     "lease": lease if lease.held else None}
         except Exception as e:
             # malformed request (missing data, bad mode string, ...): tell
@@ -386,24 +471,37 @@ class ServingFabric:
             self.dispatcher.submit_many(items)
 
     def start(self) -> "ServingFabric":
-        """Begin accepting and serving (both in daemon threads)."""
-        self.reactor.start()
+        """Begin accepting and serving (all in daemon threads)."""
+        for r in self.reactors:
+            r.start()
         self.listener.start()
         return self
 
     def stats(self) -> dict:
-        """Fabric-level counters: listener, reactor, per-client (including
-        each connection's full transport stats — channel, rings, heap,
-        governor), dispatcher, and the request SLO snapshot.  The
-        ``metrics`` key is the same data as one flat dot-keyed dict (the
-        :class:`~repro.obs.metrics.MetricsRegistry` view)."""
+        """Fabric-level counters: listener, reactor (summed over shards),
+        per-client (including each connection's full transport stats —
+        channel, rings, heap, governor), dispatcher, and the request SLO
+        snapshot.  The ``metrics`` key is the same data as one flat
+        dot-keyed dict (the :class:`~repro.obs.metrics.MetricsRegistry`
+        view).  With one shard client keys are the bare cids (the
+        pre-sharding shape); with several they are ``"s<shard>c<cid>"``
+        (cids are only unique within a shard)."""
+        if len(self.reactors) == 1:
+            clients = {c.cid: {"received": c.received, "replied": c.replied,
+                               "inflight": c.inflight, "lane": c.lane,
+                               "transport": c.transport.stats()}
+                       for c in self.reactor.connections()}
+        else:
+            clients = {f"s{si}c{c.cid}": {
+                           "received": c.received, "replied": c.replied,
+                           "inflight": c.inflight, "lane": c.lane,
+                           "transport": c.transport.stats()}
+                       for si, r in enumerate(self.reactors)
+                       for c in r.connections()}
         return {
             "accepted": self.listener.accepted,
-            "reactor": vars(self.reactor.stats),
-            "clients": {c.cid: {"received": c.received, "replied": c.replied,
-                                "inflight": c.inflight,
-                                "transport": c.transport.stats()}
-                        for c in self.reactor.connections()},
+            "reactor": self._reactor_stats(),
+            "clients": clients,
             "dispatcher": vars(self.dispatcher.stats),
             "slo": self.slo.snapshot(),
             "metrics": self.metrics.snapshot(),
@@ -415,9 +513,10 @@ class ServingFabric:
             return
         self._closed = True
         self.listener.close()               # no new clients
-        for conn in self.reactor.connections():
+        for conn in self._all_connections():
             conn.transport.announce_close()  # unblock client-side waits
-        self.reactor.close()                # stop sweeps, close transports
+        for r in self.reactors:
+            r.close()                       # stop sweeps, close transports
         if self._own_dispatcher:
             self.dispatcher.close()
 
@@ -440,6 +539,7 @@ class RemoteDispatcherClient:
         self.latency = latency or transport.latency
         self.queries = QueryHandler(self.latency, self.policy)
         self._own_transport = own_transport
+        self.lane = 0                      # default priority for request()
         self._ids = iter(range(1, 1 << 62))
         self._rids: dict[int, int] = {}    # job_id -> trace request id
         self._lock = threading.Lock()
@@ -450,14 +550,21 @@ class RemoteDispatcherClient:
     def connect(cls, listener_name: str,
                 policy: Optional[OffloadPolicy] = None,
                 latency: Optional[LatencyModel] = None,
-                timeout_s: float = 30.0) -> "RemoteDispatcherClient":
+                timeout_s: float = 30.0,
+                lane: int = 0) -> "RemoteDispatcherClient":
         """Register with a :class:`ServingFabric` by rendezvous name and
-        return a ready client owning its dedicated transport."""
+        return a ready client owning its dedicated transport.  ``lane``
+        hints the client's priority class at accept time (the server
+        seeds its connection's drain lane before the first request) and
+        becomes the default ``priority`` for :meth:`request`."""
         from repro.ipc.listener import connect as fabric_connect
         transport = fabric_connect(listener_name, policy=policy,
-                                   latency=latency, timeout_s=timeout_s)
-        return cls(transport, policy=policy, latency=latency,
-                   own_transport=True)
+                                   latency=latency, timeout_s=timeout_s,
+                                   meta={"lane": lane} if lane else None)
+        client = cls(transport, policy=policy, latency=latency,
+                     own_transport=True)
+        client.lane = lane
+        return client
 
     def _ensure_receiver(self) -> None:
         with self._lock:
@@ -484,14 +591,30 @@ class RemoteDispatcherClient:
             self.queries.complete(header["job_id"], result)
 
     def request(self, op: str, data: np.ndarray,
-                mode: ExecutionMode | str | None = None):
+                mode: ExecutionMode | str | None = None,
+                priority: Optional[int] = None,
+                deadline_ms: Optional[float] = None):
         """Paper Listing 1: sync returns the result, async/pipelined a
-        job id for :meth:`query`."""
+        job id for :meth:`query`.
+
+        ``priority`` selects the request's SLO lane (0 = highest; default
+        is the client's ``lane``), ``deadline_ms`` a relative deadline
+        stamped as an absolute CLOCK_MONOTONIC wire deadline — both ride
+        the META_BINARY header (reserved int tags, no pickle).  A request
+        the server sheds or fails comes back as a ``RuntimeError`` whose
+        message starts with ``DeadlineExceeded`` from :meth:`query`.
+        """
         mode = ExecutionMode(mode) if mode is not None else self.policy.mode
         with self._lock:
             job_id = next(self._ids)
         data = np.asarray(data)
         header = {"job_id": job_id, "op": op, "mode": mode.value}
+        priority = self.lane if priority is None else int(priority)
+        if priority:
+            header[PRIO_KEY] = priority
+        if deadline_ms is not None:
+            header[DEADLINE_KEY] = (time.perf_counter_ns()
+                                    + int(deadline_ms * 1e6))
         rid = 0
         if _trace.TRACE.enabled:
             # mint the request id HERE — the whole lifecycle (wire, reactor,

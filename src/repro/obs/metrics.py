@@ -129,15 +129,36 @@ class SLOTracker:
                                           patience=patience)
         self.requests = 0
         self.bytes_in = 0
+        self.deadline_misses = 0
+        self._window = window
+        self._lanes: dict = {}       # priority -> per-lane timer + counters
         self._ratio_ewma = 0.0
 
-    def observe(self, seconds: float, nbytes: int = 0) -> None:
+    def _lane(self, priority: int) -> dict:
+        lane = self._lanes.get(priority)
+        if lane is None:
+            lane = self._lanes[priority] = {
+                "timer": StepTimer(window=self._window,
+                                   times=deque(maxlen=self._window)),
+                "requests": 0, "misses": 0}
+        return lane
+
+    def observe(self, seconds: float, nbytes: int = 0,
+                lane: int = 0, miss: bool = False) -> None:
         """Record one request's observed service time (and payload size,
-        which the latency model predicts from)."""
+        which the latency model predicts from).  ``lane`` is the request's
+        priority class; ``miss`` marks a reply that landed past its
+        deadline (counted globally and per lane)."""
         self.requests += 1
         self.bytes_in += int(nbytes)
         self.timer.record(seconds)
         self.straggler.record_step(seconds)
+        entry = self._lane(lane)
+        entry["timer"].record(seconds)
+        entry["requests"] += 1
+        if miss:
+            self.deadline_misses += 1
+            entry["misses"] += 1
         if self.model is not None and nbytes > 0:
             predicted_s = self.model.predict_us(nbytes) * 1e-6
             if predicted_s > 0:
@@ -146,13 +167,16 @@ class SLOTracker:
                                     0.9 * self._ratio_ewma + 0.1 * ratio)
 
     def snapshot(self) -> dict:
-        """Flat SLO counters: volume, p50/p95 ms, straggler events, and
-        the observed/predicted latency-model ratio (0 = no model/data)."""
-        return {
+        """Flat SLO counters: volume, p50/p95 ms, deadline misses,
+        straggler events, the observed/predicted latency-model ratio
+        (0 = no model/data), and a per-priority-lane breakdown
+        (flattened by the registry to ``slo.lane0.p99_ms``-style keys)."""
+        out = {
             "requests": self.requests,
             "mb_in": self.bytes_in / _MB,
             "p50_ms": self.timer.median() * 1e3,
             "p95_ms": self.timer.p95() * 1e3,
+            "deadline_misses": self.deadline_misses,
             "stragglers": len(self.straggler.events),
             "consecutive_slow": self.straggler.consecutive_slow,
             "model_ratio": self._ratio_ewma,
@@ -161,3 +185,14 @@ class SLOTracker:
             "model_alpha_us_per_mb": (self.model.alpha_us_per_mb
                                       if self.model else 0.0),
         }
+        for prio in sorted(self._lanes):
+            entry = self._lanes[prio]
+            timer = entry["timer"]
+            out[f"lane{prio}"] = {
+                "requests": entry["requests"],
+                "misses": entry["misses"],
+                "p50_ms": timer.median() * 1e3,
+                "p95_ms": timer.p95() * 1e3,
+                "p99_ms": timer.p99() * 1e3,
+            }
+        return out

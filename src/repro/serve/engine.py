@@ -81,9 +81,9 @@ class BatchedServer:
         return result
 
     # -- request-level API (dispatcher integration) ------------------------------
-    def make_dispatcher(self, latency: Optional[LatencyModel] = None
-                        ) -> RequestDispatcher:
-        d = RequestDispatcher(self.policy, latency)
+    def make_dispatcher(self, latency: Optional[LatencyModel] = None,
+                        workers: int = 1) -> RequestDispatcher:
+        d = RequestDispatcher(self.policy, latency, workers=workers)
 
         def single(data: np.ndarray) -> np.ndarray:
             self.stats["requests"] += 1
@@ -113,7 +113,9 @@ class BatchedServer:
                        data_slot_bytes: int = 2 << 20,
                        heap_extent_bytes: int = 1 << 20,
                        heap_extents: int = 32,
-                       max_clients: int = 64):
+                       max_clients: int = 64,
+                       reactors: int = 1,
+                       default_deadline_ms: Optional[float] = None):
         """Expose the dispatcher to any number of client *processes* over
         the multi-client shared-memory fabric.
 
@@ -129,18 +131,25 @@ class BatchedServer:
         connection's bulk heap (``heap_extents × heap_extent_bytes`` per
         direction; ``heap_extents=0`` disables it), so per-client shared
         memory stays small without capping the payload size.
+
+        SLO serving: ``reactors`` shards the drain loop (clients are
+        partitioned across shards at accept time; the dispatcher gets a
+        matching worker pool so shards execute concurrently), and
+        ``default_deadline_ms`` stamps a deadline on every request that
+        arrives without one, arming the fabric's SLO monitor.
         """
         from repro.ipc import ServingFabric
         from repro.ipc.transport import TransportSpec
 
-        dispatcher = self.make_dispatcher(latency)
+        dispatcher = self.make_dispatcher(latency, workers=max(1, reactors))
         fabric = ServingFabric(
             dispatcher, name=name,
             spec=TransportSpec(data_slot_bytes=data_slot_bytes,
                                heap_extent_bytes=heap_extent_bytes,
                                heap_extents=heap_extents),
             policy=self.policy, latency=latency, max_clients=max_clients,
-            own_dispatcher=True)
+            own_dispatcher=True, reactors=reactors,
+            default_deadline_ms=default_deadline_ms)
         fabric.metrics.register("server", lambda: self.stats)
         return fabric.start()
 

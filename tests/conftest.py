@@ -28,6 +28,24 @@ settings.register_profile(
 settings.load_profile("repro")
 
 
+def wait_until(pred, timeout_s: float = 10.0, interval_s: float = 0.002,
+               desc: str = "condition"):
+    """Poll ``pred`` until truthy or ``timeout_s`` elapses; returns the
+    truthy value.  The shared de-flake helper for the multi-process spawn
+    suites: one bounded, uniform poll loop instead of ad-hoc
+    ``time.sleep`` chains that either flake on slow CI or oversleep."""
+    import time
+    deadline = time.perf_counter() + timeout_s
+    while True:
+        value = pred()
+        if value:
+            return value
+        if time.perf_counter() > deadline:
+            raise TimeoutError(f"timed out after {timeout_s}s waiting "
+                               f"for {desc}")
+        time.sleep(interval_s)
+
+
 @pytest.fixture(scope="session")
 def rng_key():
     return jax.random.key(0)

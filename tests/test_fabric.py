@@ -12,6 +12,7 @@ import time
 
 import numpy as np
 import pytest
+from conftest import wait_until
 
 from repro.core.dispatcher import RequestDispatcher
 from repro.core.policy import OffloadPolicy
@@ -130,9 +131,7 @@ def test_listener_accept_and_refuse():
         t = threading.Thread(
             target=lambda: got.append(connect(lsn.name, policy=TIGHT)))
         t.start()
-        deadline = time.perf_counter() + 10
-        while not lsn.pending() and time.perf_counter() < deadline:
-            time.sleep(0.001)
+        wait_until(lsn.pending, 10, desc="pending registration")
         assert lsn.accept_once() is not None
         t.join(timeout=10)
         server_side, client_side = got
@@ -202,10 +201,8 @@ def test_client_churn_reaps_connections_and_arenas():
                             mode="sync")
             assert float(out[0]) == 2.0 * i
             c.close()
-            deadline = time.perf_counter() + 10
-            while len(fab.reactor) and time.perf_counter() < deadline:
-                time.sleep(0.005)
-            assert len(fab.reactor) == 0       # reaped, not leaked
+            wait_until(lambda: len(fab.reactor) == 0, 10,
+                       desc="connection reap")  # reaped, not leaked
         assert fab.listener.accepted == 3
         assert fab.reactor.stats.disconnects == 3
     for name in names:                         # arenas are unlinked
@@ -239,10 +236,7 @@ def test_reactor_reaps_leaked_heap_extents_of_dead_client():
         p.start()
         p.join(timeout=60)
         assert p.exitcode == 0
-        deadline = time.perf_counter() + 10
-        while len(fab.reactor) and time.perf_counter() < deadline:
-            time.sleep(0.005)
-        assert len(fab.reactor) == 0
+        wait_until(lambda: len(fab.reactor) == 0, 10, desc="crash reap")
         assert fab.reactor.stats.disconnects == 1
         assert fab.reactor.stats.heap_reaped == 4     # 3 extents -> class 4
         name = fab.listener.name
@@ -276,13 +270,118 @@ def test_fabric_large_requests_and_replies_ride_the_heap():
         assert fab.reactor.stats.zero_copy_recvs == 6
         # lease-based reclamation drained every extent back to FREE
         heap = conn.transport.heap
-        deadline = time.perf_counter() + 10
-        while (heap.free_extents(heap.rx_dir) < heap.spec.n_extents
-               and time.perf_counter() < deadline):
-            time.sleep(0.005)
-        assert heap.free_extents(heap.rx_dir) == heap.spec.n_extents
+        wait_until(lambda: (heap.free_extents(heap.rx_dir)
+                            == heap.spec.n_extents), 10,
+                   desc="rx extents drained to FREE")
         assert heap.free_extents(heap.tx_dir) == heap.spec.n_extents
         client.close()
+
+
+# ---------------------------------------------------------------------------
+# crash soak: clients die mid-datapath under load, sharded reactors reap
+# ---------------------------------------------------------------------------
+
+def _soak_victim_heap_entry(name: str, out_q) -> None:
+    """Victim A: dies mid-heap-fill — extents allocated (never published),
+    closed flag raised (the OS-level liveness signal), no teardown."""
+    import os
+    client = RemoteDispatcherClient.connect(name, policy=HEAPY, timeout_s=60)
+    heap = client.transport.heap
+    assert heap.try_alloc(2 * heap.spec.extent_bytes) is not None
+    out_q.put(client.transport.name)
+    out_q.close()
+    out_q.join_thread()                 # flush before dying: put() is async
+    client.transport.announce_close()
+    os._exit(0)
+
+
+def _soak_victim_frame_entry(name: str, out_q) -> None:
+    """Victim B: dies mid-coalesced-frame — pipelined sends parked in an
+    open (unpublished) frame, then the process vanishes."""
+    import os
+    client = RemoteDispatcherClient.connect(name, policy=TIGHT, timeout_s=60)
+    for i in range(3):
+        client.request("work", np.full((64,), i, np.float32),
+                       mode="pipelined")
+    out_q.put(client.transport.name)
+    out_q.close()
+    out_q.join_thread()                 # flush before dying: put() is async
+    client.transport.announce_close()
+    os._exit(0)
+
+
+@pytest.mark.slow
+def test_crash_soak_sharded_reactors_reap_survivors_hold_slo():
+    """Kill clients mid-heap-fill and mid-frame under sustained load on a
+    2-shard fabric: every victim is reaped on its shard (connections gone,
+    leaked extents reclaimed, shm segments unlinked) while the surviving
+    client's lane keeps meeting its deadline — zero sheds, zero misses,
+    zero errors."""
+    from multiprocessing import shared_memory
+
+    d = RequestDispatcher(HEAPY, max_batch_wait_s=0.005, workers=2)
+    d.register_handler("work", lambda x: x + 1,
+                       batch_fn=lambda xs: [x + 1 for x in xs])
+    with ServingFabric(d, spec=SMALL, policy=HEAPY, own_dispatcher=True,
+                       reactors=2).start() as fab:
+        survivor = RemoteDispatcherClient.connect(fab.name, policy=HEAPY,
+                                                  timeout_s=60, lane=0)
+        stop = threading.Event()
+        failures: list = []
+        served = [0]
+
+        def sustained_load():
+            x = np.ones((64,), np.float32)
+            while not stop.is_set():
+                try:
+                    out = survivor.request("work", x, mode="sync",
+                                           deadline_ms=5000.0)
+                    assert float(out[0]) == 2.0
+                    served[0] += 1
+                except Exception as e:          # noqa: BLE001 - recorded
+                    failures.append(e)
+                    return
+                time.sleep(0.001)
+
+        loader = threading.Thread(target=sustained_load)
+        loader.start()
+        ctx = mp.get_context("spawn")
+        out_q = ctx.Queue()
+        victims = []
+        for _ in range(2):                      # 2 rounds x 2 crash modes
+            for entry in (_soak_victim_heap_entry, _soak_victim_frame_entry):
+                p = ctx.Process(target=entry, args=(fab.name, out_q),
+                                daemon=True)
+                p.start()
+                victims.append(p)
+        victim_names = [out_q.get(timeout=120) for _ in victims]
+        for p in victims:
+            p.join(timeout=60)
+            assert p.exitcode == 0
+        # both shards reap their dead; only the survivor remains
+        wait_until(lambda: sum(len(r) for r in fab.reactors) == 1, 20,
+                   desc="victim connections reaped")
+        assert sum(r.stats.disconnects for r in fab.reactors) == 4
+        assert sum(r.stats.heap_reaped for r in fab.reactors) >= 2
+        stop.set()
+        loader.join(timeout=30)
+        assert not failures, failures
+        assert served[0] > 0
+        # the survivor's lane never shed or missed through the churn
+        assert fab.dispatcher.stats.shed == 0
+        snap = fab.slo.snapshot()
+        assert snap["deadline_misses"] == 0
+        assert snap["lane0"]["misses"] == 0
+        # survivor heap state words all back to FREE after sustained load
+        heap = survivor.transport.heap
+        assert heap.free_extents(heap.rx_dir) == heap.spec.n_extents
+        assert heap.free_extents(heap.tx_dir) == heap.spec.n_extents
+        survivor.close()
+    # no leaked shm: every victim arena AND its heap segment are unlinked
+    for nm in victim_names:
+        for seg in (nm, f"{nm}.h"):
+            with pytest.raises(FileNotFoundError):
+                shared_memory.SharedMemory(seg, create=False).close()
 
 
 # ---------------------------------------------------------------------------
@@ -308,6 +407,7 @@ def _batching_client_entry(name: str, marker: int) -> None:
     client.close()
 
 
+@pytest.mark.slow
 def test_cross_client_batching_byte_identical():
     gate = [0.0]
     seen_batches: list[set] = []
@@ -334,10 +434,8 @@ def test_cross_client_batching_byte_identical():
                              args=(fab.name, m)) for m in (1, 2)]
         for p in procs:
             p.start()
-        deadline = time.perf_counter() + 120
-        while fab.listener.accepted < 2:
-            assert time.perf_counter() < deadline
-            time.sleep(0.01)
+        wait_until(lambda: fab.listener.accepted >= 2, 120,
+                   desc="both clients accepted")
         gate[0] = 1.0                          # release both clients at once
         for p in procs:
             p.join(timeout=120)

@@ -217,6 +217,63 @@ def test_collective_stats_trip_scaling():
     assert stats.count_by_op["all-reduce"] == 12
 
 
+# ---------------------------------------------------------------------------
+# benchmark gate checker (benchmarks.run --check)
+# ---------------------------------------------------------------------------
+
+def _snapshot(tmp_path, rows):
+    path = str(tmp_path / "bench.json")
+    with open(path, "w") as f:
+        json.dump({"schema": 1, "rows": [
+            {"bench": name, "us_per_call": 1.0, "derived": derived}
+            for name, derived in rows]}, f)
+    return path
+
+
+def test_bench_check_passes_within_limits(tmp_path):
+    from benchmarks import run as bench_run
+    path = _snapshot(tmp_path, [("fig2/a", "1GB/s;copies/req=1.00"),
+                                ("fig15/acct", "n=10;shed_drift=0")])
+    rows = ["fig2/a,5.0,1GB/s;copies/req=1.00",
+            "fig15/acct,0.0,n=12;shed_drift=0"]
+    assert bench_run._check(path, rows) == []
+
+
+def test_bench_check_flags_regression(tmp_path):
+    from benchmarks import run as bench_run
+    path = _snapshot(tmp_path, [("fig2/a", "copies/req=1.00")])
+    problems = bench_run._check(path, ["fig2/a,5.0,copies/req=3.00"])
+    assert len(problems) == 1 and "copies/req=3" in problems[0]
+
+
+def test_bench_check_disappeared_metric_is_not_vacuous(tmp_path):
+    """A produced row that stops emitting a gated token must fail loudly:
+    the gate turning itself off silently is the bug this guards against."""
+    from benchmarks import run as bench_run
+    path = _snapshot(tmp_path, [("fig2/a", "copies/req=1.00"),
+                                ("fig15/acct", "shed_drift=0")])
+    rows = ["fig2/a,5.0,812MB/s",              # token gone from derived
+            "fig15/acct,0.0,shed_drift=0"]     # keeps compared > 0
+    problems = bench_run._check(path, rows)
+    assert len(problems) == 1
+    assert "disappeared" in problems[0] and "copies/req" in problems[0]
+
+
+def test_bench_check_skips_rows_not_produced(tmp_path):
+    """--only subsets simply skip absent baseline rows — no failure."""
+    from benchmarks import run as bench_run
+    path = _snapshot(tmp_path, [("fig2/a", "copies/req=1.00"),
+                                ("fig6/b", "pickle/send=0.00")])
+    assert bench_run._check(path, ["fig2/a,5.0,copies/req=1.00"]) == []
+
+
+def test_bench_check_refuses_zero_overlap(tmp_path):
+    from benchmarks import run as bench_run
+    path = _snapshot(tmp_path, [("fig2/a", "copies/req=1.00")])
+    problems = bench_run._check(path, ["fig9/new,1.0,no counted tokens"])
+    assert len(problems) == 1 and "vacuous" in problems[0]
+
+
 def test_roofline_dominant_term():
     rl = hlo_mod.Roofline(compute_s=1.0, memory_s=2.0, collective_s=0.5,
                           flops_per_device=1, bytes_per_device=1,

@@ -26,6 +26,8 @@ from repro.ipc import (
     start_producer,
 )
 
+from conftest import wait_until
+
 TIGHT = OffloadPolicy(offload_threshold_bytes=1, poll_interval_us=50.0)
 SMALL = TransportSpec(data_slots=3, data_slot_bytes=1 << 20,
                       ctrl_slots=4, ctrl_slot_bytes=4 << 10)
@@ -401,10 +403,12 @@ def test_spawn_producer_seek_after_eof_restarts_stream():
         assert header.get("eof")
         gen = handle.seek(0)
         expect = next(make_counting_source(seed=2))
+        deadline = time.perf_counter() + 60
         while True:
             batch, header = handle.recv_batch(timeout_s=60)
             if header.get("gen") == gen and header.get("step") == 0:
                 break
+            assert time.perf_counter() < deadline
         np.testing.assert_array_equal(batch["tokens"], expect["tokens"])
     finally:
         handle.stop()
@@ -416,7 +420,9 @@ def test_spawn_consumer_close_unblocks_producer():
                             policy=TIGHT, n_batches=None)
     try:
         handle.recv_batch(timeout_s=60)        # producer is alive + streaming
-        time.sleep(0.3)                        # let it fill the ring
+        rx = handle.transport.data.rx
+        wait_until(lambda: rx.produced - rx.consumed >= rx.spec.n_slots,
+                   10, desc="producer to fill the data ring")
     finally:
         t0 = time.perf_counter()
         handle.stop(timeout_s=15)

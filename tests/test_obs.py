@@ -24,6 +24,8 @@ from repro.obs import hist as obs_hist
 from repro.obs import metrics as obs_metrics
 from repro.obs import trace as obs_trace
 
+from conftest import wait_until
+
 TIGHT = OffloadPolicy(offload_threshold_bytes=1, poll_interval_us=50.0)
 SMALL = TransportSpec(data_slots=4, data_slot_bytes=1 << 20,
                       ctrl_slots=4, ctrl_slot_bytes=4 << 10)
@@ -272,10 +274,9 @@ def test_fabric_exposes_unified_metrics_and_slo():
         client = RemoteDispatcherClient.connect(fab.name, policy=TIGHT)
         for _ in range(3):
             client.request("double", np.ones(16, np.float32), mode="sync")
-        deadline = time.perf_counter() + 10
-        while fab.slo.requests < 3:            # reply sent → observe raced
-            assert time.perf_counter() < deadline
-            time.sleep(0.005)
+        # reply send and observe() race: wait for the bookkeeping to land
+        wait_until(lambda: fab.slo.requests >= 3, 10,
+                   desc="3 slo observations")
         snap = fab.metrics.snapshot()
         full = fab.stats()
         client.close()

@@ -1,0 +1,265 @@
+"""SLO serving tests: lane queue, shedding, misses, monitor, sharded fabric.
+
+Covers the deadline/priority datapath end to end — unit level (the
+``_LaneQueue`` ordering contract, the ``ServiceTimeModel`` predictor, the
+``SLOMonitor`` rule kinds) and integration level (a real
+``ServingFabric`` with 2 reactor shards serving in-process
+``RemoteDispatcherClient``s: lane partitioning, per-request deadlines,
+counted sheds surfacing as client-side ``DeadlineExceeded`` errors, and
+the per-lane metrics plane)."""
+from __future__ import annotations
+
+import queue
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.dispatcher import (DeadlineExceeded, RequestDispatcher,
+                                   Request, _LaneQueue)
+from repro.core.latency import LatencyModel, ServiceTimeModel
+from repro.core.policy import ExecutionMode, OffloadPolicy
+from repro.ft.monitor import SLOMonitor
+from repro.ipc import (DEADLINE_KEY, PRIO_KEY, RemoteDispatcherClient,
+                       ServingFabric, TransportSpec)
+from repro.obs.metrics import SLOTracker
+
+
+def _req(job_id, priority=0, deadline_ns=0, op="op"):
+    return Request(job_id, op, None, ExecutionMode.PIPELINED,
+                   priority=priority, deadline_ns=deadline_ns)
+
+
+# -- _LaneQueue: the lane-ordering contract ---------------------------------
+
+class TestLaneQueue:
+    def test_priority_order(self):
+        q = _LaneQueue()
+        for jid, prio in [(1, 2), (2, 0), (3, 1)]:
+            q.put(_req(jid, priority=prio))
+        assert [q.get().job_id for _ in range(3)] == [2, 3, 1]
+
+    def test_deadline_tiebreak_within_lane(self):
+        q = _LaneQueue()
+        q.put(_req(1, deadline_ns=300))
+        q.put(_req(2, deadline_ns=100))
+        q.put(_req(3))                       # no deadline: last in its lane
+        q.put(_req(4, deadline_ns=200))
+        assert [q.get().job_id for _ in range(4)] == [2, 4, 1, 3]
+
+    def test_fifo_inside_equal_urgency(self):
+        q = _LaneQueue()
+        for jid in (1, 2, 3):
+            q.put(_req(jid))
+        assert [q.get().job_id for _ in range(3)] == [1, 2, 3]
+
+    def test_match_closes_window_without_popping(self):
+        """A mismatched front stays queued (the batch window closes); it
+        must not be reordered past or silently consumed."""
+        q = _LaneQueue()
+        q.put(_req(1, priority=1))
+        q.put(_req(2, priority=0))           # more urgent: now the front
+        with pytest.raises(queue.Empty):
+            q.get(match=lambda r: r.priority == 1)
+        assert q.get().job_id == 2           # urgency order intact
+        assert q.get().job_id == 1
+
+    def test_sentinel_stops_regardless_of_match(self):
+        q = _LaneQueue()
+        q.put(None)
+        assert q.get(match=lambda r: False) is None
+
+    def test_timeout_raises_empty(self):
+        with pytest.raises(queue.Empty):
+            _LaneQueue().get(timeout=0.01)
+
+
+# -- ServiceTimeModel: the shed predictor -----------------------------------
+
+def test_service_time_model_floor_and_ewma():
+    m = ServiceTimeModel(LatencyModel(l_fixed_us=100.0, alpha_us_per_mb=0.0))
+    floor = m.predict_s("op")
+    assert floor == pytest.approx(100e-6)
+    m.observe("op", 0.05)
+    assert m.predict_s("op") >= 0.05 * 0.2   # EWMA pulled above the floor
+    m.observe("other", 1e-9)
+    assert m.predict_s("other") == pytest.approx(floor)  # floored
+    assert "op_ms" in m.snapshot()
+
+
+# -- dispatcher: shed + miss counting ---------------------------------------
+
+@pytest.fixture()
+def dispatcher():
+    d = RequestDispatcher(OffloadPolicy(offload_threshold_bytes=1,
+                                        max_batch=4))
+    d.register_handler("echo", lambda x: x,
+                       batch_fn=lambda xs: list(xs))
+    yield d
+    d.close()
+
+
+def test_shed_is_counted_error_reply(dispatcher):
+    """An already-expired deadline sheds: counted per lane, and the
+    submitter gets DeadlineExceeded — never a silent drop or a hang."""
+    x = np.zeros(4, np.float32)
+    with pytest.raises(DeadlineExceeded):
+        dispatcher.request("echo", x, mode="sync", priority=2,
+                           deadline_ns=time.perf_counter_ns() - 1)
+    assert dispatcher.stats.shed == 1
+    assert dispatcher.stats.lane_shed == {2: 1}
+    assert dispatcher.stats.lane_requests[2] == 1
+
+
+def test_no_deadline_never_sheds(dispatcher):
+    x = np.arange(4, dtype=np.float32)
+    out = dispatcher.request("echo", x, mode="sync")
+    np.testing.assert_array_equal(out, x)
+    assert dispatcher.stats.shed == 0
+
+
+def test_completed_late_counts_deadline_miss():
+    d = RequestDispatcher(OffloadPolicy(offload_threshold_bytes=1))
+    d.register_handler("slow", lambda x: (time.sleep(0.03), x)[1])
+    try:
+        out = d.request("slow", np.ones(2, np.float32), mode="sync",
+                        deadline_ns=time.perf_counter_ns() + int(5e6))
+        assert out is not None               # ran to completion (late)
+        assert d.stats.deadline_miss == 1
+        assert d.stats.shed == 0
+    finally:
+        d.close()
+
+
+def test_worker_pool_drains_shared_lane_queue():
+    d = RequestDispatcher(OffloadPolicy(offload_threshold_bytes=1),
+                          workers=3)
+    d.register_handler("echo", lambda x: x)
+    try:
+        jobs = [d.request("echo", np.full(2, i, np.float32),
+                          mode="async") for i in range(12)]
+        for i, jid in enumerate(jobs):
+            np.testing.assert_array_equal(d.query(jid),
+                                          np.full(2, i, np.float32))
+        assert d.stats.requests == 12
+    finally:
+        d.close()
+
+
+# -- SLOTracker lanes + SLOMonitor rules ------------------------------------
+
+def test_slo_tracker_per_lane():
+    t = SLOTracker()
+    t.observe(0.010, lane=0)
+    t.observe(0.050, lane=1, miss=True)
+    snap = t.snapshot()
+    assert snap["deadline_misses"] == 1
+    assert snap["lane0"]["requests"] == 1 and snap["lane0"]["misses"] == 0
+    assert snap["lane1"]["misses"] == 1
+    assert snap["lane1"]["p99_ms"] == pytest.approx(50.0)
+
+
+def test_slo_monitor_max_and_rate_rules():
+    metrics = {"slo.p95_ms": 10.0, "dispatcher.shed": 0}
+
+    class Src:
+        def snapshot(self):
+            return dict(metrics)
+
+    mon = SLOMonitor(Src())
+    mon.add_rule("slo.p95_ms", 50.0)                 # level bound
+    mon.add_rule("dispatcher.shed", 2, kind="rate")  # growth bound
+    assert mon.check() == []
+    metrics["dispatcher.shed"] = 2                   # +2: at the bound
+    assert mon.check() == []
+    metrics["slo.p95_ms"] = 80.0                     # level blown
+    metrics["dispatcher.shed"] = 9                   # +7: rate blown
+    new = mon.check()
+    assert {v["key"] for v in new} == {"slo.p95_ms", "dispatcher.shed"}
+    assert mon.snapshot()["violations"] == 2
+    with pytest.raises(ValueError):
+        mon.add_rule("x", 1, kind="bogus")
+
+
+# -- sharded fabric + client deadline API (in-process integration) ----------
+
+@pytest.fixture()
+def fabric():
+    d = RequestDispatcher(OffloadPolicy(offload_threshold_bytes=1,
+                                        max_batch=4), workers=2)
+    d.register_handler("double", lambda x: x * 2,
+                       batch_fn=lambda xs: [x * 2 for x in xs])
+    spec = TransportSpec(data_slots=4, data_slot_bytes=1 << 16,
+                         heap_extents=0)
+    with ServingFabric(d, spec=spec, own_dispatcher=True,
+                       reactors=2).start() as f:
+        yield f
+
+
+def test_clients_partition_across_shards(fabric):
+    c0 = RemoteDispatcherClient.connect(fabric.name, timeout_s=10, lane=0)
+    c1 = RemoteDispatcherClient.connect(fabric.name, timeout_s=10, lane=1)
+    try:
+        assert all(len(r) == 1 for r in fabric.reactors)  # round-robin
+        stats = fabric.stats()
+        assert stats["reactor"]["shards"] == 2
+        # multi-shard client keys are shard-qualified; lanes were seeded
+        # from the accept-time registration meta before any request
+        assert set(stats["clients"]) == {"s0c0", "s1c0"}
+        lanes = sorted(c["lane"] for c in stats["clients"].values())
+        assert lanes == [0, 1]
+    finally:
+        c0.close()
+        c1.close()
+
+
+def test_deadline_api_end_to_end(fabric):
+    with RemoteDispatcherClient.connect(fabric.name, timeout_s=10,
+                                        lane=1) as client:
+        x = np.arange(4, dtype=np.float32)
+        out = client.request("double", x, mode="sync", deadline_ms=2000.0)
+        np.testing.assert_array_equal(out, x * 2)
+        # generous deadline met: observed per-lane, no miss, no shed
+        snap = fabric.metrics.snapshot()
+        assert snap["slo.lane1.requests"] == 1
+        assert snap["slo.lane1.misses"] == 0
+        assert snap["dispatcher.lane_requests.1"] == 1
+
+        # expired deadline: server sheds, client sees the counted error
+        with pytest.raises(RuntimeError, match="DeadlineExceeded"):
+            client.request("double", x, mode="sync", deadline_ms=-10.0)
+        assert fabric.dispatcher.stats.shed == 1
+        assert fabric.dispatcher.stats.lane_shed == {1: 1}
+
+
+def test_priority_override_and_wire_keys(fabric):
+    """Explicit per-request priority overrides the client lane, and the
+    reserved keys are stripped before headers reach handlers."""
+    seen = {}
+
+    def spy(x):
+        seen["header_free"] = True       # handler only ever sees the data
+        return x
+
+    fabric.dispatcher.register_handler("spy", spy)
+    with RemoteDispatcherClient.connect(fabric.name, timeout_s=10,
+                                        lane=1) as client:
+        client.request("spy", np.ones(2, np.float32), mode="sync",
+                       priority=3, deadline_ms=2000.0)
+        assert seen["header_free"]
+        assert fabric.dispatcher.stats.lane_requests.get(3) == 1
+        assert "slo.lane3.requests" in fabric.metrics.snapshot()
+
+
+def test_default_deadline_arms_monitor():
+    d = RequestDispatcher(OffloadPolicy(offload_threshold_bytes=1))
+    d.register_handler("echo", lambda x: x)
+    spec = TransportSpec(data_slots=4, data_slot_bytes=1 << 16,
+                         heap_extents=0)
+    with ServingFabric(d, spec=spec, own_dispatcher=True,
+                       default_deadline_ms=5000.0).start() as f:
+        assert "slo.p95_ms" in f.monitor.rules
+        with RemoteDispatcherClient.connect(f.name, timeout_s=10) as c:
+            c.request("echo", np.ones(2, np.float32), mode="sync")
+            assert f.monitor.check() == []   # well under the default SLO
+            assert f.slo.snapshot()["lane0"]["requests"] == 1

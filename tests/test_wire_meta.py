@@ -1,0 +1,139 @@
+"""Property-based tests for the META_BINARY header tag codec.
+
+The binary codec is the reason steady-state sends never pickle: every
+header the serving stack emits (job ids, ops, the SLO priority/deadline
+keys) must round-trip exactly through ``_enc_header``/``_dec_header``, and
+anything outside the flat vocabulary must raise ``_Unencodable`` so the
+channel falls back to a *whole-header* pickle (``META_PICKLE``) rather
+than corrupting the wire.  Hypothesis drives arbitrary headers over the
+full vocabulary; a deterministic corpus keeps the invariants covered when
+hypothesis is absent (the stub in ``_hypothesis_compat`` skips ``@given``
+tests instead of failing collection).
+"""
+from __future__ import annotations
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.ipc.channel import (DEADLINE_KEY, PRIO_KEY, _HX_KEY, _I64_MAX,
+                               _I64_MIN, MetaOverflow, _Unencodable,
+                               _dec_header, _enc_header)
+
+_CAP = 1 << 16
+
+
+def _roundtrip(header: dict, cap: int = _CAP) -> dict:
+    buf = bytearray(cap)
+    end = _enc_header(memoryview(buf), 0, header)
+    assert end <= cap
+    return _dec_header(bytes(buf), 0)
+
+
+# -- strategies over the codec's exact vocabulary ---------------------------
+
+def _scalars():
+    return st.one_of(
+        st.none(),
+        st.booleans(),
+        st.integers(min_value=_I64_MIN, max_value=_I64_MAX),
+        st.floats(allow_nan=False),       # NaN != NaN breaks dict equality
+        st.text(max_size=64),
+        st.binary(max_size=64),
+    )
+
+
+def _values():
+    # tuples/lists of scalars (one nesting level — the wire vocabulary
+    # is recursive, but flat collections are what the stack actually
+    # sends, e.g. the heap scatter list under _HX_KEY)
+    return st.one_of(
+        _scalars(),
+        st.lists(_scalars(), max_size=8),
+        st.lists(_scalars(), max_size=8).map(tuple),
+    )
+
+
+def _headers():
+    return st.dictionaries(st.text(max_size=32), _values(), max_size=16)
+
+
+@given(_headers())
+def test_binary_header_roundtrip(header):
+    """Any header inside the vocabulary decodes to an equal dict."""
+    assert _roundtrip(header) == header
+
+
+@given(st.integers(min_value=0, max_value=255),
+       st.integers(min_value=_I64_MIN, max_value=_I64_MAX))
+def test_slo_keys_roundtrip(prio, deadline):
+    """The reserved SLO keys ride the binary codec for any i64 value —
+    adding a lane/deadline must never demote a header to pickle."""
+    header = {"job_id": 7, "op": "work", PRIO_KEY: prio,
+              DEADLINE_KEY: deadline}
+    assert _roundtrip(header) == header
+
+
+@given(st.integers())
+def test_int_pickle_boundary(v):
+    """Ints encode iff they fit i64; outside that the codec refuses
+    (whole-header pickle fallback) instead of truncating."""
+    buf = bytearray(_CAP)
+    if _I64_MIN <= v <= _I64_MAX:
+        assert _roundtrip({"k": v}) == {"k": v}
+    else:
+        with pytest.raises(_Unencodable):
+            _enc_header(memoryview(buf), 0, {"k": v})
+
+
+@given(_headers())
+@settings(max_examples=20)
+def test_roundtrip_preserves_types(header):
+    """bool/int and tuple/list distinctions survive the wire (True must
+    not come back as 1, a scatter tuple must not come back as a list)."""
+    out = _roundtrip(header)
+    for k, v in header.items():
+        assert type(out[k]) is type(v)
+
+
+# -- deterministic corpus: runs (not skips) without hypothesis --------------
+
+_CORPUS = [
+    {},
+    {"job_id": 1, "op": "generate", "mode": "pipelined"},
+    {"eof": True, "gen": 0, "step": -1},
+    {"none": None, "f": 0.5, "neg": -1, "big": _I64_MAX, "small": _I64_MIN},
+    {PRIO_KEY: 3, DEADLINE_KEY: 123_456_789_000},
+    {_HX_KEY: (0, 4096, 1, 128), "job_id": 9},
+    {"t": (1, "a", None, True), "l": [0.25, b"xy"], "empty": ()},
+    {"bytes": b"\x00\xff" * 16, "unicode": "π∆-rocket"},
+]
+
+
+def test_corpus_roundtrip():
+    for header in _CORPUS:
+        assert _roundtrip(header) == header, header
+
+
+def test_corpus_preserves_types():
+    out = _roundtrip({"b": True, "i": 1, "t": (1, 2), "l": [1, 2]})
+    assert out["b"] is True and type(out["i"]) is int
+    assert type(out["t"]) is tuple and type(out["l"]) is list
+
+
+def test_unencodable_values_refuse():
+    """Rich values (the pickle-fallback boundary): dict values, non-str
+    keys, oversized ints, and arbitrary objects all raise _Unencodable."""
+    buf = bytearray(_CAP)
+    for header in ({"k": {"nested": 1}}, {1: "non-str key"},
+                   {"k": 1 << 64}, {"k": object()},
+                   {"k": [object()]}):
+        with pytest.raises(_Unencodable):
+            _enc_header(memoryview(buf), 0, header)
+
+
+def test_overflow_raises_meta_overflow():
+    """A header that cannot fit the meta region raises MetaOverflow (the
+    channel aborts the slot) rather than writing out of bounds."""
+    with pytest.raises(MetaOverflow):
+        _roundtrip({"k": b"x" * 128}, cap=64)
