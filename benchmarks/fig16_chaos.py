@@ -1,0 +1,175 @@
+"""Fig. 16 analogue: chaos soak — crash recovery + corruption containment.
+
+The robustness claim behind the fault-injection plane: a serving fabric
+under a *seeded, replayable* fault schedule loses **zero** requests and
+duplicates **zero** replies, and its crash wreckage (orphaned shared
+memory, stranded bulk-heap extents) is reclaimed and counted — recovery
+costs wall-clock, never correctness.  Two sub-benches witness it:
+
+- ``fig16/crash`` — a :class:`~repro.ft.supervisor.FabricSupervisor`
+  runs the fabric in a child process with ``worker.crash`` armed to
+  fire mid-soak (hard ``os._exit`` while a request batch drains).  The
+  client keeps issuing sync requests through the death: heartbeat
+  staleness trips :meth:`~repro.ipc.worker.RemoteDispatcherClient.reconnect`,
+  the supervisor reclaims the orphaned segments and restarts the fabric
+  under the same rendezvous name, and the unacked request replays with
+  its idempotent id.  Reported: goodput over the whole soak (crash
+  included), recovery time (the worst single-request latency — the one
+  that spanned the crash), restarts, segments reclaimed, and the gated
+  identities ``lost_replies``/``dup_replies``/``leaked_arenas``.
+
+- ``fig16/corrupt`` — in-process fabric with ``meta_checksum`` on and a
+  plane that corrupts one wire meta (CRC quarantine → counted
+  ``corrupt_drops``, request resubmitted under its dedup id) and leaks
+  one bulk-heap extent (suppressed free → force-reap reclaims it).
+  Gated: ``lost_replies``/``dup_replies``/``leaked_extents``.
+
+All four gate tokens carry **zero slack** in ``run.py CHECKED_METRICS``:
+they are correctness identities, not timings — any nonzero value is a
+reliability regression, and CI fails on it.
+
+Run: ``PYTHONPATH=src python -m benchmarks.run --only fig16``
+"""
+from __future__ import annotations
+
+import os
+import time
+
+import numpy as np
+
+from benchmarks.common import fmt_row
+from repro.core.policy import OffloadPolicy, RetryPolicy
+from repro.ft import inject as _inject
+from repro.ft.inject import FaultPlane, FaultSpec
+from repro.ft.supervisor import SHM_DIR, FabricSupervisor
+
+NAME = "rocket-fig16"
+SEED = 16
+N_REQS = 30                    # soak length (sync requests per sub-bench)
+CRASH_AT = 12                  # worker.crash fires on this drained batch
+D = 256                        # request payload width (1KB — stays inline)
+# fast failure detection for a benchmark-sized soak: the client declares
+# the server dead after 0.4s of heartbeat silence and retries quickly
+RETRY = RetryPolicy(heartbeat_interval_s=0.1, heartbeat_stale_s=0.4,
+                    connect_timeout_s=10.0, max_reconnects=8)
+
+
+def _soak(client, n: int) -> dict:
+    """Issue ``n`` sync requests, validating every reply; returns mean/max
+    latency and goodput over the whole window (faults included)."""
+    vec = np.arange(D, dtype=np.float32)
+    lat_max = total = 0.0
+    t0 = time.perf_counter()
+    for _ in range(n):
+        t = time.perf_counter()
+        out = client.request("double", vec, mode="sync")
+        dt = time.perf_counter() - t
+        total += dt
+        lat_max = max(lat_max, dt)
+        if not np.allclose(out, vec * 2):
+            raise AssertionError("corrupted reply payload")
+    wall = time.perf_counter() - t0
+    return {"mean_us": total / n * 1e6, "max_ms": lat_max * 1e3,
+            "goodput_rps": n / wall}
+
+
+def _crash_bench():
+    """Supervised child fabric killed mid-soak; client rides it out."""
+    from repro.ipc.worker import RemoteDispatcherClient
+
+    policy = OffloadPolicy(mode="pipelined", retry=RETRY)
+    plane = FaultPlane(SEED, {"worker.crash": FaultSpec(at=(CRASH_AT,))})
+    sup = FabricSupervisor(NAME, "repro.ft.supervisor:echo_fabric_factory",
+                           policy=policy, max_restarts=3,
+                           plane_json=plane.spec_json()).start()
+    try:
+        if not sup.wait_alive(30.0):
+            raise RuntimeError("supervised fabric never came up")
+        client = RemoteDispatcherClient.connect(NAME, policy=policy)
+        try:
+            m = _soak(client, N_REQS)
+            lost, dup = client.lost_replies, client.dup_replies
+            reconnects = client.reconnects
+        finally:
+            client.close()
+    finally:
+        sup.close()            # terminates the child, reclaims segments
+    leaked = len([f for f in os.listdir(SHM_DIR) if f.startswith(NAME)])
+    s = sup.stats()
+    if s["crashes"] < 1:
+        raise RuntimeError("chaos schedule never fired worker.crash")
+    return fmt_row(
+        "fig16/crash", m["mean_us"],
+        f"goodput={m['goodput_rps']:.0f}rps;recovery_ms={m['max_ms']:.0f};"
+        f"crashes={s['crashes']};restarts={s['restarts']};"
+        f"reclaimed={s['arenas_reclaimed'] + s['heaps_reclaimed']};"
+        f"reconnects={reconnects};"
+        f"lost_replies={lost};dup_replies={dup};leaked_arenas={leaked}")
+
+
+def _corrupt_bench():
+    """In-process fabric: one corrupted wire meta (CRC quarantine) + one
+    leaked heap extent (suppressed free), both repaired and counted."""
+    from repro.core.dispatcher import RequestDispatcher
+    from repro.ipc.worker import RemoteDispatcherClient, ServingFabric
+
+    policy = OffloadPolicy(mode="pipelined", meta_checksum=True,
+                           heap_threshold_bytes=1 << 16, retry=RETRY)
+    plane = FaultPlane(SEED, {
+        "channel.meta.corrupt": FaultSpec(rate=1.0, max_fires=1),
+        "heap.leak": FaultSpec(rate=1.0, max_fires=1),
+    })
+    _inject.install(plane)
+    try:
+        dispatcher = RequestDispatcher(policy)
+        dispatcher.register_handler("double", lambda x: x * 2)
+        fabric = ServingFabric(dispatcher, policy=policy,
+                               own_dispatcher=True).start()
+        try:
+            client = RemoteDispatcherClient.connect(fabric.name,
+                                                    policy=policy)
+            try:
+                m = _soak(client, N_REQS)
+                # one large payload rides the bulk heap; its free is the
+                # suppressed one (heap.leak) — a datable stranded extent
+                big = np.ones(1 << 17, np.uint8)
+                out = client.request("double", big, mode="sync")
+                if not np.all(out == 2):
+                    raise AssertionError("corrupted heap reply")
+                lost, dup = client.lost_replies, client.dup_replies
+                retries = client.retries
+            finally:
+                client.close()
+            conns = fabric._all_connections()
+            drops = sum(c.transport.data.stats.corrupt_drops
+                        for c in conns)
+            # crash-reap the stranded extent (the reactor does the same
+            # force-reap when it tears a dead connection down) and count
+            # what is still allocated afterwards — the gated leak
+            reaped = leaked = 0
+            for c in conns:
+                heap = c.transport.heap
+                if heap is None:
+                    continue
+                reaped += c.transport.reap_heap(force=True)
+                leaked += sum(
+                    heap.spec.n_extents - heap.free_extents(d)
+                    for d in (heap.tx_dir, heap.rx_dir))
+        finally:
+            fabric.close()
+    finally:
+        _inject.uninstall()
+    if plane.fired("channel.meta.corrupt") != 1 or drops < 1:
+        raise RuntimeError("corruption schedule never fired/quarantined")
+    if plane.fired("heap.leak") != 1:
+        raise RuntimeError("heap-leak schedule never fired")
+    return fmt_row(
+        "fig16/corrupt", m["mean_us"],
+        f"goodput={m['goodput_rps']:.0f}rps;corrupt_drops={drops};"
+        f"retries={retries};heap_reaped={reaped};"
+        f"lost_replies={lost};dup_replies={dup};leaked_extents={leaked}")
+
+
+def run():
+    yield _crash_bench()
+    yield _corrupt_bench()

@@ -42,6 +42,7 @@ from benchmarks import (
     fig13_copy_path,
     fig14_multiclient,
     fig15_saturation,
+    fig16_chaos,
     table1_workload_bytes,
 )
 
@@ -63,6 +64,7 @@ MODULES = {
     "fig13copy": fig13_copy_path,
     "fig14": fig14_multiclient,
     "fig15": fig15_saturation,
+    "fig16": fig16_chaos,
 }
 
 # counted (non-timing) metrics gated by ``--check``: metric token ->
@@ -91,6 +93,13 @@ MODULES = {
 # the reply path dropped one), and shed_drift is the absolute difference
 # between the server's counted sheds and the shed errors clients observed
 # (a shed must always be a counted, replied-to event — never silent).
+#
+# The fig16 chaos identities are the reliability gates, all zero-slack:
+# under the seeded fault schedule (server crash mid-batch, corrupted wire
+# meta, leaked heap extent) every request must complete exactly once
+# (lost_replies=0, dup_replies=0) and every orphaned resource must be
+# reclaimed (leaked_arenas=0 /dev/shm segments after supervisor close,
+# leaked_extents=0 allocated heap extents after crash-reap).
 CHECKED_METRICS = {
     "copies/req": (1.0, 0.01),
     "doorbells/req": (1.0, 3.0),
@@ -98,6 +107,10 @@ CHECKED_METRICS = {
     "pickle/send": (1.0, 0.01),
     "slo_lost/req": (1.0, 0.0),
     "shed_drift": (1.0, 0.0),
+    "lost_replies": (1.0, 0.0),
+    "dup_replies": (1.0, 0.0),
+    "leaked_arenas": (1.0, 0.0),
+    "leaked_extents": (1.0, 0.0),
 }
 
 

@@ -41,6 +41,7 @@ import itertools
 import queue
 import threading
 import time
+from collections import OrderedDict
 from dataclasses import dataclass, field
 from typing import Any, Callable, Optional, Sequence
 
@@ -50,7 +51,20 @@ from repro.core.copyengine import SGList, get_engine
 from repro.core.latency import LatencyModel, ServiceTimeModel
 from repro.core.policy import ExecutionMode, OffloadPolicy
 from repro.core.queuepair import BufferPool
+from repro.ft import inject as _inject
 from repro.obs import trace as _trace
+
+
+class CircuitOpen(RuntimeError):
+    """Fast-fail error for an op quarantined by its circuit breaker.
+
+    A handler that keeps failing gets its op *contained*: instead of
+    burning batch slots (and dispatcher worker time) on work that will
+    fail anyway, every request for the op is completed immediately with
+    this error until a half-open probe succeeds.  Like a shed, it is a
+    counted error reply (``DispatcherStats.breaker_fast_fails``) — never
+    a silent drop.
+    """
 
 
 class DeadlineExceeded(RuntimeError):
@@ -126,6 +140,10 @@ class DispatcherStats:
     deadline_miss: int = 0       # requests completed but past their deadline
     lane_requests: dict = field(default_factory=dict)  # per-priority intake
     lane_shed: dict = field(default_factory=dict)      # per-priority sheds
+    breaker_opened: int = 0      # closed->open transitions (incl. reopen)
+    breaker_recovered: int = 0   # half-open probe succeeded: op back in service
+    breaker_fast_fails: int = 0  # requests fast-failed with CircuitOpen
+    dedup_hits: int = 0          # replayed requests served from the window
 
 
 class _LaneQueue:
@@ -189,6 +207,130 @@ class _LaneQueue:
             return len(self._heap)
 
 
+class _CircuitBreaker:
+    """Per-op failure containment: closed → open → half-open → closed.
+
+    ``threshold`` consecutive handler-invocation failures open the
+    breaker; while open, requests fast-fail with :class:`CircuitOpen`.
+    After ``cooldown_s`` the breaker goes half-open and admits exactly
+    ONE probe invocation — success closes it (op back in service),
+    failure reopens it for another cooldown.  Failures are counted per
+    handler *invocation* (a failing batch is one failure, not K), so the
+    breaker tracks "the handler is broken", not "traffic is heavy".
+    """
+
+    def __init__(self, threshold: int, cooldown_s: float):
+        self.threshold = threshold
+        self.cooldown_s = cooldown_s
+        self.state = "closed"
+        self._consecutive = 0
+        self._opened_t = 0.0
+        self._probing = False
+        self._lock = threading.Lock()
+
+    def admit(self) -> bool:
+        """May a request for this op run right now?  (Half-open: only the
+        single probe.)"""
+        with self._lock:
+            if self.state == "closed":
+                return True
+            if self.state == "open":
+                if time.perf_counter() - self._opened_t < self.cooldown_s:
+                    return False
+                self.state = "half-open"
+                self._probing = False
+            if self._probing:           # half-open: one probe at a time
+                return False
+            self._probing = True
+            return True
+
+    def record(self, ok: bool) -> Optional[str]:
+        """Feed one handler-invocation outcome; returns the transition it
+        caused (``"opened"``/``"recovered"``) or ``None``."""
+        with self._lock:
+            if ok:
+                self._consecutive = 0
+                if self.state != "closed":
+                    self.state = "closed"
+                    self._probing = False
+                    return "recovered"
+                return None
+            self._consecutive += 1
+            if self.state == "half-open":
+                self.state = "open"
+                self._opened_t = time.perf_counter()
+                self._probing = False
+                return "opened"
+            if self.state == "closed" and self._consecutive >= self.threshold:
+                self.state = "open"
+                self._opened_t = time.perf_counter()
+                return "opened"
+            return None
+
+
+class _DedupWindow:
+    """Bounded idempotency window for exactly-once request replay.
+
+    A reconnecting client resubmits requests whose replies it never saw;
+    the original may (a) never have arrived, (b) still be executing, or
+    (c) have completed with the reply lost on the torn-down transport.
+    Keyed by the client's idempotent id, the window turns all three into
+    exactly-once *execution*: (a) runs normally, (b) attaches the replay's
+    reply callback to the in-flight entry, (c) replies immediately from
+    the cached result.  Entries are LRU-evicted past ``capacity`` —
+    sized (``OffloadPolicy.retry.dedup_window``) to comfortably cover a
+    client's unacked window across a reconnect.
+    """
+
+    def __init__(self, capacity: int):
+        self.capacity = capacity
+        self._entries: OrderedDict = OrderedDict()   # key -> [state, payload]
+        self._lock = threading.Lock()
+
+    def admit(self, key) -> tuple:
+        """Register ``key`` as in-flight; returns ``(is_replay, state,
+        cached)`` where state is ``"new"``/``"inflight"``/``"done"``."""
+        with self._lock:
+            ent = self._entries.get(key)
+            if ent is None:
+                self._entries[key] = ["inflight", []]
+                while len(self._entries) > self.capacity:
+                    self._entries.popitem(last=False)
+                return False, "new", None
+            self._entries.move_to_end(key)
+            if ent[0] == "done":
+                return True, "done", ent[1]
+            return True, "inflight", None
+
+    def attach(self, key, callback) -> bool:
+        """Queue a replay's callback behind the in-flight original; False
+        if the entry completed meanwhile (caller replies from cache)."""
+        with self._lock:
+            ent = self._entries.get(key)
+            if ent is not None and ent[0] == "inflight":
+                ent[1].append(callback)
+                return True
+            return False
+
+    def result(self, key):
+        with self._lock:
+            ent = self._entries.get(key)
+            return ent[1] if ent is not None and ent[0] == "done" else None
+
+    def settle(self, key, out) -> list:
+        """Record the original's completion; returns the queued replay
+        callbacks to fire with the same result."""
+        with self._lock:
+            ent = self._entries.get(key)
+            waiters = ent[1] if ent is not None and ent[0] == "inflight" \
+                else []
+            self._entries[key] = ["done", out]
+            self._entries.move_to_end(key)
+            while len(self._entries) > self.capacity:
+                self._entries.popitem(last=False)
+            return waiters
+
+
 class QueryHandler:
     """Completion tracking + hybrid polling for result queries."""
 
@@ -245,7 +387,9 @@ class RequestDispatcher:
     def __init__(self, policy: OffloadPolicy = OffloadPolicy(),
                  latency: Optional[LatencyModel] = None,
                  max_batch_wait_s: float = 0.002,
-                 workers: int = 1):
+                 workers: int = 1,
+                 breaker_threshold: int = 5,
+                 breaker_cooldown_s: float = 0.25):
         self.policy = policy
         self.latency = latency or LatencyModel()
         self.queries = QueryHandler(self.latency, policy)
@@ -253,6 +397,16 @@ class RequestDispatcher:
         # admission predictor: per-op observed service EWMA over the
         # transfer model — drives deadline-miss shedding in the serve loop
         self.service = ServiceTimeModel(self.latency)
+        # per-op circuit breakers (containment): ``breaker_threshold``
+        # consecutive handler failures quarantine the op with fast-fail
+        # CircuitOpen replies until a half-open probe recovers it; 0
+        # disables breakers entirely
+        self._breaker_threshold = breaker_threshold
+        self._breaker_cooldown_s = breaker_cooldown_s
+        self._breakers: dict[str, _CircuitBreaker] = {}
+        # exactly-once replay window for reconnecting clients (idempotent
+        # request ids from the wire; see _DedupWindow)
+        self._dedup = _DedupWindow(policy.retry.dedup_window)
         self._handlers: dict[str, Callable] = {}
         self._batch_handlers: dict[str, Callable] = {}
         self._slab_handlers: dict[str, Callable] = {}
@@ -287,6 +441,44 @@ class RequestDispatcher:
         if slab_fn is not None:
             self._slab_handlers[op] = slab_fn
 
+    # -- containment: per-op circuit breakers ---------------------------------
+    def _breaker(self, op: str) -> Optional[_CircuitBreaker]:
+        if self._breaker_threshold <= 0:
+            return None
+        br = self._breakers.get(op)
+        if br is None:
+            br = self._breakers.setdefault(
+                op, _CircuitBreaker(self._breaker_threshold,
+                                    self._breaker_cooldown_s))
+        return br
+
+    def breaker_state(self, op: str) -> str:
+        """This op's breaker state (``closed``/``open``/``half-open``) —
+        introspection for tests and dashboards."""
+        br = self._breakers.get(op)
+        return br.state if br is not None else "closed"
+
+    def _breaker_note(self, br: Optional[_CircuitBreaker], ok: bool) -> None:
+        """Feed one handler-invocation outcome; count transitions."""
+        if br is None:
+            return
+        transition = br.record(ok)
+        if transition == "opened":
+            with self._slock:
+                self.stats.breaker_opened += 1
+        elif transition == "recovered":
+            with self._slock:
+                self.stats.breaker_recovered += 1
+
+    def _call_handler(self, fn: Callable, *args):
+        """Every handler invocation funnels through here: the
+        ``dispatcher.handler.error`` injection site (a stand-in for an
+        arbitrary handler bug) guards the call."""
+        if _inject._PLANE is not None \
+                and _inject.fire("dispatcher.handler.error") is not None:
+            raise _inject.InjectedFault("injected handler failure")
+        return fn(*args)
+
     # -- client API (paper Listing 1) -----------------------------------------
     def request(self, op: str, data: Any,
                 mode: ExecutionMode | str | None = None,
@@ -298,13 +490,25 @@ class RequestDispatcher:
                       priority=priority, deadline_ns=deadline_ns)
         self._count_in(req)
         if mode == ExecutionMode.SYNC:
-            # inline fast path — still SLO-accounted: an expired deadline
-            # sheds here too, and a late completion is a counted miss
+            # inline fast path — still SLO-accounted (an expired deadline
+            # sheds here too, a late completion is a counted miss) and
+            # still breaker-contained (a quarantined op fast-fails inline
+            # callers exactly like queued ones)
             err = self._shed_verdict(req)
             if err is not None:
                 raise err
+            br = self._breaker(op)
+            if br is not None and not br.admit():
+                with self._slock:
+                    self.stats.breaker_fast_fails += 1
+                raise CircuitOpen(f"op {op!r} quarantined (circuit open)")
             t0 = time.perf_counter()
-            out = self._handlers[op](data)
+            try:
+                out = self._call_handler(self._handlers[op], data)
+            except Exception:
+                self._breaker_note(br, False)
+                raise
+            self._breaker_note(br, True)
             self.service.observe(op, time.perf_counter() - t0)
             self._note_late(req)
             return out
@@ -312,11 +516,61 @@ class RequestDispatcher:
         self._q.put(req)
         return req.job_id
 
+    def _dedup_admit(self, key: Any,
+                     on_complete: Optional[Callable[[int, Any], None]],
+                     lease: Optional[Any]) -> tuple[bool, Optional[Callable]]:
+        """Exactly-once admission for an idempotent request id.
+
+        Returns ``(handled, callback)``.  ``handled`` means the request is
+        a replay and was fully resolved here (cached result replied, or
+        the caller's callback attached to the in-flight original) — do not
+        enqueue it.  Otherwise ``callback`` is the (possibly wrapped)
+        completion callback to enqueue with: for a first-seen key it
+        settles the dedup window and fires any waiters that attached while
+        the request was in flight."""
+        if key is None:
+            return False, on_complete
+        is_replay, state, cached = self._dedup.admit(key)
+        if not is_replay:
+            def settle(job_id, out, _key=key, _cb=on_complete):
+                # the cached copy outlives any lease/slab the result may
+                # alias — materialize before it enters the window
+                if isinstance(out, np.ndarray):
+                    out = np.array(out)
+                waiters = self._dedup.settle(_key, out)
+                if _cb is not None:
+                    _cb(job_id, out)
+                for w in waiters:
+                    try:
+                        w(job_id, out)
+                    except Exception:
+                        pass
+            return False, settle
+        with self._slock:
+            self.stats.dedup_hits += 1
+        if lease is not None:        # replay never consumes the payload
+            try:
+                lease.release()
+            except Exception:
+                pass
+        if state == "inflight" and (
+                on_complete is None
+                or self._dedup.attach(key, on_complete)):
+            return True, None        # original completion will reply
+        cached = self._dedup.result(key) if cached is None else cached
+        if on_complete is not None:
+            try:
+                on_complete(-1, cached)
+            except Exception:
+                pass
+        return True, None
+
     def submit(self, op: str, data: Any,
                mode: ExecutionMode | str | None = None,
                on_complete: Optional[Callable[[int, Any], None]] = None,
                lease: Optional[Any] = None,
-               priority: int = 0, deadline_ns: int = 0) -> int:
+               priority: int = 0, deadline_ns: int = 0,
+               dedup: Any = None) -> int:
         """Enqueue a request without ever blocking the caller.
 
         Unlike :meth:`request`, sync mode is *not* executed inline: every
@@ -330,8 +584,18 @@ class RequestDispatcher:
         ``lease`` is the zero-copy ring-slot lease backing ``data`` (views
         into shared memory); the dispatcher releases it after batch gather
         or solo completion — never before the payload has been consumed.
+
+        ``dedup`` is an optional idempotent request id (any hashable):
+        a key already seen inside the dedup window is NOT re-executed —
+        a cached result is replied immediately, or the callback is
+        attached to the in-flight original (requires ``on_complete``).
+        This is the server half of reconnect-with-replay: a client may
+        resubmit after a lost reply without double-executing the handler.
         """
         mode = ExecutionMode(mode) if mode is not None else self.policy.mode
+        handled, on_complete = self._dedup_admit(dedup, on_complete, lease)
+        if handled:
+            return -1
         req = Request(next(self._ids), op, data, mode,
                       nbytes=int(np.asarray(data).nbytes)
                       if isinstance(data, np.ndarray) else 0,
@@ -355,26 +619,36 @@ class RequestDispatcher:
         members, so a microbatch on the wire becomes a batch in the
         handler without K separate submit round-trips.  Optional item
         keys ``priority`` and ``deadline_ns`` place the request in its
-        SLO lane (see :class:`_LaneQueue`)."""
+        SLO lane (see :class:`_LaneQueue`); optional key ``dedup`` is the
+        idempotent request id (see :meth:`submit`) — replayed items are
+        resolved from the dedup window and report job id ``-1``."""
         reqs = []
+        jobs = []
         for it in items:
             mode = it.get("mode")
             mode = (ExecutionMode(mode) if mode is not None
                     else self.policy.mode)
             data = it["data"]
-            reqs.append(Request(
+            handled, cb = self._dedup_admit(
+                it.get("dedup"), it.get("on_complete"), it.get("lease"))
+            if handled:
+                jobs.append(-1)
+                continue
+            req = Request(
                 next(self._ids), it["op"], data, mode,
                 nbytes=int(np.asarray(data).nbytes)
                 if isinstance(data, np.ndarray) else 0,
-                callback=it.get("on_complete"), lease=it.get("lease"),
+                callback=cb, lease=it.get("lease"),
                 rid=it.get("rid", 0), priority=it.get("priority", 0),
-                deadline_ns=it.get("deadline_ns", 0)))
+                deadline_ns=it.get("deadline_ns", 0))
+            reqs.append(req)
+            jobs.append(req.job_id)
         for req in reqs:
             self._count_in(req)
             if req.callback is None:
                 self.queries.register(req)
             self._q.put(req)
-        return [r.job_id for r in reqs]
+        return jobs
 
     def query(self, job_id: int, timeout: float = 60.0) -> Any:
         self.stats.queries += 1
@@ -539,6 +813,17 @@ class RequestDispatcher:
         if not batch:
             return
         op = batch[0].op
+        br = self._breaker(op)
+        if br is not None and not br.admit():
+            # quarantined op: fast-fail the whole batch with error replies
+            # instead of invoking the handler — leases still released
+            err = CircuitOpen(f"op {op!r} quarantined (circuit open)")
+            with self._slock:
+                self.stats.breaker_fast_fails += len(batch)
+            for r in batch:
+                r._release_lease()
+                self._complete(r, err)
+            return
         with self._slock:
             self.stats.batches += 1
             self.stats.batched_requests += len(batch)
@@ -561,9 +846,9 @@ class RequestDispatcher:
                     slab, shapes, rows = self._gather(batch)
                     if sfn is not None:
                         self.stats.slab_batches += 1
-                        results = sfn(slab, shapes)
+                        results = self._call_handler(sfn, slab, shapes)
                     else:
-                        results = bfn(rows)
+                        results = self._call_handler(bfn, rows)
                     if len(results) != len(batch):
                         # surface the handler bug now — zip truncation would
                         # leave the tail requests uncompleted forever
@@ -571,25 +856,35 @@ class RequestDispatcher:
                             f"batch handler for {op!r} returned "
                             f"{len(results)} results for {len(batch)} "
                             f"requests")
+                    self._breaker_note(br, True)
                 except Exception as e:
                     results = [e] * len(batch)
+                    self._breaker_note(br, False)
             elif bfn is not None and len(batch) > 1:
                 try:
-                    results = bfn([r.data for r in batch])
+                    results = self._call_handler(
+                        bfn, [r.data for r in batch])
                     if len(results) != len(batch):
                         raise RuntimeError(
                             f"batch handler for {op!r} returned "
                             f"{len(results)} results for {len(batch)} "
                             f"requests")
+                    self._breaker_note(br, True)
                 except Exception as e:
                     results = [e] * len(batch)
+                    self._breaker_note(br, False)
             else:
+                # solo path: each call is its own handler invocation, so
+                # each feeds the breaker individually (a batch counts once)
                 results = []
                 for r in batch:
                     try:
-                        results.append(self._handlers[op](r.data))
+                        results.append(
+                            self._call_handler(self._handlers[op], r.data))
+                        self._breaker_note(br, True)
                     except Exception as e:
                         results.append(e)
+                        self._breaker_note(br, False)
             if t0:      # batch compute: gather (nested sub-span) + handler
                 _trace.emit(_trace.HANDLER, t0, rid=batch[0].rid,
                             arg=len(batch))
@@ -640,7 +935,7 @@ class RequestDispatcher:
         for _ in self._workers:
             self._q.put(None)            # one stop sentinel per worker
         for w in self._workers:
-            w.join(timeout=5)
+            w.join(timeout=self.policy.retry.join_timeout_s)
 
     def __enter__(self):
         return self

@@ -32,6 +32,42 @@ class Device(str, enum.Enum):
 
 
 @dataclass(frozen=True)
+class RetryPolicy:
+    """Every timeout, retry, and liveness deadline in one place.
+
+    Before this existed, ``worker.py``/``reactor.py`` carried the same
+    four magic numbers (2.0/5.0/10.0/60.0 s) as scattered keyword
+    defaults; heartbeat staleness and reconnect backoff would have become
+    two more.  All of them are *policy*, so they live on
+    ``OffloadPolicy.retry`` and are tuned in one place.
+    """
+    # -- request/reply deadlines ------------------------------------------
+    reply_timeout_s: float = 5.0        # server-side reply publish
+    query_timeout_s: float = 60.0       # client-side completion wait
+    connect_timeout_s: float = 30.0     # listener rendezvous + arena attach
+    # -- shutdown deadlines -----------------------------------------------
+    shutdown_send_timeout_s: float = 2.0   # best-effort control sends at close
+    join_timeout_s: float = 10.0        # process/thread join at stop()
+    linger_timeout_s: float = 30.0      # producer drain-then-exit deadline
+    recv_poll_s: float = 0.05           # serve-loop blocking-recv quantum
+    # -- client reconnect/backoff (ft plane) ------------------------------
+    max_reconnects: int = 4             # bounded: give up after this many
+    backoff_initial_s: float = 0.05     # first retry delay, doubled per try
+    backoff_max_s: float = 1.0          # backoff ceiling
+    # -- liveness (heartbeat words, transport control words 12/13) --------
+    heartbeat_interval_s: float = 0.2   # min gap between stamps per side
+    heartbeat_stale_s: float = 2.0      # no stamp for this long => peer dead
+    # -- server-side exactly-once dedup window (replayed requests) --------
+    dedup_window: int = 1024            # cached reply ids per fabric
+
+    def backoff_s(self, attempt: int) -> float:
+        """Delay before reconnect ``attempt`` (0-based): doubling from
+        ``backoff_initial_s`` capped at ``backoff_max_s``."""
+        return min(self.backoff_initial_s * (2.0 ** attempt),
+                   self.backoff_max_s)
+
+
+@dataclass(frozen=True)
 class OffloadPolicy:
     mode: ExecutionMode = ExecutionMode.PIPELINED
     device: Device = Device.OFFLOAD
@@ -74,6 +110,15 @@ class OffloadPolicy:
     coalesce_bytes: int = 0
     coalesce_max: int = 8
     coalesce_window_us: float = 200.0
+    # wire-meta integrity: when True every published slot carries a CRC32
+    # of its meta bytes in slot-header word 5 (FLAG_CRC) and the receiver
+    # verifies before decode — a corrupt slot is quarantined as a counted
+    # ``corrupt_drops`` skip instead of crashing the drain loop on an
+    # unpicklable/undecodable header
+    meta_checksum: bool = False
+    # consolidated timeout/retry/liveness deadlines (heartbeats, reconnect
+    # backoff, reply/shutdown timeouts) — see RetryPolicy
+    retry: RetryPolicy = RetryPolicy()
     # per-message strategy selection: "static" keeps the threshold
     # constants above; "adaptive" installs a core.governor.ChannelGovernor
     # per channel that picks inline/offload/coalesce/heap from measured

@@ -1,4 +1,8 @@
+from repro.ft.inject import FaultPlane, FaultSpec, InjectedFault
 from repro.ft.monitor import (Heartbeat, RestartManager, StepTimer,
                               StragglerMonitor)
+from repro.ft.supervisor import FabricSupervisor, reclaim_segments
 
-__all__ = ["Heartbeat", "RestartManager", "StepTimer", "StragglerMonitor"]
+__all__ = ["FaultPlane", "FaultSpec", "InjectedFault",
+           "Heartbeat", "RestartManager", "StepTimer", "StragglerMonitor",
+           "FabricSupervisor", "reclaim_segments"]

@@ -1,0 +1,237 @@
+"""Fabric supervision: restart a crashed serving shard, reclaim its shm.
+
+A :class:`~repro.ipc.worker.ServingFabric` that dies abruptly (killed,
+OOM, ``worker.crash`` injection) leaves two kinds of wreckage behind:
+
+- **orphaned shared memory** — the rendezvous arena, its registration
+  mutex, and every per-client transport arena + bulk-heap segment the
+  listener minted.  Nothing unlinks them (that was the dead process's
+  job), so they pin ``/dev/shm`` pages and — worse — block a restart:
+  re-creating a listener under the same rendezvous name fails while the
+  stale arena file exists.
+- **stranded clients** — :class:`~repro.ipc.worker.RemoteDispatcherClient`
+  peers mid-request, which is the half the clients themselves solve
+  (heartbeat staleness → ``reconnect()`` → idempotent replay).
+
+:class:`FabricSupervisor` owns the server half: it runs the fabric in a
+child process, watches it, and on death **reclaims every orphaned
+segment under the fabric's name prefix** before spawning a fresh
+incarnation under the *same* rendezvous name — so reconnecting clients
+find the replacement exactly where the casualty was.  Restarts are
+bounded (``max_restarts``) and counted; reclaimed segments are counted
+per kind (``arenas_reclaimed`` / ``heaps_reclaimed``).
+
+The fabric itself is built in the child by a spawn-safe **factory**
+(dotted ``module:function`` called as ``factory(name, policy)`` and
+returning a *started* fabric), because a live fabric holds threads and
+mapped arenas that cannot cross a process boundary.  An optional
+:class:`~repro.ft.inject.FaultPlane` spec is re-installed inside the
+child (via the same JSON used by ``REPRO_FAULT_PLANE``), which is how
+the chaos benchmark arms ``worker.crash`` in the serving process only.
+"""
+from __future__ import annotations
+
+import importlib
+import multiprocessing as mp
+import os
+import threading
+import time
+from typing import Optional
+
+from repro.core.policy import OffloadPolicy
+from repro.ft import inject as _inject
+
+#: where POSIX shared memory lives on Linux (``shared_memory.SharedMemory``
+#: names map 1:1 to files here; the transport's bulk heap is ``<name>.h``
+#: and the listener's registration mutex is ``<name>.lk``)
+SHM_DIR = "/dev/shm"
+
+
+def _fabric_entry(name: str, factory_path: str, policy: OffloadPolicy,
+                  plane_json: Optional[str]) -> None:
+    """Child main: build the fabric via the factory and serve until killed."""
+    if plane_json:
+        _inject.install(_inject.FaultPlane.from_spec_json(plane_json))
+    mod_name, fn_name = factory_path.split(":")
+    factory = getattr(importlib.import_module(mod_name), fn_name)
+    fabric = factory(name, policy)
+    try:
+        while True:
+            time.sleep(0.1)
+    except KeyboardInterrupt:
+        pass
+    finally:
+        fabric.close()
+
+
+def echo_fabric_factory(name: str, policy: OffloadPolicy):
+    """Spawn-safe reference factory (``repro.ft.supervisor:echo_fabric_factory``):
+    a started fabric serving ``echo`` / ``double`` / ``sum`` — what the
+    chaos benchmark and the recovery tests run in the supervised child."""
+    import numpy as np
+
+    from repro.core.dispatcher import RequestDispatcher
+    from repro.ipc.worker import ServingFabric
+
+    dispatcher = RequestDispatcher(policy)
+    dispatcher.register_handler("echo", lambda x: x)
+    dispatcher.register_handler("double", lambda x: x * 2)
+    dispatcher.register_handler("sum", lambda x: np.asarray(x).sum())
+    return ServingFabric(dispatcher, name=name, policy=policy,
+                         own_dispatcher=True).start()
+
+
+def reclaim_segments(prefix: str) -> dict:
+    """Unlink every ``/dev/shm`` segment whose name starts with ``prefix``.
+
+    Returns per-kind counts: ``arenas`` (ring/rendezvous arenas and the
+    registration mutex) and ``heaps`` (bulk-heap segments, ``*.h``).
+    Unlinking is safe while a surviving client still maps a segment —
+    POSIX keeps the mapping alive until the last unmap — so a stale
+    arena never outlives its last user, it just loses its name (which is
+    exactly what a same-name restart needs)."""
+    counts = {"arenas": 0, "heaps": 0}
+    try:
+        entries = os.listdir(SHM_DIR)
+    except OSError:
+        return counts
+    for entry in entries:
+        if not entry.startswith(prefix):
+            continue
+        try:
+            os.unlink(os.path.join(SHM_DIR, entry))
+        except OSError:
+            continue
+        counts["heaps" if entry.endswith(".h") else "arenas"] += 1
+    return counts
+
+
+class FabricSupervisor:
+    """Run a serving fabric in a child process; restart it when it dies.
+
+    ``factory`` is a dotted ``module:function`` path resolved *in the
+    child* (spawn-safe); it must return a started fabric listening under
+    ``name``.  The watch loop polls the child at ``check_interval_s``;
+    on death it reclaims every shm segment under the name prefix, then
+    (up to ``max_restarts`` times) spawns a replacement under the same
+    rendezvous name.  ``plane_json`` arms a
+    :class:`~repro.ft.inject.FaultPlane` inside the child only.
+    """
+
+    def __init__(self, name: str, factory: str,
+                 policy: Optional[OffloadPolicy] = None,
+                 max_restarts: int = 3,
+                 check_interval_s: float = 0.05,
+                 plane_json: Optional[str] = None,
+                 rearm_plane: bool = False,
+                 ctx: Optional[mp.context.BaseContext] = None):
+        self.name = name
+        self.factory = factory
+        self.policy = policy or OffloadPolicy()
+        self.max_restarts = max_restarts
+        self.check_interval_s = check_interval_s
+        self.plane_json = plane_json
+        # fault-plane site counters reset with each incarnation, so a
+        # deterministic schedule would re-fire in every replacement child;
+        # by default the plane arms the FIRST incarnation only ("the fault
+        # happened once") — rearm_plane=True re-arms every restart
+        self.rearm_plane = rearm_plane
+        self._ctx = ctx or mp.get_context("spawn")
+        self._proc: Optional[mp.process.BaseProcess] = None
+        self._thread: Optional[threading.Thread] = None
+        self._stop = threading.Event()
+        self._lock = threading.Lock()
+        self.restarts = 0
+        self.crashes = 0
+        self.arenas_reclaimed = 0
+        self.heaps_reclaimed = 0
+        #: last crash's exit code (None until the first death)
+        self.last_exitcode: Optional[int] = None
+
+    # -- lifecycle ------------------------------------------------------------
+    def _spawn(self) -> None:
+        plane = self.plane_json if (self.rearm_plane or self.restarts == 0) \
+            else None
+        self._proc = self._ctx.Process(
+            target=_fabric_entry,
+            args=(self.name, self.factory, self.policy, plane),
+            daemon=True)
+        self._proc.start()
+
+    def start(self) -> "FabricSupervisor":
+        """Spawn the fabric child and begin watching it."""
+        reclaim_segments(self.name)     # a stale name blocks the bind
+        self._spawn()
+        self._thread = threading.Thread(target=self._watch, daemon=True,
+                                        name="rocket-supervisor")
+        self._thread.start()
+        return self
+
+    def _watch(self) -> None:
+        while not self._stop.is_set():
+            proc = self._proc
+            if proc is not None and not proc.is_alive():
+                with self._lock:
+                    if self._stop.is_set():
+                        break
+                    self.crashes += 1
+                    self.last_exitcode = proc.exitcode
+                    self.reclaim()
+                    if self.restarts >= self.max_restarts:
+                        break
+                    self.restarts += 1
+                    self._spawn()
+            time.sleep(self.check_interval_s)
+
+    def reclaim(self) -> dict:
+        """Reclaim orphaned segments under the fabric's name prefix now
+        (also called automatically after each crash); returns counts."""
+        counts = reclaim_segments(self.name)
+        self.arenas_reclaimed += counts["arenas"]
+        self.heaps_reclaimed += counts["heaps"]
+        return counts
+
+    def alive(self) -> bool:
+        """True while the current fabric incarnation is running."""
+        proc = self._proc
+        return proc is not None and proc.is_alive()
+
+    def wait_alive(self, timeout_s: float = 10.0) -> bool:
+        """Block until the (possibly restarted) fabric child is running."""
+        deadline = time.perf_counter() + timeout_s
+        while time.perf_counter() < deadline:
+            if self.alive():
+                return True
+            time.sleep(0.01)
+        return False
+
+    def stats(self) -> dict:
+        """Supervision counters as one flat dict."""
+        return {"restarts": self.restarts, "crashes": self.crashes,
+                "arenas_reclaimed": self.arenas_reclaimed,
+                "heaps_reclaimed": self.heaps_reclaimed,
+                "alive": self.alive(),
+                "last_exitcode": self.last_exitcode}
+
+    def close(self, reclaim: bool = True) -> None:
+        """Stop watching, terminate the child, optionally reclaim shm."""
+        self._stop.set()
+        if self._thread is not None:
+            self._thread.join(timeout=self.policy.retry.join_timeout_s)
+            self._thread = None
+        proc = self._proc
+        if proc is not None and proc.is_alive():
+            proc.terminate()
+            proc.join(timeout=self.policy.retry.join_timeout_s)
+            if proc.is_alive():
+                proc.kill()
+                proc.join(timeout=1.0)
+        self._proc = None
+        if reclaim:
+            self.reclaim()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()

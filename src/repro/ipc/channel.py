@@ -86,6 +86,7 @@ import pickle
 import struct
 import threading
 import time
+import zlib
 from collections import OrderedDict, deque
 from typing import Any, Optional
 
@@ -111,10 +112,12 @@ from repro.core.governor import (
 from repro.core.latency import LatencyModel
 from repro.core.policy import Device, ExecutionMode, OffloadPolicy
 from repro.core.queuepair import drain_to_depth
+from repro.ft import inject as _inject
 from repro.ipc.heap import MAX_SEGMENTS, BulkHeap, HeapExhausted
 from repro.obs import trace as _trace
 from repro.ipc.ring import (
     FLAG_COALESCED,
+    FLAG_CRC,
     FLAG_HEAP,
     ChannelClosed,
     Ring,
@@ -141,6 +144,11 @@ PRIO_KEY = "__rocket_prio__"
 #: absolute deadline in ``time.perf_counter_ns()`` ticks (CLOCK_MONOTONIC
 #: on Linux — the same cross-process timebase the tracer uses; 0 = none)
 DEADLINE_KEY = "__rocket_dl__"
+#: idempotent request id: ``(client session id << 32) | job_id`` as one
+#: int (rides the tag codec like the keys above).  The serving fabric
+#: strips it and feeds the dispatcher's exactly-once dedup window, so a
+#: reconnecting client can replay unacked requests without re-execution.
+DEDUP_KEY = "__rocket_dd__"
 
 # ---------------------------------------------------------------------------
 # wire meta formats (first byte of the slot meta region)
@@ -791,6 +799,7 @@ class ChannelStats(HybridPollStats):
     frames_recv: int = 0
     meta_pickles: int = 0        # pickle.dumps on the send meta path
     meta_unpickles: int = 0      # pickle.loads on the recv meta path
+    corrupt_drops: int = 0       # slots quarantined by the meta CRC check
 
 
 # ---------------------------------------------------------------------------
@@ -919,7 +928,16 @@ class DataChannel:
         except BaseException:
             writer.abort()
             raise
-        writer.publish(nbytes, mlen, flags=flags)
+        meta_crc = zlib.crc32(writer.meta[:mlen]) \
+            if self.policy.meta_checksum else -1
+        if _inject._PLANE is not None:
+            corrupt = _inject.fire("channel.meta.corrupt")
+            if corrupt is not None and mlen > 0:
+                # flip a meta byte AFTER the checksum: the receiver's CRC
+                # verify (when enabled) quarantines this as a corrupt_drop
+                writer.meta[0] ^= (corrupt.arg or 0xFF) & 0xFF
+            _inject.stall("channel.doorbell.delay")
+        writer.publish(nbytes, mlen, flags=flags, meta_crc=meta_crc)
         if t0:
             rid = (header.get(_trace.RID_KEY, 0)
                    if isinstance(header, dict) else 0)
@@ -1108,8 +1126,10 @@ class DataChannel:
         for entry in frame.table:
             _FRAME_ENTRY.pack_into(mv, off, *entry)
             off += _FRAME_ENTRY.size
+        meta_crc = zlib.crc32(mv[:frame.meta_cursor]) \
+            if self.policy.meta_checksum else -1
         frame.writer.publish(frame.pay_cursor, frame.meta_cursor,
-                             flags=FLAG_COALESCED)
+                             flags=FLAG_COALESCED, meta_crc=meta_crc)
         self._frame = None
         self.stats.frames_sent += 1
         # one accounting pass per frame: the appends' deferred copy counts
@@ -1620,6 +1640,22 @@ class DataChannel:
             return item
         return RecvLease(item[0], item[1], None)   # already copied out
 
+    def _crc_ok(self, reader: SlotReader) -> bool:
+        """Verify a FLAG_CRC slot's meta checksum.  A mismatch quarantines
+        the slot: counted (``corrupt_drops``), released, skipped — the
+        drain loop survives instead of crashing on undecodable meta.  A
+        corrupt FLAG_HEAP descriptor necessarily strands its extents
+        (their addresses were in the corrupt meta); the stamp-based heap
+        reaper reclaims them, which is the whole point of datable stamps."""
+        if reader.meta_crc < 0:
+            return True
+        if zlib.crc32(reader.slot.meta_view[:reader.meta_nbytes]) == \
+                reader.meta_crc:
+            return True
+        self.stats.corrupt_drops += 1
+        reader.release()
+        return False
+
     def _lease_from_reader(self, reader: SlotReader, copy: bool):
         if reader.flags & FLAG_COALESCED:
             msgs = self._msgs_from_frame(reader, copy)
@@ -1659,6 +1695,9 @@ class DataChannel:
                 reader.release()
                 hint_nbytes = 0
                 continue
+            if (reader.flags & FLAG_CRC) and not self._crc_ok(reader):
+                hint_nbytes = 0
+                continue
             return self._lease_from_reader(reader, copy)
 
     def try_recv(self, copy: bool = True):
@@ -1673,6 +1712,8 @@ class DataChannel:
                 return None
             if reader.meta_nbytes == 0:     # aborted reserve: skip sentinel
                 reader.release()
+                continue
+            if (reader.flags & FLAG_CRC) and not self._crc_ok(reader):
                 continue
             return self._lease_from_reader(reader, copy)
 
@@ -1695,6 +1736,8 @@ class DataChannel:
                 break
             if reader.meta_nbytes == 0:     # aborted reserve: skip sentinel
                 reader.release()
+                continue
+            if (reader.flags & FLAG_CRC) and not self._crc_ok(reader):
                 continue
             out.append(self._lease_from_reader(reader, copy))
         return out

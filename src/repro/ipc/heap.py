@@ -57,6 +57,7 @@ from typing import Callable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.ft import inject as _inject
 from repro.ipc.shm import SharedMemoryArena, attach_retry
 
 # direction indices: match the transport's ring naming (c2s = creator tx)
@@ -240,6 +241,11 @@ class BulkHeap:
             raise ValueError(
                 f"allocation of {nbytes} B exceeds heap direction capacity "
                 f"{N * E} B — raise heap_extents/heap_extent_bytes")
+        if _inject._PLANE is not None \
+                and _inject.fire("heap.exhausted") is not None:
+            # forced exhaustion: report backpressure though extents are free
+            self.stats.exhausted += 1
+            return None
         with self._alloc_lock:
             return self._try_alloc_locked(nbytes, need)
 
@@ -317,6 +323,11 @@ class BulkHeap:
         table = self._tables[direction]
         if table is None:
             return      # heap already closed/reaped (stale lease release)
+        if _inject._PLANE is not None \
+                and _inject.fire("heap.leak") is not None:
+            # suppressed free: the extents stay ALLOCATED with their
+            # wall-clock stamp — a datable leak for the reaper to find
+            return
         E = self.spec.extent_bytes
         for off, cap in segments:
             start, count = off // E, -(-cap // E)

@@ -41,7 +41,8 @@ from typing import Callable, Optional
 from repro.core.latency import LatencyModel
 from repro.core.policy import OffloadPolicy
 from repro.ipc.shm import SharedMemoryArena, ShmMutex, attach_retry
-from repro.ipc.transport import ShmTransport, TransportSpec, _unique_name
+from repro.ipc.transport import (ShmTransport, TransportSpec, _unique_name,
+                                 _W_ATTACHER_CLOSED as _W_T_ATTACHER_CLOSED)
 
 _MAILBOX_BYTES = 4096
 _W_ALIVE, _W_REQ, _W_ACK, _W_REQ_LOCK, _W_REP_LOCK, _W_ACCEPTED = range(6)
@@ -105,6 +106,10 @@ class Listener:
         self.max_clients = max_clients
         self.on_accept = on_accept
         self.accepted = 0
+        # registrations answered with an error because the client's own
+        # connect deadline had already passed (minting a transport for a
+        # gone client would leak its arena until the orphan reaper runs)
+        self.stale_registrations = 0
         self._arena = SharedMemoryArena(self.name, size=2 * _MAILBOX_BYTES,
                                         create=True)
         self._words = self._arena.control_words()
@@ -123,6 +128,18 @@ class Listener:
         if not self.pending():
             return None
         record = _read_mailbox(self._arena, _W_REQ_LOCK, _REQ_OFF)
+        # stale-mailbox reclaim: the registration carries the client's own
+        # connect deadline (CLOCK_MONOTONIC, cross-process comparable); a
+        # record already past it belongs to a client that gave up — mint
+        # no transport (it would leak until the orphan reaper), just ACK
+        # with an error so the protocol stays in step
+        reg_deadline = record.get("deadline_ns", 0)
+        if reg_deadline and time.perf_counter_ns() > reg_deadline:
+            self.stale_registrations += 1
+            _write_mailbox(self._arena, _W_REP_LOCK, _REP_OFF,
+                           {"error": "registration expired"})
+            self._words[_W_ACK] += 1
+            return None
         if self.accepted >= self.max_clients:
             reply = {"error": f"listener full ({self.max_clients} clients)"}
             transport = None
@@ -202,7 +219,11 @@ def connect(listener_name: str, policy: Optional[OffloadPolicy] = None,
             raise ConnectionError(f"listener {listener_name!r} is shut down")
         # under the mutex the mailbox is ours; post and await the answer
         _write_mailbox(arena, _W_REQ_LOCK, _REQ_OFF,
-                       {"pid": os.getpid(), "meta": meta})
+                       {"pid": os.getpid(), "meta": meta,
+                        # our own give-up time: lets accept_once drop the
+                        # record as stale instead of minting a transport
+                        # no one will ever attach
+                        "deadline_ns": int(deadline * 1e9)})
         ticket = int(words[_W_REQ]) + 1
         words[_W_REQ] = ticket
         while int(words[_W_ACK]) < ticket:
@@ -228,6 +249,22 @@ def connect(listener_name: str, policy: Optional[OffloadPolicy] = None,
     if "error" in reply:
         raise ConnectionError(f"listener {listener_name!r} refused: "
                               f"{reply['error']}")
-    return ShmTransport.attach(reply["name"], policy=policy, latency=latency,
-                               timeout_s=max(deadline - time.perf_counter(),
-                                             1.0))
+    try:
+        return ShmTransport.attach(reply["name"], policy=policy,
+                                   latency=latency,
+                                   timeout_s=max(
+                                       deadline - time.perf_counter(), 1.0))
+    except Exception:
+        # the server already minted an arena for us; raise its
+        # attacher-closed flag so the reactor reaps (and unlinks) it now
+        # instead of waiting out the orphan timeout — a failed connect
+        # must not leak what it caused to be created
+        try:
+            half = attach_retry(reply["name"], 1.0)
+            try:
+                half.control_words()[_W_T_ATTACHER_CLOSED] = 1
+            finally:
+                half.close()
+        except Exception:
+            pass
+        raise

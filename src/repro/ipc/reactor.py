@@ -72,6 +72,7 @@ import numpy as np
 
 from repro.core.copyengine import SGList, get_engine
 from repro.core.policy import OffloadPolicy
+from repro.ft import inject as _inject
 from repro.ipc.channel import PRIO_KEY, RecvLease
 from repro.ipc.ring import ChannelClosed
 from repro.ipc.transport import ShmTransport
@@ -103,7 +104,8 @@ class Connection:
             self.replied += 1
             self.inflight -= 1
 
-    def reply(self, tree, header: dict, timeout_s: float = 5.0) -> None:
+    def reply(self, tree, header: dict,
+              timeout_s: Optional[float] = None) -> None:
         """Send a reply on this client's transport and settle accounting.
 
         A reply whose payload is a single ``result`` array takes the
@@ -112,12 +114,17 @@ class Connection:
         no staging tree, no per-send descriptor pickle).  Anything else
         (error replies, odd shapes) falls back to a plain sync send.
 
-        The timeout is deliberately short and a failure marks the
-        connection dead: replies run on the *shared* dispatcher worker
-        thread, so a vanished client whose reply ring filled up must cost
-        at most one bounded stall — not a 30s head-of-line block per
-        reply while every other client starves.
+        The timeout (default ``policy.retry.reply_timeout_s``) is
+        deliberately short and a failure marks the connection dead:
+        replies run on the *shared* dispatcher worker thread, so a
+        vanished client whose reply ring filled up must cost at most one
+        bounded stall — not a 30s head-of-line block per reply while
+        every other client starves.
         """
+        if timeout_s is None:
+            timeout_s = self.transport.policy.retry.reply_timeout_s
+        if _inject._PLANE is not None:
+            _inject.stall("reactor.reply.stall")
         t0 = _trace.now() if _trace.TRACE.enabled else 0
         try:
             arr = tree.get("result") if isinstance(tree, dict) else None
@@ -154,6 +161,8 @@ class ReactorStats:
     zero_copy_recvs: int = 0   # requests delivered as held leases (no copy)
     heap_reaped: int = 0       # leaked bulk-heap extents freed at reap time
     batched_drains: int = 0    # drain pulls that yielded >1 message at once
+    stale_reaped: int = 0      # conns reaped on heartbeat staleness (crash)
+    orphan_reaped: int = 0     # never-attached handshake orphans reclaimed
 
 
 class Reactor:
@@ -305,6 +314,8 @@ class Reactor:
         total = 0
         for conn in sorted(self.connections(),
                            key=lambda c: (c.lane, c.cid)):
+            tr = conn.transport
+            tr.heartbeat()              # server liveness stamp (rate-limited)
             n = self._drain(conn)
             total += n
             # reap only after an *empty* drain: a closing peer's in-flight
@@ -312,8 +323,25 @@ class Reactor:
             # down.  A dead connection (reply path failed) is reaped
             # unconditionally — late callbacks hitting its closed transport
             # are swallowed by the dispatcher's completion containment.
-            if conn.dead or (n == 0 and conn.inflight == 0
-                             and conn.transport.peer_closed):
+            # Two liveness verdicts join the closed flag: a *crashed*
+            # heartbeating client (stamps stopped: stale) and a handshake
+            # orphan (registered but never attached/stamped/sent within the
+            # connect deadline) — both leak arenas/extents if left alone.
+            if not (conn.dead or (n == 0 and conn.inflight == 0)):
+                continue
+            stale = orphan = False
+            if not conn.dead and not tr.peer_closed:
+                if tr.peer_heartbeat_stamped:
+                    stale = tr.peer_stale()
+                else:
+                    orphan = (conn.received == 0
+                              and tr.peer_heartbeat_age_s()
+                              > tr.policy.retry.connect_timeout_s)
+            if conn.dead or tr.peer_closed or stale or orphan:
+                if stale:
+                    self.stats.stale_reaped += 1
+                if orphan:
+                    self.stats.orphan_reaped += 1
                 self._reap(conn)
         self.stats.messages += total
         return total
@@ -344,7 +372,7 @@ class Reactor:
         """Stop the loop and close every registered transport."""
         self._stop.set()
         if self._thread is not None:
-            self._thread.join(timeout=5)
+            self._thread.join(timeout=self.policy.retry.join_timeout_s)
             self._thread = None
         with self._lock:
             conns, self._conns = list(self._conns.values()), {}

@@ -32,6 +32,7 @@ import numpy as np
 
 from repro.core.latency import LatencyModel
 from repro.core.policy import OffloadPolicy
+from repro.ft import inject as _inject
 from repro.ipc.shm import SharedMemoryArena
 from repro.obs import trace as _trace
 
@@ -48,8 +49,13 @@ EMPTY, WRITING, READY, READING = 0, 1, 2, 3
 # sub-messages (sub-message table in the meta region, payloads packed
 # back-to-back) published under ONE state flip — the small-message fast
 # path that amortizes slot claim, meta encode, and doorbell K-ways.
+# FLAG_CRC marks a slot whose header word 5 carries a CRC32 over the
+# published meta bytes (OffloadPolicy.meta_checksum): the receiver
+# verifies before decoding and quarantines mismatches as counted
+# ``corrupt_drops`` instead of crashing the drain loop.
 FLAG_HEAP = 1
 FLAG_COALESCED = 2
+FLAG_CRC = 4
 
 
 class ChannelClosed(EOFError):
@@ -177,14 +183,31 @@ class SlotWriter:
         return self.slot.meta_view
 
     def publish(self, payload_nbytes: int, meta_nbytes: int = 0,
-                flags: int = 0) -> None:
+                flags: int = 0, meta_crc: int = -1) -> None:
         """Flip the slot READY — the paper's completion-flag store.
 
         ``flags`` is the message-kind word (:data:`FLAG_HEAP`: the payload
         lives in bulk-heap extents named by the meta, ``payload_nbytes``
         then counts *heap* bytes and the slot payload region is unused).
-        Always stored, so slot reuse cannot leak a stale flag."""
+        Always stored, so slot reuse cannot leak a stale flag.
+
+        ``meta_crc >= 0`` stores a CRC32 of the meta bytes in header
+        word 5 and raises :data:`FLAG_CRC`, published atomically with the
+        state flip (the checksum rides the same doorbell it guards)."""
         s = self.slot
+        if _inject._PLANE is not None and meta_nbytes > 0:
+            if _inject.fire("ring.publish.drop") is not None:
+                # the message vanishes in flight: publish the zero-meta
+                # skip sentinel so the SPSC cursor chain stays intact
+                payload_nbytes = meta_nbytes = flags = 0
+                meta_crc = -1
+            else:
+                torn = _inject.fire("ring.publish.torn")
+                if torn is not None:
+                    s.meta_view[0] ^= (torn.arg or 0xFF) & 0xFF
+        if meta_crc >= 0:
+            s.hdr[5] = meta_crc
+            flags |= FLAG_CRC
         s.payload_nbytes = payload_nbytes
         s.meta_nbytes = meta_nbytes
         s.flags = flags
@@ -208,6 +231,8 @@ class SlotReader:
         self.payload_nbytes = slot.payload_nbytes
         self.meta_nbytes = slot.meta_nbytes
         self.flags = slot.flags
+        # published meta checksum (valid only when flags & FLAG_CRC)
+        self.meta_crc = int(slot.hdr[5]) if (self.flags & FLAG_CRC) else -1
 
     @property
     def payload(self) -> memoryview:
@@ -376,6 +401,8 @@ class Ring:
     # -- consumer side --------------------------------------------------------
     def try_poll(self) -> Optional[SlotReader]:
         """Take the next READY slot without blocking; None when empty."""
+        if _inject._PLANE is not None:
+            _inject.stall("ring.poll.stall")
         slot = self._slots[self._head % self.spec.n_slots]
         if slot.state != READY:
             return None
@@ -386,6 +413,8 @@ class Ring:
     def wait_recv(self, timeout_s: float = 30.0,
                   hint_nbytes: int = 0) -> SlotReader:
         """Block (hybrid polling) until a message is READY and lease it."""
+        if _inject._PLANE is not None:
+            _inject.stall("ring.poll.stall")
         slot = self._slots[self._head % self.spec.n_slots]
         if not self._wait_state(slot, READY, timeout_s, hint_nbytes):
             raise TimeoutError(f"no message within {timeout_s}s")

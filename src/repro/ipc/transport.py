@@ -24,6 +24,16 @@ Arena control-word map::
     3  descriptor-ready flag
     4/5   c2s data produced/consumed        6/7   s2c data produced/consumed
     8/9   c2s ctrl produced/consumed        10/11 s2c ctrl produced/consumed
+    12 creator heartbeat stamp   13 attacher heartbeat stamp
+
+Heartbeat words carry ``time.perf_counter_ns()`` stamps (CLOCK_MONOTONIC
+on Linux — one timebase for every process on the host, the same one the
+tracer and deadlines use).  Each side stamps only its own word (server on
+reactor sweep, client on send), so the store is the usual single-writer
+aligned int64; staleness thresholds live on ``OffloadPolicy.retry``.  A
+peer that *crashes* (never raises its closed flag) is detected by
+:meth:`ShmTransport.peer_stale` going true — the trigger for client
+reconnect and server-side connection reap.
 """
 from __future__ import annotations
 
@@ -45,6 +55,7 @@ _DESCR_BYTES = 4096
 _W_DESCR_LOCK, _W_CREATOR_CLOSED, _W_ATTACHER_CLOSED, _W_READY = 0, 1, 2, 3
 _RING_WORDS = {"c2s_data": (4, 5), "s2c_data": (6, 7),
                "c2s_ctrl": (8, 9), "s2c_ctrl": (10, 11)}
+_W_HB_CREATOR, _W_HB_ATTACHER = 12, 13
 
 
 @dataclass(frozen=True)
@@ -155,6 +166,13 @@ class ShmTransport:
         mine = (_W_CREATOR_CLOSED if side == "creator"
                 else _W_ATTACHER_CLOSED)
         self._my_closed_word = words[mine:mine + 1]
+        # liveness stamps: each side writes only its own word
+        mine_hb = _W_HB_CREATOR if side == "creator" else _W_HB_ATTACHER
+        peer_hb = _W_HB_ATTACHER if side == "creator" else _W_HB_CREATOR
+        self._my_hb_word = words[mine_hb:mine_hb + 1]
+        self._peer_hb_word = words[peer_hb:peer_hb + 1]
+        self._last_beat = 0.0
+        self._born = time.perf_counter()
 
     # -- construction ---------------------------------------------------------
     @classmethod
@@ -223,6 +241,55 @@ class ShmTransport:
         word = (_W_ATTACHER_CLOSED if self.side == "creator"
                 else _W_CREATOR_CLOSED)
         return int(self.arena.control_words()[word]) != 0
+
+    # -- liveness (heartbeat words 12/13) -------------------------------------
+    def heartbeat(self, force: bool = False) -> None:
+        """Stamp my liveness word, rate-limited to
+        ``policy.retry.heartbeat_interval_s`` (one clock read per call in
+        the common no-op case; the server calls this every reactor sweep,
+        the client on every send)."""
+        now = time.perf_counter()
+        if not force and \
+                now - self._last_beat < self.policy.retry.heartbeat_interval_s:
+            return
+        self._last_beat = now
+        word = self._my_hb_word
+        if word is not None:
+            word[0] = time.perf_counter_ns()
+
+    @property
+    def peer_heartbeat_stamped(self) -> bool:
+        """True once the peer has stamped its heartbeat word at least
+        once.  Liveness-based reaping keys on this: a peer that never
+        heartbeats (raw transports, older clients) is never stale-reaped —
+        only a peer that *was* heartbeating and stopped is presumed
+        crashed."""
+        word = self._peer_hb_word
+        return word is not None and int(word[0]) != 0
+
+    def peer_heartbeat_age_s(self) -> float:
+        """Seconds since the peer last stamped its heartbeat word; a peer
+        that never stamped is as old as this endpoint (so a connection
+        whose peer never showed up still goes stale)."""
+        word = self._peer_hb_word
+        if word is None:
+            return float("inf")
+        stamp = int(word[0])
+        if stamp == 0:
+            return time.perf_counter() - self._born
+        return max(0.0, (time.perf_counter_ns() - stamp) / 1e9)
+
+    def peer_stale(self, stale_s: Optional[float] = None) -> bool:
+        """Liveness verdict: the peer announced shutdown, or its heartbeat
+        is older than ``stale_s`` (default
+        ``policy.retry.heartbeat_stale_s``).  This is what distinguishes a
+        *crashed* peer (flag never raised) from a merely idle one — the
+        trigger for client ``reconnect()`` and server-side reap."""
+        if self.peer_closed:
+            return True
+        if stale_s is None:
+            stale_s = self.policy.retry.heartbeat_stale_s
+        return self.peer_heartbeat_age_s() > stale_s
 
     def send(self, tree, header: Optional[dict] = None, **kw):
         """Send a pytree on the data channel (mode semantics from policy)."""
@@ -297,6 +364,8 @@ class ShmTransport:
         self.announce_close()
         self.data.close()
         self._my_closed_word = None
+        self._my_hb_word = None
+        self._peer_hb_word = None
         for r in self._rings.values():
             r.drop_views()
         try:

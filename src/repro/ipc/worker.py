@@ -29,8 +29,10 @@ from __future__ import annotations
 
 import importlib
 import multiprocessing as mp
+import os
 import threading
 import time
+from collections import deque
 from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass
 from typing import Optional
@@ -41,8 +43,9 @@ from repro.core.dispatcher import (DeadlineExceeded, QueryHandler, Request,
                                    RequestDispatcher)
 from repro.core.latency import LatencyModel
 from repro.core.policy import ExecutionMode, OffloadPolicy
+from repro.ft import inject as _inject
 from repro.ft.monitor import SLOMonitor
-from repro.ipc.channel import DEADLINE_KEY, PRIO_KEY
+from repro.ipc.channel import DEADLINE_KEY, DEDUP_KEY, PRIO_KEY
 from repro.ipc.ring import ChannelClosed
 from repro.ipc.transport import ShmTransport, TransportSpec
 from repro.obs import trace as _trace
@@ -112,7 +115,7 @@ def _producer_entry(name: str, source_spec: dict, policy: OffloadPolicy,
                            mode="sync")
             # linger: a late stop makes the consumer's close racefree, and a
             # late seek (restore on a finished stream) restarts production
-            deadline = time.perf_counter() + 30.0
+            deadline = time.perf_counter() + policy.retry.linger_timeout_s
             resumed = False
             while time.perf_counter() < deadline:
                 cmd = transport.ctrl.try_recv_msg()
@@ -139,8 +142,11 @@ class ProducerHandle:
     process: mp.process.BaseProcess
     gen: int = 0                 # current seek generation (0 = initial stream)
 
-    def recv_batch(self, timeout_s: float = 60.0):
-        """Next (batch, header); header["eof"] marks end of stream."""
+    def recv_batch(self, timeout_s: Optional[float] = None):
+        """Next (batch, header); header["eof"] marks end of stream.
+        Default timeout is ``policy.retry.query_timeout_s``."""
+        if timeout_s is None:
+            timeout_s = self.transport.policy.retry.query_timeout_s
         return self.transport.recv(timeout_s=timeout_s)
 
     def seek(self, step: int, seed: Optional[int] = None) -> int:
@@ -154,11 +160,16 @@ class ProducerHandle:
         self.transport.send_msg(msg)
         return self.gen
 
-    def stop(self, timeout_s: float = 10.0) -> None:
-        """Stop the producer (command, then closed-flag, then terminate)."""
+    def stop(self, timeout_s: Optional[float] = None) -> None:
+        """Stop the producer (command, then closed-flag, then terminate).
+        Default timeout is ``policy.retry.join_timeout_s``."""
+        retry = self.transport.policy.retry
+        if timeout_s is None:
+            timeout_s = retry.join_timeout_s
         try:
             if self.process.is_alive():
-                self.transport.send_msg({"cmd": "stop"}, timeout_s=2.0)
+                self.transport.send_msg(
+                    {"cmd": "stop"}, timeout_s=retry.shutdown_send_timeout_s)
         except (TimeoutError, ChannelClosed, ValueError):
             pass
         # raise our closed flag first: a producer blocked on a full ring
@@ -167,7 +178,7 @@ class ProducerHandle:
         self.process.join(timeout=timeout_s)
         if self.process.is_alive():
             self.process.terminate()
-            self.process.join(timeout=5)
+            self.process.join(timeout=retry.join_timeout_s)
         self.transport.close()
 
 
@@ -226,9 +237,10 @@ class DispatcherServer:
             self._reply(job_id, None, f"{type(e).__name__}: {e}")
 
     def _loop(self) -> None:
+        poll_s = self.transport.policy.retry.recv_poll_s
         while not self._stop.is_set():
             try:
-                tree, header = self.transport.recv(timeout_s=0.05)
+                tree, header = self.transport.recv(timeout_s=poll_s)
             except TimeoutError:
                 continue
             except ChannelClosed:
@@ -252,7 +264,8 @@ class DispatcherServer:
         """Stop the serve loop and drain the handler pool."""
         self._stop.set()
         if self._thread is not None:
-            self._thread.join(timeout=5)
+            self._thread.join(
+                timeout=self.transport.policy.retry.join_timeout_s)
         self._pool.shutdown(wait=True)
 
 
@@ -302,7 +315,7 @@ class ServingFabric:
                  max_clients: int = 64,
                  max_drain_per_sweep: int = 8,
                  max_inflight: int = 16,
-                 reply_timeout_s: float = 5.0,
+                 reply_timeout_s: Optional[float] = None,
                  own_dispatcher: bool = False,
                  reactors: int = 1,
                  default_deadline_ms: Optional[float] = None):
@@ -311,7 +324,8 @@ class ServingFabric:
 
         self.dispatcher = dispatcher
         self.policy = policy or dispatcher.policy
-        self.reply_timeout_s = reply_timeout_s
+        self.reply_timeout_s = (reply_timeout_s if reply_timeout_s is not None
+                                else self.policy.retry.reply_timeout_s)
         self._own_dispatcher = own_dispatcher
         # server-side deadline applied (from arrival time) to requests that
         # carry none of their own — 0 disables
@@ -413,6 +427,11 @@ class ServingFabric:
             deadline_ns = 0
         if not deadline_ns and self.default_deadline_ns:
             deadline_ns = time.perf_counter_ns() + self.default_deadline_ns
+        # idempotent request id (exactly-once replay after reconnect):
+        # stripped here, fed to the dispatcher's dedup window
+        dedup = header.pop(DEDUP_KEY, None)
+        if not isinstance(dedup, int) or isinstance(dedup, bool):
+            dedup = None
         tree = lease.tree
         rid = lease.rid
         t_arr = time.perf_counter()
@@ -446,7 +465,7 @@ class ServingFabric:
             return {"op": op, "data": data,
                     "mode": ExecutionMode(mode),   # validated HERE, not
                     "on_complete": reply,          # mid-batch in submit_many
-                    "rid": rid,
+                    "rid": rid, "dedup": dedup,
                     "priority": priority, "deadline_ns": deadline_ns,
                     "lease": lease if lease.held else None}
         except Exception as e:
@@ -465,6 +484,11 @@ class ServingFabric:
         """Reactor thread: feed one drained batch — e.g. a client's whole
         coalesced frame — into the dispatcher as one ``submit_many``, so
         K wire-microbatched requests enter the batching window together."""
+        if _inject._PLANE is not None \
+                and _inject.fire("worker.crash") is not None:
+            # hard process death mid-batch — the chaos drill the supervisor
+            # and reconnecting clients exist for (no cleanup on purpose)
+            os._exit(23)
         items = [it for it in (self._prepare(conn, lease)
                                for lease in leases) if it is not None]
         if items:
@@ -528,7 +552,23 @@ class ServingFabric:
 
 
 class RemoteDispatcherClient:
-    """Client-process side: the paper's request/query API over the wire."""
+    """Client-process side: the paper's request/query API over the wire.
+
+    **Crash recovery**: a client minted by :meth:`connect` is resilient
+    to server death.  Every request carries an idempotent id
+    (``(session_id << 32) | job_id`` under
+    :data:`~repro.ipc.channel.DEDUP_KEY`) and is tracked as *unacked*
+    until its reply lands; when the transport dies or the server's
+    heartbeat goes stale, :meth:`reconnect` re-registers through the
+    listener (bounded retries with exponential backoff —
+    ``policy.retry``) and resubmits every unacked request.  The server's
+    dedup window makes the replay exactly-once: re-executions are
+    suppressed and duplicate replies are filtered here (counted in
+    ``dup_replies``; requests whose reply never arrives at all are
+    counted in ``lost_replies`` when their query finally times out).
+    The receiver thread stamps the client-side heartbeat word so the
+    server can tell a live-but-idle client from a dead one.
+    """
 
     def __init__(self, transport: ShmTransport,
                  policy: Optional[OffloadPolicy] = None,
@@ -540,30 +580,53 @@ class RemoteDispatcherClient:
         self.queries = QueryHandler(self.latency, self.policy)
         self._own_transport = own_transport
         self.lane = 0                      # default priority for request()
+        # 32-bit session nonce: scopes idempotent ids to this client life
+        self.session_id = int.from_bytes(os.urandom(4), "little") or 1
         self._ids = iter(range(1, 1 << 62))
         self._rids: dict[int, int] = {}    # job_id -> trace request id
         self._lock = threading.Lock()
         self._recv_thread: Optional[threading.Thread] = None
         self._stop = threading.Event()
+        # reconnect-with-replay state (populated by connect())
+        self._listener_name: Optional[str] = None
+        self._latency_arg = latency
+        self._policy_arg = policy
+        self._reconnect_lock = threading.Lock()
+        # serializes receiver-thread transport use against the reconnect
+        # swap: closing an arena out from under a blocked recv would tear
+        # live memoryviews (BufferError) instead of failing cleanly
+        self._transport_lock = threading.RLock()
+        self._unacked: dict[int, tuple[dict, np.ndarray]] = {}
+        self._completed: set[int] = set()
+        self._completed_q: deque = deque()
+        self._completed_cap = 4 * self.policy.retry.dedup_window
+        self.reconnects = 0
+        self.retries = 0
+        self.dup_replies = 0
+        self.lost_replies = 0
 
     @classmethod
     def connect(cls, listener_name: str,
                 policy: Optional[OffloadPolicy] = None,
                 latency: Optional[LatencyModel] = None,
-                timeout_s: float = 30.0,
+                timeout_s: Optional[float] = None,
                 lane: int = 0) -> "RemoteDispatcherClient":
         """Register with a :class:`ServingFabric` by rendezvous name and
         return a ready client owning its dedicated transport.  ``lane``
         hints the client's priority class at accept time (the server
         seeds its connection's drain lane before the first request) and
-        becomes the default ``priority`` for :meth:`request`."""
+        becomes the default ``priority`` for :meth:`request`.  Default
+        ``timeout_s`` is ``policy.retry.connect_timeout_s``."""
         from repro.ipc.listener import connect as fabric_connect
+        if timeout_s is None:
+            timeout_s = (policy or OffloadPolicy()).retry.connect_timeout_s
         transport = fabric_connect(listener_name, policy=policy,
                                    latency=latency, timeout_s=timeout_s,
                                    meta={"lane": lane} if lane else None)
         client = cls(transport, policy=policy, latency=latency,
                      own_transport=True)
         client.lane = lane
+        client._listener_name = listener_name
         return client
 
     def _ensure_receiver(self) -> None:
@@ -575,20 +638,99 @@ class RemoteDispatcherClient:
                 self._recv_thread.start()
 
     def _recv_loop(self) -> None:
+        poll_s = self.policy.retry.recv_poll_s
         while not self._stop.is_set():
-            try:
-                tree, header = self.transport.recv(timeout_s=0.05)
-            except TimeoutError:
+            failed = False
+            with self._transport_lock:
+                transport = self.transport
+                try:
+                    transport.heartbeat()  # liveness stamp (rate-limited)
+                    tree, header = transport.recv(timeout_s=poll_s)
+                except TimeoutError:
+                    continue
+                except Exception:
+                    # transport torn down (server death / reconnect swap)
+                    failed = True
+            if failed:
+                # idle until reconnect() installs a fresh transport or we
+                # stop — only a reconnectable client keeps the thread alive
+                if self._listener_name is None:
+                    break
+                time.sleep(poll_s)
                 continue
-            except ChannelClosed:
-                break
             err = header.get("error")
             result = RuntimeError(err) if err else tree["result"]
             if _trace.TRACE.enabled:
                 rid = header.get(_trace.RID_KEY, 0)
                 if isinstance(rid, int) and rid:
                     _trace.instant(_trace.CLIENT_RECV, rid=rid)
-            self.queries.complete(header["job_id"], result)
+            job_id = header["job_id"]
+            with self._lock:
+                if job_id in self._completed:
+                    # replayed request answered twice (original completed
+                    # after the resubmit raced it) — exactly-once delivery
+                    # means dropping it here, counted
+                    self.dup_replies += 1
+                    continue
+                self._completed.add(job_id)
+                self._completed_q.append(job_id)
+                while len(self._completed_q) > self._completed_cap:
+                    self._completed.discard(self._completed_q.popleft())
+                self._unacked.pop(job_id, None)
+            self.queries.complete(job_id, result)
+
+    # -- crash recovery -------------------------------------------------------
+    def reconnect(self) -> None:
+        """Re-register through the listener and replay unacked requests.
+
+        Bounded attempts (``policy.retry.max_reconnects``) with
+        exponential backoff between them; the old transport is closed
+        (its arena unlinks once the server reaps it) and every request
+        still awaiting a reply is resubmitted with its original
+        idempotent id — the server's dedup window turns the replay into
+        exactly-once execution.  Raises ``ConnectionError`` when every
+        attempt fails; only clients from :meth:`connect` can reconnect.
+        """
+        if self._listener_name is None:
+            raise ConnectionError("client has no listener to reconnect to")
+        from repro.ipc.listener import connect as fabric_connect
+        retry = self.policy.retry
+        with self._reconnect_lock:
+            last: Optional[Exception] = None
+            for attempt in range(max(1, retry.max_reconnects)):
+                try:
+                    transport = fabric_connect(
+                        self._listener_name, policy=self._policy_arg,
+                        latency=self._latency_arg,
+                        timeout_s=retry.connect_timeout_s,
+                        meta={"lane": self.lane} if self.lane else None)
+                except Exception as e:
+                    last = e
+                    time.sleep(retry.backoff_s(attempt))
+                    continue
+                with self._transport_lock:
+                    # swap under the receiver's lock: close must not tear
+                    # views out from under a blocked recv
+                    old, self.transport = self.transport, transport
+                    try:
+                        old.close()
+                    except Exception:
+                        pass
+                self.reconnects += 1
+                self._resubmit_unacked()
+                return
+            raise ConnectionError(
+                f"reconnect to {self._listener_name!r} failed after "
+                f"{retry.max_reconnects} attempts") from last
+
+    def _resubmit_unacked(self) -> None:
+        """Replay every request still awaiting a reply, oldest first, on
+        the (fresh) transport — same headers, same idempotent ids."""
+        with self._lock:
+            pending = sorted(self._unacked.items())
+        for _job_id, (header, data) in pending:
+            self.transport.send({"data": data}, header=dict(header),
+                                mode="sync")
 
     def request(self, op: str, data: np.ndarray,
                 mode: ExecutionMode | str | None = None,
@@ -608,7 +750,12 @@ class RemoteDispatcherClient:
         with self._lock:
             job_id = next(self._ids)
         data = np.asarray(data)
-        header = {"job_id": job_id, "op": op, "mode": mode.value}
+        header = {"job_id": job_id, "op": op, "mode": mode.value,
+                  # idempotent request id: lets the server suppress
+                  # re-execution when this request is replayed after a
+                  # reconnect (session-scoped, so restarts never collide)
+                  DEDUP_KEY: (self.session_id << 32)
+                  | (job_id & 0xFFFFFFFF)}
         priority = self.lane if priority is None else int(priority)
         if priority:
             header[PRIO_KEY] = priority
@@ -628,8 +775,18 @@ class RemoteDispatcherClient:
         self._ensure_receiver()
         self.queries.register(Request(job_id, op, None, mode,
                                       nbytes=int(data.nbytes)))
+        # track as unacked BEFORE the send: if the transport dies inside
+        # send(), the reconnect replay below already covers this request
+        with self._lock:
+            self._unacked[job_id] = (header, data)
         t0 = _trace.now() if rid else 0
-        self.transport.send({"data": data}, header=header, mode=mode)
+        try:
+            self.transport.send({"data": data}, header=header, mode=mode)
+            self.transport.heartbeat()
+        except (ChannelClosed, TimeoutError, ValueError, OSError):
+            if self._listener_name is None:
+                raise
+            self.reconnect()       # resubmits unacked, this request included
         if rid:
             _trace.emit(_trace.CLIENT_SEND, t0, rid=rid,
                         arg=min(int(data.nbytes), 0xFFFFFFFF))
@@ -637,21 +794,87 @@ class RemoteDispatcherClient:
             return self.query(job_id)
         return job_id
 
-    def query(self, job_id: int, timeout: float = 60.0):
+    def query(self, job_id: int, timeout: Optional[float] = None):
         """Hybrid-polling wait for one job's result (raises server errors).
 
         Publishes any open coalesced frame first: a request still sitting
         in one must reach the wire before we block on its reply.  (Only
         the frame — a full ``flush()`` would block on, and re-raise the
         failures of, unrelated in-flight sends from other threads.)
+
+        Default timeout is ``policy.retry.query_timeout_s``.  A client
+        from :meth:`connect` waits in heartbeat-sized slices: when the
+        server's heartbeat goes stale mid-wait it reconnects and replays
+        before resuming the wait, so one server crash costs recovery
+        time, not the whole query timeout.  A reply that never arrives
+        even so is counted in ``lost_replies``.
         """
-        self.transport.data.flush_open_frame()
-        if not _trace.TRACE.enabled:
-            out = self.queries.query(job_id, timeout)
-        else:
-            rid = self._rids.pop(job_id, 0)
-            with _trace.span(_trace.QUERY_WAIT, rid=rid):
-                out = self.queries.query(job_id, timeout)
+        if timeout is None:
+            timeout = self.policy.retry.query_timeout_s
+        try:
+            self.transport.data.flush_open_frame()
+        except (ChannelClosed, ValueError, OSError):
+            if self._listener_name is None:
+                raise
+            self.reconnect()
+        rid = self._rids.pop(job_id, 0) if _trace.TRACE.enabled else 0
+        span = _trace.span(_trace.QUERY_WAIT, rid=rid) if rid else None
+        if span is not None:
+            span.__enter__()
+        try:
+            deadline = time.perf_counter() + timeout
+            retry = self.policy.retry
+            slice_s = max(retry.heartbeat_stale_s, 0.1)
+            resubmits = 0
+            while True:
+                remaining = deadline - time.perf_counter()
+                if remaining <= 0:
+                    with self._lock:
+                        lost = self._unacked.pop(job_id, None) is not None
+                    if lost:
+                        self.lost_replies += 1
+                    raise TimeoutError(f"job {job_id} timed out")
+                try:
+                    out = self.queries.query(job_id,
+                                             min(remaining, slice_s))
+                    break
+                except TimeoutError:
+                    # mid-wait failure detection: a stale server heartbeat
+                    # (or dead transport) triggers reconnect + replay here
+                    # rather than burning the rest of the timeout
+                    if self._listener_name is None:
+                        continue
+                    try:
+                        stale = self.transport.peer_stale()
+                    except Exception:
+                        stale = True       # transport already torn down
+                    if stale:
+                        try:
+                            self.reconnect()
+                        except ConnectionError:
+                            pass
+                        continue
+                    # server alive but this request never answered — the
+                    # request (or its reply) was dropped in transit (e.g.
+                    # quarantined as corrupt).  Bounded single-request
+                    # resubmit, idempotent by dedup id; the slice wait is
+                    # the backoff.
+                    with self._lock:
+                        entry = self._unacked.get(job_id)
+                    if entry is not None \
+                            and resubmits < retry.max_reconnects:
+                        hdr, payload = entry
+                        try:
+                            self.transport.send({"data": payload},
+                                                header=dict(hdr),
+                                                mode="sync")
+                        except Exception:
+                            continue
+                        resubmits += 1
+                        self.retries += 1
+        finally:
+            if span is not None:
+                span.__exit__(None, None, None)
         if isinstance(out, Exception):
             raise out
         return out
@@ -660,12 +883,14 @@ class RemoteDispatcherClient:
         """Stop the receiver, tell the server we're leaving, and (when the
         client owns its transport, i.e. it came from :meth:`connect`) close
         it — the server reaps the connection and unlinks the arena."""
+        retry = self.policy.retry
         self._stop.set()
         if self._recv_thread is not None:
-            self._recv_thread.join(timeout=5)
+            self._recv_thread.join(timeout=retry.join_timeout_s)
         try:
             self.transport.send({}, header={"job_id": -1, "shutdown": True},
-                                mode="sync", timeout_s=2.0)
+                                mode="sync",
+                                timeout_s=retry.shutdown_send_timeout_s)
         except (TimeoutError, ChannelClosed, ValueError):
             pass
         if self._own_transport:

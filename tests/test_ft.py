@@ -1,0 +1,419 @@
+"""Fault-injection plane + crash-recovery tests.
+
+Covers the robustness layer end to end: deterministic replay of seeded
+:class:`~repro.ft.inject.FaultPlane` schedules, per-op circuit breakers
+(open → half-open → close, queued *and* sync-inline paths), the
+exactly-once dedup window, CRC quarantine of corrupted wire meta,
+heartbeat-based liveness (stale/orphan reaping that never falsely reaps
+a legacy non-stamping peer), handshake-leak reclamation in the listener,
+and the headline chaos drill: a supervised fabric killed mid-batch whose
+clients reconnect and replay with zero lost and zero duplicated replies.
+"""
+from __future__ import annotations
+
+import os
+import threading
+import time
+
+import numpy as np
+import pytest
+from conftest import wait_until
+from hypothesis import given, settings, strategies as st
+
+from repro.core.dispatcher import CircuitOpen, RequestDispatcher
+from repro.core.policy import OffloadPolicy, RetryPolicy
+from repro.ft import inject
+from repro.ft.inject import FaultPlane, FaultSpec, InjectedFault
+from repro.ft.supervisor import SHM_DIR, FabricSupervisor
+from repro.ipc.listener import (Listener, _REQ_OFF, _W_REQ, _W_REQ_LOCK,
+                                _write_mailbox, connect as listener_connect)
+from repro.ipc.transport import ShmTransport, TransportSpec
+from repro.ipc.worker import RemoteDispatcherClient, ServingFabric
+
+# fast failure detection for test-sized scenarios
+FAST = RetryPolicy(heartbeat_interval_s=0.05, heartbeat_stale_s=0.3,
+                   connect_timeout_s=5.0, max_reconnects=6)
+POL = OffloadPolicy(mode="pipelined", retry=FAST)
+SMALL = TransportSpec(data_slots=8, data_slot_bytes=1 << 16,
+                      heap_extent_bytes=1 << 16, heap_extents=8)
+
+
+@pytest.fixture(autouse=True)
+def _no_leftover_plane():
+    """Every test starts and ends with no process-global plane installed."""
+    inject.uninstall()
+    yield
+    inject.uninstall()
+
+
+# ---------------------------------------------------------------------------
+# fault plane determinism
+# ---------------------------------------------------------------------------
+
+def _drive(plane: FaultPlane, n: int) -> bytes:
+    for _ in range(n):
+        plane.should("ring.publish.drop")
+        plane.should("heap.exhausted")
+        plane.should("channel.meta.corrupt")
+    return plane.schedule_bytes()
+
+
+@settings(deadline=None)
+@given(seed=st.integers(0, 2**32 - 1),
+       rate=st.floats(0.0, 1.0, allow_nan=False),
+       n=st.integers(1, 200))
+def test_fault_plane_replays_byte_identical(seed, rate, n):
+    """Property: the same seed + spec + hit sequence produces a
+    byte-identical fired schedule on every replay."""
+    faults = {"ring.publish.drop": FaultSpec(rate=rate, at=(3,)),
+              "heap.exhausted": FaultSpec(rate=rate / 2),
+              "channel.meta.corrupt": FaultSpec(rate=rate, max_fires=5)}
+    a = _drive(FaultPlane(seed, faults), n)
+    b = _drive(FaultPlane(seed, faults), n)
+    assert a == b
+
+
+def test_fault_plane_spec_json_roundtrip_preserves_schedule():
+    plane = FaultPlane(7, {"worker.crash": FaultSpec(at=(2, 9)),
+                           "ring.poll.stall": FaultSpec(rate=0.3,
+                                                        stall_s=0.01)})
+    clone = FaultPlane.from_spec_json(plane.spec_json())
+    assert _drive(plane, 64) == _drive(clone, 64)
+    for n in range(64):
+        assert (plane.would_fire("ring.poll.stall", n)
+                == clone.would_fire("ring.poll.stall", n))
+
+
+def test_fault_plane_max_fires_caps_and_counts():
+    plane = FaultPlane(0, {"heap.exhausted": FaultSpec(rate=1.0,
+                                                       max_fires=2)})
+    fired = sum(plane.should("heap.exhausted") is not None
+                for _ in range(10))
+    assert fired == 2
+    assert plane.fired("heap.exhausted") == 2
+    assert plane.hits("heap.exhausted") == 10
+
+
+def test_fault_plane_rejects_unknown_site():
+    with pytest.raises(ValueError, match="unknown fault site"):
+        FaultPlane(0, {"no.such.site": FaultSpec(rate=1.0)})
+
+
+# ---------------------------------------------------------------------------
+# circuit breakers (queued + sync inline) and the dedup window
+# ---------------------------------------------------------------------------
+
+def _failing(_):
+    raise RuntimeError("boom")
+
+
+def test_breaker_opens_fast_fails_and_recovers_sync_inline():
+    d = RequestDispatcher(OffloadPolicy(mode="sync"),
+                          breaker_threshold=3, breaker_cooldown_s=0.1)
+    d.register_handler("op", _failing)
+    for _ in range(3):
+        with pytest.raises(RuntimeError):
+            d.request("op", 1)
+    assert d.breaker_state("op") == "open"
+    assert d.stats.breaker_opened == 1
+    # quarantined: inline callers fast-fail without touching the handler
+    with pytest.raises(CircuitOpen):
+        d.request("op", 1)
+    assert d.stats.breaker_fast_fails == 1
+    # after cooldown the half-open probe runs the (fixed) handler and the
+    # breaker closes again
+    time.sleep(0.15)
+    d.register_handler("op", lambda x: x + 1)
+    assert d.request("op", 1) == 2
+    assert d.breaker_state("op") == "closed"
+    assert d.stats.breaker_recovered == 1
+    d.close()
+
+
+def test_breaker_half_open_probe_failure_reopens():
+    d = RequestDispatcher(OffloadPolicy(mode="sync"),
+                          breaker_threshold=2, breaker_cooldown_s=0.05)
+    d.register_handler("op", _failing)
+    for _ in range(2):
+        with pytest.raises(RuntimeError):
+            d.request("op", 1)
+    time.sleep(0.08)
+    with pytest.raises(RuntimeError):   # the probe itself runs the handler
+        d.request("op", 1)
+    assert d.breaker_state("op") == "open"     # ... and reopens on failure
+    with pytest.raises(CircuitOpen):
+        d.request("op", 1)
+    d.close()
+
+
+def test_breaker_fast_fails_queued_batches_with_error_replies():
+    d = RequestDispatcher(OffloadPolicy(mode="async"),
+                          breaker_threshold=2, breaker_cooldown_s=60.0)
+    d.register_handler("op", _failing)
+    results: list = []
+    for _ in range(2):
+        d.submit("op", 1, mode="async",
+                 on_complete=lambda _j, out: results.append(out))
+    wait_until(lambda: len(results) == 2, desc="handler failures")
+    assert d.breaker_state("op") == "open"
+    d.submit("op", 1, mode="async",
+             on_complete=lambda _j, out: results.append(out))
+    wait_until(lambda: len(results) == 3, desc="fast-fail reply")
+    assert isinstance(results[2], CircuitOpen)
+    assert d.stats.breaker_fast_fails == 1
+    d.close()
+
+
+def test_handler_error_injection_raises_injected_fault():
+    inject.install(FaultPlane(0, {
+        "dispatcher.handler.error": FaultSpec(rate=1.0, max_fires=1)}))
+    d = RequestDispatcher(OffloadPolicy(mode="sync"))
+    d.register_handler("op", lambda x: x)
+    with pytest.raises(InjectedFault):
+        d.request("op", 1)
+    assert d.request("op", 5) == 5      # single fire: next call is clean
+    d.close()
+
+
+def test_dedup_window_executes_once_and_replays_cached_result():
+    calls = []
+    d = RequestDispatcher(OffloadPolicy(mode="async"))
+    d.register_handler("op", lambda x: calls.append(x) or x * 10)
+    got: list = []
+    d.submit("op", 4, mode="async", dedup=("cli", 1),
+             on_complete=lambda _j, out: got.append(out))
+    wait_until(lambda: len(got) == 1, desc="original completion")
+    # replay: same idempotent id — no re-execution, cached result replied
+    d.submit("op", 4, mode="async", dedup=("cli", 1),
+             on_complete=lambda _j, out: got.append(out))
+    wait_until(lambda: len(got) == 2, desc="replayed completion")
+    assert got == [40, 40]
+    assert calls == [4]
+    assert d.stats.dedup_hits == 1
+    d.close()
+
+
+def test_dedup_window_attaches_replay_to_inflight_original():
+    release = threading.Event()
+
+    def slow(x):
+        release.wait(5.0)
+        return x + 1
+
+    d = RequestDispatcher(OffloadPolicy(mode="async"))
+    d.register_handler("op", slow)
+    got: list = []
+    d.submit("op", 1, mode="async", dedup="k",
+             on_complete=lambda _j, out: got.append(("orig", out)))
+    time.sleep(0.05)                    # original now in flight
+    d.submit("op", 1, mode="async", dedup="k",
+             on_complete=lambda _j, out: got.append(("replay", out)))
+    assert not got                      # nothing completed yet
+    release.set()
+    wait_until(lambda: len(got) == 2, desc="both callbacks")
+    assert {out for _tag, out in got} == {2}
+    assert d.stats.dedup_hits == 1
+    d.close()
+
+
+# ---------------------------------------------------------------------------
+# heartbeats + CRC quarantine on a raw transport pair
+# ---------------------------------------------------------------------------
+
+def test_heartbeat_staleness_and_legacy_peer_never_stale():
+    server = ShmTransport.create(None, SMALL, policy=POL)
+    client = ShmTransport.attach(server.name, policy=POL)
+    try:
+        # nobody stamped yet: a legacy (non-stamping) peer is NEVER stale
+        assert not server.peer_heartbeat_stamped
+        assert not server.peer_stale()
+        client.heartbeat(force=True)
+        assert wait_until(lambda: server.peer_heartbeat_stamped,
+                          desc="stamp visible")
+        assert not server.peer_stale()
+        assert server.peer_heartbeat_age_s() < 1.0
+        # silence for > heartbeat_stale_s: now (and only now) stale
+        time.sleep(POL.retry.heartbeat_stale_s + 0.1)
+        assert server.peer_stale()
+        client.heartbeat(force=True)
+        assert not server.peer_stale()
+    finally:
+        client.close()
+        server.close()
+
+
+def test_meta_crc_quarantines_corrupt_slot_and_counts():
+    pol = OffloadPolicy(mode="sync", meta_checksum=True, retry=FAST)
+    server = ShmTransport.create(None, SMALL, policy=pol)
+    client = ShmTransport.attach(server.name, policy=pol)
+    inject.install(FaultPlane(3, {
+        "channel.meta.corrupt": FaultSpec(rate=1.0, max_fires=1)}))
+    try:
+        client.send({"x": np.arange(4)}, header={"n": 0})   # corrupted
+        client.send({"x": np.arange(4)}, header={"n": 1})   # clean
+        tree, header = server.recv(timeout_s=5.0)
+        # the corrupt slot was quarantined (released + counted), never
+        # surfaced: the first delivered message is the clean one
+        assert header["n"] == 1
+        assert server.data.stats.corrupt_drops == 1
+        with pytest.raises(TimeoutError):
+            server.recv(timeout_s=0.1)
+    finally:
+        inject.uninstall()
+        client.close()
+        server.close()
+
+
+def test_meta_checksum_off_means_no_crc_overhead_flags():
+    server = ShmTransport.create(None, SMALL, policy=POL)
+    client = ShmTransport.attach(server.name, policy=POL)
+    try:
+        client.send({"x": np.arange(8)}, header={"k": 1})
+        _tree, header = server.recv(timeout_s=5.0)
+        assert header["k"] == 1
+        assert server.data.stats.corrupt_drops == 0
+    finally:
+        client.close()
+        server.close()
+
+
+# ---------------------------------------------------------------------------
+# handshake-leak reclamation
+# ---------------------------------------------------------------------------
+
+def test_listener_reclaims_stale_registration_without_minting_arena():
+    with Listener(None, SMALL, POL) as lsn:
+        # a registration whose client-side deadline already passed: the
+        # client gave up — answering it with a fresh arena would leak
+        _write_mailbox(lsn._arena, _W_REQ_LOCK, _REQ_OFF,
+                       {"pid": 0, "meta": None,
+                        "deadline_ns": time.perf_counter_ns() - 1})
+        lsn._words[_W_REQ] += 1
+        assert lsn.accept_once() is None
+        assert lsn.stale_registrations == 1
+        assert lsn.accepted == 0
+
+
+def test_failed_connect_flags_minted_transport_for_reaping(monkeypatch):
+    minted: list = []
+    with Listener(None, SMALL, POL, on_accept=minted.append) as lsn:
+        lsn.start()
+        monkeypatch.setattr(ShmTransport, "attach",
+                            classmethod(lambda *a, **k: (_ for _ in ())
+                                        .throw(RuntimeError("attach died"))))
+        with pytest.raises(RuntimeError, match="attach died"):
+            listener_connect(lsn.name, policy=POL, timeout_s=5.0)
+        # the half-created transport was flagged attacher-closed, so the
+        # reactor reaps (and unlinks) it instead of idling on an orphan
+        assert wait_until(lambda: minted and minted[0].peer_closed,
+                          desc="attacher-closed flag")
+        minted[0].close()
+
+
+# ---------------------------------------------------------------------------
+# reactor liveness reaping on the fabric
+# ---------------------------------------------------------------------------
+
+def test_reactor_reaps_stale_client_and_never_a_legacy_idle_one():
+    short = OffloadPolicy(mode="pipelined", retry=RetryPolicy(
+        heartbeat_interval_s=0.05, heartbeat_stale_s=0.3,
+        connect_timeout_s=120.0))
+    d = RequestDispatcher(short)
+    d.register_handler("echo", lambda x: x)
+    with ServingFabric(d, spec=SMALL, policy=short,
+                       own_dispatcher=True).start() as fab:
+        cli = RemoteDispatcherClient.connect(fab.name, policy=short)
+        out = cli.request("echo", np.arange(3), mode="sync")
+        assert out.tolist() == [0, 1, 2]
+        # stop the receiver thread: heartbeats cease but the transport
+        # stays open — exactly what a hung client looks like
+        cli._stop.set()
+        cli._recv_thread.join(timeout=5)
+        wait_until(lambda: fab._reactor_stats().get("stale_reaped", 0) == 1,
+                   desc="stale reap")
+        assert len(fab.reactor) == 0
+        cli._stop.clear()               # close() cleanly (send will fail)
+        cli.close()
+
+
+def test_reactor_orphan_reaps_never_stamping_silent_connection():
+    quick = OffloadPolicy(mode="pipelined", retry=RetryPolicy(
+        heartbeat_interval_s=0.05, heartbeat_stale_s=60.0,
+        connect_timeout_s=0.3))
+    d = RequestDispatcher(quick)
+    with ServingFabric(d, spec=SMALL, policy=quick,
+                       own_dispatcher=True).start() as fab:
+        # a raw transport that registers but never sends, never stamps:
+        # indistinguishable from a client that died mid-handshake
+        t = listener_connect(fab.name, policy=quick, timeout_s=10.0)
+        wait_until(lambda: fab._reactor_stats().get("orphan_reaped", 0) == 1,
+                   desc="orphan reap")
+        t.close()
+
+
+# ---------------------------------------------------------------------------
+# the chaos drill: kill the fabric mid-batch, recover exactly-once
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_supervised_fabric_crash_mid_batch_recovers_exactly_once():
+    """Headline acceptance: worker.crash kills the serving process while
+    a batch drains; the supervisor reclaims the orphaned segments and
+    restarts under the same name; the client reconnects and replays its
+    unacked request — every request completes exactly once (lost=0,
+    dup=0) and nothing is left in /dev/shm."""
+    name = f"rocket-ft-{os.getpid()}"
+    plane = FaultPlane(8, {"worker.crash": FaultSpec(at=(4,))})
+    sup = FabricSupervisor(name, "repro.ft.supervisor:echo_fabric_factory",
+                           policy=POL, max_restarts=2,
+                           plane_json=plane.spec_json()).start()
+    try:
+        assert sup.wait_alive(30.0)
+        cli = RemoteDispatcherClient.connect(name, policy=POL)
+        try:
+            vec = np.arange(16, dtype=np.int64)
+            for i in range(12):
+                out = cli.request("double", vec + i, mode="sync")
+                assert np.array_equal(out, (vec + i) * 2), f"request {i}"
+            assert cli.reconnects >= 1      # the crash really happened
+            assert cli.lost_replies == 0
+            assert cli.dup_replies == 0
+            assert not cli._unacked         # exactly-once id accounting
+        finally:
+            cli.close()
+        stats = sup.stats()
+        assert stats["crashes"] == 1 and stats["restarts"] == 1
+        assert stats["arenas_reclaimed"] >= 1
+    finally:
+        sup.close()
+    assert [f for f in os.listdir(SHM_DIR) if f.startswith(name)] == []
+
+
+@pytest.mark.slow
+def test_client_resubmit_rides_dedup_window_when_reply_lost():
+    """Server alive but one request quarantined in transit (corrupt
+    meta): the client's bounded resubmit replays under the same dedup id
+    and the request executes exactly once."""
+    pol = OffloadPolicy(mode="pipelined", meta_checksum=True, retry=FAST)
+    calls: list = []
+    d = RequestDispatcher(pol)
+    d.register_handler("once", lambda x: calls.append(int(x[0])) or x * 3)
+    inject.install(FaultPlane(5, {
+        "channel.meta.corrupt": FaultSpec(rate=1.0, max_fires=1)}))
+    try:
+        with ServingFabric(d, spec=SMALL, policy=pol,
+                           own_dispatcher=True).start() as fab:
+            cli = RemoteDispatcherClient.connect(fab.name, policy=pol)
+            try:
+                out = cli.request("once", np.full(4, 7.0), mode="sync")
+                assert np.all(out == 21.0)
+                assert cli.retries == 1          # one resubmit happened
+                assert cli.lost_replies == 0 and cli.dup_replies == 0
+                drops = sum(c.transport.data.stats.corrupt_drops
+                            for c in fab._all_connections())
+                assert drops == 1
+            finally:
+                cli.close()
+    finally:
+        inject.uninstall()
+    assert calls == [7]                          # executed exactly once
