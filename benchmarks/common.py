@@ -28,6 +28,43 @@ def fmt_row(name: str, us: float, derived: str) -> str:
     return f"{name},{us:.1f},{derived}"
 
 
+def witness_tokens(totals: dict, tier: str, *, nbytes: int = 0,
+                   reqs: int = 0) -> str:
+    """Render counter readings as ``k=v`` derived-row tokens + tier.
+
+    Emits only the columns the witness tier actually measured —
+    ``insn/byte`` and ``llc_miss/byte`` on `perf-hw`, ``cpu_ns/byte``
+    from task-clock on `perf-sw`/`rusage`, ``ctx_sw/req`` wherever
+    context switches are counted — and always appends ``witness=<tier>``
+    so no reading can masquerade as a different tier's
+    (``run.py --check`` treats rows from different tiers as
+    incomparable).
+    """
+    toks = []
+    insn = totals.get("instructions", 0)
+    llc = totals.get("llc_misses", 0)
+    clk = totals.get("task_clock_ns", 0)
+    csw = totals.get("ctx_sw")
+    if nbytes > 0:
+        if insn:
+            toks.append(f"insn/byte={insn / nbytes:.4f}")
+        if llc:
+            toks.append(f"llc_miss/byte={llc / nbytes:.6f}")
+        if clk and not insn:
+            toks.append(f"cpu_ns/byte={clk / nbytes:.4f}")
+    if reqs > 0 and csw is not None:
+        toks.append(f"ctx_sw/req={csw / reqs:.2f}")
+    toks.append(f"witness={tier}")
+    return ";".join(toks)
+
+
+def counter_meter():
+    """A fresh standalone :class:`repro.obs.hwcounters.Meter` (jax-free
+    import path, safe in measurement children)."""
+    from repro.obs import hwcounters
+    return hwcounters.Meter()
+
+
 def simulated_dsa_put(latency_model):
     """A calibrated *simulated* DSA engine: completion after the modeled
     latency, without consuming caller CPU (sleep releases the GIL).  Used to

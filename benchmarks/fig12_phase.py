@@ -43,7 +43,7 @@ def _measure_entry(out_q) -> None:
         out = {}
         for zero_copy in (True, False):
             obs_trace.enable()             # fresh session: clean ring set
-            wall, _copies, _dbytes, mean_batch = _serve(zero_copy)
+            wall, _copies, _dbytes, mean_batch, _prof = _serve(zero_copy)
             view = obs_trace.collect(unlink=True)
             obs_trace.disable()
             out["zerocopy" if zero_copy else "baseline"] = {

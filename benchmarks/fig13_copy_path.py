@@ -72,11 +72,15 @@ def _client_entry(name: str, n: int, out_q) -> None:
 
 
 def _serve(zero_copy: bool):
-    """One sweep point; returns (wall_s, tag_deltas, mean_batch)."""
+    """One sweep point; returns
+    ``(wall_s, tag_deltas, tag_bytes, mean_batch, phase_profile)`` —
+    the last is this run's delta of the hardware-witness per-phase
+    accumulators (empty when profiling is off)."""
     from repro.core.copyengine import get_engine
     from repro.core.dispatcher import RequestDispatcher
     from repro.core.policy import OffloadPolicy
     from repro.ipc import ServingFabric, TransportSpec
+    from repro.obs import hwcounters as hw
 
     gate = [0.0]
     gate_calls = [0]
@@ -106,6 +110,7 @@ def _serve(zero_copy: bool):
                          ctrl_slots=4, ctrl_slot_bytes=16 << 10)
     eng = get_engine()
     before = eng.tagged_snapshot()
+    prof0 = hw.phase_totals()
     ctx = mp.get_context("spawn")
     out_q = ctx.Queue()
     with ServingFabric(dispatcher, spec=spec, policy=policy,
@@ -124,6 +129,14 @@ def _serve(zero_copy: bool):
             p.join(timeout=60)
         mean_batch = fabric.dispatcher.stats.mean_batch
     after = eng.tagged_snapshot()
+    prof1 = hw.phase_totals()
+    profile = {}
+    for phase, acc in prof1.items():
+        base = prof0.get(phase, {})
+        d = {k: v - base.get(k, 0) for k, v in acc.items()
+             if v - base.get(k, 0)}
+        if d:
+            profile[phase] = d
     deltas = {k: after["copies"].get(k, 0) - before["copies"].get(k, 0)
               for k in set(after["copies"]) | set(before["copies"])}
     dbytes = {k: after["bytes"].get(k, 0) - before["bytes"].get(k, 0)
@@ -134,7 +147,7 @@ def _serve(zero_copy: bool):
         # remove that timing-dependent count so copies/req reflects the
         # fold datapath only (zero-copy mode receives gates as leases)
         deltas["recv_copy"] = deltas.get("recv_copy", 0) - gate_calls[0]
-    return wall, deltas, dbytes, mean_batch
+    return wall, deltas, dbytes, mean_batch, profile
 
 
 def _bench_descr_cache(enabled: bool, n_msgs: int = 200) -> float:
@@ -187,6 +200,11 @@ def _measure_entry(out_q) -> None:
     imported nothing but numpy + repro (in particular: no jax from the
     harness), so the measured 2-thread copy pipeline is clean."""
     try:
+        from repro.obs import hwcounters as hw
+        # the hardware witness is always on for this bench — it IS the
+        # autopsy tool for the zerocopy-vs-baseline row; cost is ~2
+        # syscalls per drain/batch/reply scope, identical in both modes
+        tier = hw.enable()
         _serve(True)                       # warmup: page cache, spawn tails
         best: dict = {}
         for _ in range(REPEATS):           # alternate modes, best-of each:
@@ -196,13 +214,17 @@ def _measure_entry(out_q) -> None:
                     best[zero_copy] = run_out
         cache_us = {on: min(_bench_descr_cache(on) for _ in range(REPEATS))
                     for on in (True, False)}
-        out_q.put(("ok", (best, cache_us)))
+        out_q.put(("ok", (best, cache_us, tier)))
     except BaseException:
         out_q.put(("err", traceback.format_exc()))
 
 
 def run():
-    """Yield CSV rows: per-mode copies/req + req/s, then the speedups."""
+    """Yield CSV rows: per-mode copies/req + req/s with counter-witnessed
+    columns and a per-phase autopsy row per mode, then the speedups."""
+    # safe here: run() executes in the harness process (which already
+    # imported jax); only the measurement child must stay jax-free
+    from benchmarks.common import witness_tokens
     total = CLIENTS * N_PER_CLIENT
     ctx = mp.get_context("spawn")
     out_q = ctx.Queue()
@@ -213,20 +235,52 @@ def run():
     proc.join(timeout=60)
     if status != "ok":
         raise RuntimeError(f"fig13copy measurement child failed:\n{payload}")
-    best, cache_us = payload
+    best, cache_us, tier = payload
     rps = {}
+    req_bytes = total * ROW_ELEMS * 4
     for zero_copy, tag in ((True, "zerocopy"), (False, "baseline")):
-        wall, copies, dbytes, mean_batch = best[zero_copy]
+        wall, copies, dbytes, mean_batch, profile = best[zero_copy]
         server_copies = copies.get("gather", 0) + copies.get("recv_copy", 0)
         server_mb = (dbytes.get("gather", 0)
                      + dbytes.get("recv_copy", 0)) / (1 << 20)
         rps[tag] = total / wall
+        # counter-witnessed columns: sum the serving process's phase
+        # deltas (the client-side phases live in the client processes)
+        totals: dict = {}
+        attributed_ns = 0
+        for phase, acc in profile.items():
+            for k, v in acc.items():
+                if k not in ("count", "bytes"):
+                    totals[k] = totals.get(k, 0) + v
+            # lease holds overlap every other phase, and sg_gather is a
+            # nested sub-scope of handler — counting either would
+            # double-attribute the same wall time
+            if phase not in ("lease_hold", "sg_gather"):
+                attributed_ns += acc.get("wall_ns", 0)
+        witness = witness_tokens(totals, tier, nbytes=req_bytes,
+                                 reqs=total)
+        # phase_cover: fraction of the sweep's wall clock attributed to
+        # named phases; thread concurrency (reactor + dispatcher) can
+        # push this past 1.0 — it is occupancy, not critical path
+        cover = attributed_ns / (wall * 1e9) if wall > 0 else 0.0
         yield fmt_row(
             f"fig13copy/{tag}", wall / total * 1e6,
             f"{rps[tag]:.0f}req/s;"
             f"copies/req={server_copies / total:.2f};"
             f"MBcopied/req={server_mb / total:.2f};"
-            f"batch{mean_batch:.1f}")
+            f"batch{mean_batch:.1f};"
+            f"phase_cover={cover:.2f};{witness}")
+        # the per-phase autopsy row: where the serving process's time
+        # (and counters) went, µs/request, largest first
+        parts = []
+        for phase, acc in sorted(profile.items(),
+                                 key=lambda kv: -kv[1].get("wall_ns", 0)):
+            us_req = acc.get("wall_ns", 0) / 1e3 / total
+            cpu_req = acc.get("task_clock_ns", 0) / 1e3 / total
+            parts.append(f"{phase}:{us_req:.0f}us"
+                         + (f"/{cpu_req:.0f}cpu" if cpu_req else ""))
+        yield fmt_row(f"fig13copy/phases_{tag}", 0.0,
+                      ";".join(parts) + f";witness={tier}")
     yield fmt_row("fig13copy/zerocopy_speedup", 0.0,
                   f"{rps['zerocopy'] / rps['baseline']:.2f}x")
     yield fmt_row("fig13copy/descr_cache_on", cache_us[True], "32-leaf tree")

@@ -1,16 +1,100 @@
 """Paper Fig. 5: cache-injection effect — the fused consumer (reduction over
-the copied buffer while resident) vs a separate second pass.  Derived metric:
-modelled HBM traffic (jcost) + wall time of the inline path."""
+the copied buffer while resident) vs a separate second pass.
+
+Two witnesses, reported side by side and never conflated:
+
+- ``witness=model`` rows — the analytical traffic model (read x + write
+  y + optional consumer re-read), the paper's 3N-vs-2N accounting, plus
+  wall time of the jitted kernels.  Always emitted.
+- ``witness=<tier>`` rows (``fig5/witness/*``) — a *measured*
+  cache-injection analogue via :mod:`repro.obs.hwcounters`: consume a
+  produced buffer while cache-resident ("injected") vs after a
+  cache-sized clobber evicts it ("cold re-read").  On a `perf-hw` host
+  the witness is the LLC-miss delta between the two passes; on the
+  fallback tiers it is the timed cold-vs-warm ratio (labeled
+  ``witness=timed`` — explicitly *not* a counter reading).  This closes
+  the ROADMAP item "real cache-injection measurement".
+"""
 from __future__ import annotations
+
+import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from benchmarks.common import block, fmt_row, time_us
+from benchmarks.common import block, counter_meter, fmt_row, time_us
 from repro.kernels import ref
+
+# measured-injection analogue geometry: a 4 MB working buffer (fits in
+# a typical LLC) and a 64 MB clobber (evicts any LLC)
+_WORK_ELEMS = 1 << 20
+_CLOBBER_ELEMS = 16 << 20
+_PASSES = 5
+
+
+def _measured_rows() -> list[str]:
+    """The hardware-witnessed cold-vs-warm consumer passes."""
+    work = np.ones(_WORK_ELEMS, np.float32)
+    out = np.empty_like(work)
+    clobber = np.ones(_CLOBBER_ELEMS, np.float32)
+    m_warm = counter_meter()
+    m_cold = counter_meter()
+    tier = m_warm.tier
+    warm_ts, cold_ts = [], []
+    sink = 0.0
+    for _ in range(_PASSES):
+        # produce (copy into out), then consume immediately — the
+        # injected case: the consumer's reads hit cache lines the
+        # producing copy just wrote
+        np.copyto(out, work)
+        t0 = time.perf_counter()
+        with m_warm:
+            sink += float(out.sum())
+        warm_ts.append(time.perf_counter() - t0)
+        # produce, evict via a cache-sized streaming pass, then consume
+        # — the no-injection case: every consumer read misses to DRAM
+        np.copyto(out, work)
+        sink += float(clobber.sum())         # the eviction pass
+        t0 = time.perf_counter()
+        with m_cold:
+            sink += float(out.sum())
+        cold_ts.append(time.perf_counter() - t0)
+    warm_us = min(warm_ts) * 1e6
+    cold_us = min(cold_ts) * 1e6
+    nbytes = _PASSES * _WORK_ELEMS * 4
+    rows = []
+    if tier == "perf-hw" and m_cold.totals.get("llc_misses"):
+        warm_mpb = m_warm.totals.get("llc_misses", 0) / nbytes
+        cold_mpb = m_cold.totals["llc_misses"] / nbytes
+        rows.append(fmt_row(
+            "fig5/witness/warm_reuse", warm_us,
+            f"llc_miss/byte={warm_mpb:.6f};witness={tier}"))
+        rows.append(fmt_row(
+            "fig5/witness/cold_reread", cold_us,
+            f"llc_miss/byte={cold_mpb:.6f};witness={tier}"))
+        ratio = cold_mpb / warm_mpb if warm_mpb else float("inf")
+        rows.append(fmt_row(
+            "fig5/witness/summary", 0.0,
+            f"cold/warm_llc_miss={ratio:.1f}x;witness={tier}"))
+    else:
+        # fallback tier: the witness is the timed ratio — labeled as
+        # such, never passed off as a counter reading
+        rows.append(fmt_row("fig5/witness/warm_reuse", warm_us,
+                            "witness=timed"))
+        rows.append(fmt_row("fig5/witness/cold_reread", cold_us,
+                            "witness=timed"))
+        rows.append(fmt_row(
+            "fig5/witness/summary", 0.0,
+            f"cold/warm_time={cold_us / max(warm_us, 1e-9):.2f}x;"
+            f"witness=timed"))
+    m_warm.close()
+    m_cold.close()
+    return rows
 
 
 def run() -> list[str]:
+    """Yield the analytic-model rows and the measured-witness rows."""
     rows = []
     x = jnp.ones((2048, 512), jnp.float32)
     nbytes = x.size * x.dtype.itemsize
@@ -33,8 +117,9 @@ def run() -> list[str]:
     t_sep = time_us(lambda: block(jax.jit(separate)(x)))
     t_fus = time_us(lambda: block(jax.jit(fused)(x)))
     rows.append(fmt_row("fig5/no_inject", t_sep,
-                        f"hbm_bytes={sep_traffic:.2e}"))
+                        f"hbm_bytes={sep_traffic:.2e};witness=model"))
     rows.append(fmt_row("fig5/inject", t_fus,
                         f"hbm_bytes={fus_traffic:.2e};"
-                        f"traffic_saving={saving:.0f}%"))
+                        f"traffic_saving={saving:.0f}%;witness=model"))
+    rows.extend(_measured_rows())
     return rows

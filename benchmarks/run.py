@@ -100,6 +100,17 @@ MODULES = {
 # (lost_replies=0, dup_replies=0) and every orphaned resource must be
 # reclaimed (leaked_arenas=0 /dev/shm segments after supervisor close,
 # leaked_extents=0 allocated heap extents after crash-reap).
+#
+# The hardware-witness counter metrics (obs/hwcounters.py) are gated
+# only between rows measured at the SAME witness tier (see the
+# ``witness=`` token handling in _check): instructions retired per
+# payload byte is schedule-independent on a given build (1.5x headroom
+# for allocator/dict-order jitter), LLC misses per byte wobble with
+# co-tenancy (2x), and context switches per request vary with the
+# scheduler but catch order-of-magnitude regressions (a spin→sleep or
+# lock-convoy explosion) even at 3x + 50.  cpu_ns/byte (the perf-sw /
+# rusage fallback column) is cpu-time — less noisy than wall clock but
+# still timing — so it is recorded, never gated.
 CHECKED_METRICS = {
     "copies/req": (1.0, 0.01),
     "doorbells/req": (1.0, 3.0),
@@ -111,23 +122,36 @@ CHECKED_METRICS = {
     "dup_replies": (1.0, 0.0),
     "leaked_arenas": (1.0, 0.0),
     "leaked_extents": (1.0, 0.0),
+    "insn/byte": (1.5, 0.1),
+    "llc_miss/byte": (2.0, 0.01),
+    "ctx_sw/req": (3.0, 50.0),
 }
 
+# counter metrics only comparable within one witness tier: a perf-hw
+# instruction count and a rusage cpu-time reading are different
+# instruments, so _check skips (loudly) rather than gating across tiers
+WITNESS_METRICS = {"insn/byte", "llc_miss/byte", "ctx_sw/req"}
 
-def _parse_counted(derived: str) -> dict:
-    """Extract the counted ``key=value`` metric tokens from a derived
-    field (e.g. ``"812MB/s;copies/req=1.00;doorbells/req=0.40"``)."""
-    out = {}
+
+def _parse_counted(derived: str) -> tuple[dict, str]:
+    """Extract the counted ``key=value`` metric tokens and the witness
+    tier from a derived field (e.g.
+    ``"812MB/s;copies/req=1.00;ctx_sw/req=2.1;witness=perf-sw"``).
+    Returns ``(metrics, witness)`` — witness is ``""`` for rows that
+    carry no counter readings."""
+    out, witness = {}, ""
     for tok in derived.split(";"):
         if "=" not in tok:
             continue
         key, _, val = tok.partition("=")
-        if key in CHECKED_METRICS:
+        if key == "witness":
+            witness = val
+        elif key in CHECKED_METRICS:
             try:
                 out[key] = float(val)
             except ValueError:
                 pass
-    return out
+    return out, witness
 
 
 def _check(path: str, rows: list[str]) -> list[str]:
@@ -142,19 +166,38 @@ def _check(path: str, rows: list[str]) -> list[str]:
         snapshot = json.load(f)
     baseline = {}
     for row in snapshot.get("rows", []):
-        counted = _parse_counted(row.get("derived") or "")
+        counted, witness = _parse_counted(row.get("derived") or "")
         if counted:
-            baseline[row["bench"]] = counted
+            baseline[row["bench"]] = (counted, witness)
     produced = {}
     for row in rows:
         name, _, derived = (row.split(",", 2) + ["", ""])[:3]
         produced[name] = _parse_counted(derived)
-    problems, compared = [], 0
-    for name, base in baseline.items():
-        counted = produced.get(name)
-        if counted is None:
+    problems, compared, tier_skipped = [], 0, 0
+    for name, (base, base_witness) in baseline.items():
+        if name not in produced:
             continue                   # row not produced (e.g. --only subset)
+        counted, witness = produced[name]
+        # witness-tier comparability: a row whose counter readings come
+        # from a different tier than the baseline's (perf-hw host vs
+        # rusage container, say) is a different instrument, not a
+        # regression — skip its counter metrics with a loud note, and
+        # never flag them as "disappeared" either
+        tier_mismatch = (witness != base_witness
+                         and (witness or base_witness))
+        if tier_mismatch:
+            skipped = sorted(WITNESS_METRICS
+                             & (set(base) | set(counted)))
+            if skipped:
+                tier_skipped += len(skipped)
+                print(f"# --check: {name}: witness tier "
+                      f"{witness or 'none'!r} != baseline "
+                      f"{base_witness or 'none'!r} — skipping "
+                      f"incomparable counter metrics: {', '.join(skipped)}",
+                      file=sys.stderr)
         for key, base_val in base.items():
+            if tier_mismatch and key in WITNESS_METRICS:
+                continue
             if key not in counted:
                 problems.append(
                     f"{name}: gated metric {key!r} disappeared "
@@ -168,7 +211,9 @@ def _check(path: str, rows: list[str]) -> list[str]:
                 problems.append(
                     f"{name}: {key}={new_val:g} exceeds baseline "
                     f"{base_val:g} (limit {limit:g})")
-    print(f"# --check: compared {compared} counted metrics against {path}",
+    print(f"# --check: compared {compared} counted metrics against {path}"
+          + (f" ({tier_skipped} skipped on witness-tier mismatch)"
+             if tier_skipped else ""),
           file=sys.stderr)
     if compared == 0:
         problems.append(
@@ -188,6 +233,7 @@ def _record(path: str, rows: list[str], failures: list[str]) -> None:
             us_val = None
         parsed.append({"bench": name, "us_per_call": us_val,
                        "derived": derived})
+    from repro.obs import hwcounters
     snapshot = {
         "schema": 1,
         "created_unix": int(time.time()),
@@ -196,6 +242,11 @@ def _record(path: str, rows: list[str], failures: list[str]) -> None:
             "machine": platform.machine(),
             "python": platform.python_version(),
             "cpus": os.cpu_count(),
+            # hardware-witness capability: which tier produced any
+            # counter columns in these rows, and why (paranoid level,
+            # per-event open errors) — so a snapshot's counter numbers
+            # are never read without knowing their instrument
+            "perf": hwcounters.probe().to_dict(),
         },
         "rows": parsed,
         "failures": failures,
@@ -228,6 +279,12 @@ def main() -> None:
                          "AND every spawned child) and export the joined "
                          "timeline as Chrome/Perfetto trace JSON to PATH; "
                          "a per-phase decomposition table goes to stderr")
+    ap.add_argument("--counters", action="store_true",
+                    help="run with the hardware-witness profiler enabled "
+                         "(repro.obs.hwcounters; this process AND every "
+                         "spawned child) and print the per-phase counter "
+                         "table to stderr; readings carry the host's "
+                         "witness tier (perf-hw/perf-sw/rusage/none)")
     args = ap.parse_args()
     names = args.only.split(",") if args.only else list(MODULES)
     unknown = [n for n in names if n not in MODULES]
@@ -243,6 +300,10 @@ def main() -> None:
     if args.trace:
         from repro.obs import trace as obs_trace
         obs_trace.enable()          # env-inherited: spawn children trace too
+    if args.counters:
+        from repro.obs import hwcounters
+        tier = hwcounters.enable()  # env-inherited, like tracing
+        print(f"# hwcounters: witness tier {tier}", file=sys.stderr)
     print("name,us_per_call,derived")
     collected: list[str] = []
     failures: list[str] = []
@@ -279,6 +340,26 @@ def main() -> None:
             problems.append(
                 f"tracing is disabled but {emitted} trace records were "
                 f"written — a span site is missing its enabled guard")
+    if args.counters:
+        from repro.obs import hwcounters
+        snap = hwcounters.snapshot()
+        print(f"# hwcounters[{snap['tier']}]: {snap['scopes']} scopes "
+              f"({snap['unavailable']} unavailable)", file=sys.stderr)
+        for phase, acc in sorted(snap["phases"].items(),
+                                 key=lambda kv: -kv[1].get("wall_ns", 0)):
+            keys = ", ".join(f"{k}={v}" for k, v in sorted(acc.items()))
+            print(f"#   {phase}: {keys}", file=sys.stderr)
+        hwcounters.disable()
+    elif args.check:
+        # the same counted-zero contract for the hw profiler: profiling
+        # off must account EXACTLY zero scopes in this process
+        from repro.obs import hwcounters
+        scopes = hwcounters.scope_count()
+        if scopes:
+            problems.append(
+                f"hw profiling is disabled but {scopes} counter scopes "
+                f"were accounted — a site is missing its PROF.enabled "
+                f"guard")
     if args.record:
         _record(args.record, collected, failures)
     for p in problems:

@@ -52,6 +52,7 @@ from repro.core.latency import LatencyModel, ServiceTimeModel
 from repro.core.policy import ExecutionMode, OffloadPolicy
 from repro.core.queuepair import BufferPool
 from repro.ft import inject as _inject
+from repro.obs import hwcounters as _hw
 from repro.obs import trace as _trace
 
 
@@ -718,6 +719,7 @@ class RequestDispatcher:
                 continue
             if req.mode == ExecutionMode.PIPELINED:
                 t0 = _trace.now() if _trace.TRACE.enabled else 0
+                c0 = _hw.begin() if _hw.PROF.enabled else None
 
                 def same_lane(r, _op=req.op, _prio=req.priority):
                     return (r.op == _op and r.priority == _prio
@@ -747,6 +749,8 @@ class RequestDispatcher:
                 if t0:      # the batch-formation window wait, per batch
                     _trace.emit(_trace.DISPATCH_WAIT, t0, rid=batch[0].rid,
                                 arg=len(batch))
+                if c0 is not None:
+                    _hw.end(c0, "batch_wait", rid=batch[0].rid)
                 self._execute(batch)
             else:
                 self._execute([req])
@@ -777,6 +781,7 @@ class RequestDispatcher:
         then release every lease — the slots recycle before the handler
         runs.  Returns ``(slab, shapes, rows)``."""
         t0 = _trace.now() if _trace.TRACE.enabled else 0
+        c0 = _hw.begin() if _hw.PROF.enabled else None
         datas = [r.data for r in batch]
         ndim = datas[0].ndim
         maxdims = tuple(max(d.shape[k] for d in datas) for k in range(ndim))
@@ -798,6 +803,9 @@ class RequestDispatcher:
             r._release_lease()           # released right after the gather
         if t0:
             _trace.emit(_trace.GATHER, t0, rid=batch[0].rid, arg=len(batch))
+        if c0 is not None:
+            _hw.end(c0, "sg_gather", rid=batch[0].rid,
+                    nbytes=sum(d.nbytes for d in datas))
         return slab, [d.shape for d in datas], rows
 
     def _recycle_slab(self, slab: np.ndarray, results: Sequence) -> None:
@@ -836,6 +844,7 @@ class RequestDispatcher:
         pipelined = batch[0].mode == ExecutionMode.PIPELINED
         slab = None
         t0 = _trace.now() if _trace.TRACE.enabled else 0
+        c0 = _hw.begin() if _hw.PROF.enabled else None
         # errors are contained per request: a failing handler completes its
         # job(s) with the exception instead of killing the worker loop
         try:
@@ -888,6 +897,11 @@ class RequestDispatcher:
             if t0:      # batch compute: gather (nested sub-span) + handler
                 _trace.emit(_trace.HANDLER, t0, rid=batch[0].rid,
                             arg=len(batch))
+            if c0 is not None:
+                # like the HANDLER span, this contains sg_gather as a
+                # nested sub-scope; handler-only = handler − sg_gather
+                _hw.end(c0, "handler", rid=batch[0].rid,
+                        nbytes=sum(r.nbytes for r in batch))
             # feed the admission predictor with each request's share of
             # the batch wall time, and count completions that nonetheless
             # landed past their deadline (miss ≠ shed: the work ran)

@@ -57,6 +57,7 @@ from typing import Optional, Sequence
 
 from repro.core.latency import LatencyModel
 from repro.core.policy import OffloadPolicy
+from repro.obs import hwcounters as _hw
 from repro.obs import trace as _trace
 
 # route names (wire-stable: they appear in stats snapshots and benchmarks)
@@ -245,13 +246,17 @@ class ChannelGovernor:
         only called on the (every ``refresh_every``-th) full evaluation,
         keeping shared-counter reads off the per-message fast path.
         """
-        if _trace.TRACE.enabled:
-            t0 = _trace.now()
+        if _trace.TRACE.enabled or _hw.PROF.enabled:
+            t0 = _trace.now() if _trace.TRACE.enabled else 0
+            c0 = _hw.begin() if _hw.PROF.enabled else None
             try:
                 return self._decide(nbytes, eligible, backlog_fn)
             finally:
-                _trace.emit(_trace.GOV_DECIDE, t0,
-                            arg=min(nbytes, 0xFFFFFFFF))
+                if t0:
+                    _trace.emit(_trace.GOV_DECIDE, t0,
+                                arg=min(nbytes, 0xFFFFFFFF))
+                if c0 is not None:
+                    _hw.end(c0, "governor", nbytes=nbytes)
         return self._decide(nbytes, eligible, backlog_fn)
 
     def _decide(self, nbytes: int, eligible: Sequence[str],

@@ -114,6 +114,7 @@ from repro.core.policy import Device, ExecutionMode, OffloadPolicy
 from repro.core.queuepair import drain_to_depth
 from repro.ft import inject as _inject
 from repro.ipc.heap import MAX_SEGMENTS, BulkHeap, HeapExhausted
+from repro.obs import hwcounters as _hw
 from repro.obs import trace as _trace
 from repro.ipc.ring import (
     FLAG_COALESCED,
@@ -625,8 +626,12 @@ class RecvLease:
         self._on_release = on_release
         # lease birth timestamp: with tracing on, release() emits a
         # LEASE_HOLD span covering delivery → release (how long this
-        # message pinned its ring slot / heap extents)
-        self._t0 = _trace.now() if _trace.TRACE.enabled else 0
+        # message pinned its ring slot / heap extents); the hw profiler
+        # accounts the same interval wall-clock-only (delivery and
+        # release run on different threads, so per-thread counter
+        # deltas across the hold would be meaningless)
+        self._t0 = (_trace.now()
+                    if _trace.TRACE.enabled or _hw.PROF.enabled else 0)
 
     @property
     def rid(self) -> int:
@@ -656,8 +661,11 @@ class RecvLease:
             cb, self._on_release = self._on_release, None
             cb()
             released = True
-        if released and self._t0 and _trace.TRACE.enabled:
-            _trace.emit(_trace.LEASE_HOLD, self._t0, rid=self.rid)
+        if released and self._t0:
+            if _trace.TRACE.enabled:
+                _trace.emit(_trace.LEASE_HOLD, self._t0, rid=self.rid)
+            if _hw.PROF.enabled:
+                _hw.account_wall("lease_hold", self._t0)
         if released:
             # the views are invalid once the slot/extents are recycled;
             # drop them so they can't pin the arena mapping open
@@ -917,6 +925,7 @@ class DataChannel:
         slot as a skip sentinel — a WRITING slot left behind would wedge
         the strictly-ordered SPSC ring forever."""
         t0 = _trace.now() if _trace.TRACE.enabled else 0
+        c0 = _hw.begin() if _hw.PROF.enabled else None
         try:
             mlen = self._encode_meta_into(writer.meta, descr_bytes, header,
                                           segments)
@@ -938,10 +947,14 @@ class DataChannel:
                 writer.meta[0] ^= (corrupt.arg or 0xFF) & 0xFF
             _inject.stall("channel.doorbell.delay")
         writer.publish(nbytes, mlen, flags=flags, meta_crc=meta_crc)
-        if t0:
+        if t0 or c0 is not None:
             rid = (header.get(_trace.RID_KEY, 0)
                    if isinstance(header, dict) else 0)
-            _trace.emit(_trace.CH_PUBLISH, t0, rid=rid, arg=nbytes)
+            rid = rid if isinstance(rid, int) else 0
+            if t0:
+                _trace.emit(_trace.CH_PUBLISH, t0, rid=rid, arg=nbytes)
+            if c0 is not None:
+                _hw.end(c0, "publish", nbytes=nbytes, rid=rid)
 
     def _decode_meta(self, raw: bytes):
         """(header, descriptor) from wire meta; descriptors are cached by

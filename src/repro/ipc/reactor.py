@@ -76,7 +76,22 @@ from repro.ft import inject as _inject
 from repro.ipc.channel import PRIO_KEY, RecvLease
 from repro.ipc.ring import ChannelClosed
 from repro.ipc.transport import ShmTransport
+from repro.obs import hwcounters as _hw
 from repro.obs import trace as _trace
+
+
+def _lease_bytes(items) -> int:
+    """Total payload bytes of one drain pull (profiling only — called
+    behind the ``PROF.enabled`` guard, never on the undisturbed path)."""
+    total = 0
+    for item in items:
+        tree = item.tree if isinstance(item, RecvLease) else item[0]
+        if isinstance(tree, dict):
+            for v in tree.values():
+                total += getattr(v, "nbytes", 0)
+        else:
+            total += getattr(tree, "nbytes", 0)
+    return total
 
 
 @dataclass
@@ -126,6 +141,7 @@ class Connection:
         if _inject._PLANE is not None:
             _inject.stall("reactor.reply.stall")
         t0 = _trace.now() if _trace.TRACE.enabled else 0
+        c0 = _hw.begin() if _hw.PROF.enabled else None
         try:
             arr = tree.get("result") if isinstance(tree, dict) else None
             if (isinstance(arr, np.ndarray) and len(tree) == 1):
@@ -143,10 +159,15 @@ class Connection:
             raise
         finally:
             self.done()
-            if t0:
+            if t0 or c0 is not None:
                 rid = header.get(_trace.RID_KEY, 0) if header else 0
-                _trace.emit(_trace.REPLY_FILL, t0,
-                            rid=rid if isinstance(rid, int) else 0)
+                rid = rid if isinstance(rid, int) else 0
+                if t0:
+                    _trace.emit(_trace.REPLY_FILL, t0, rid=rid)
+                if c0 is not None:
+                    _hw.end(c0, "reserve_fill", rid=rid,
+                            nbytes=arr.nbytes
+                            if isinstance(arr, np.ndarray) else 0)
 
 
 @dataclass
@@ -252,6 +273,7 @@ class Reactor:
                 self.stats.throttled += 1
                 return drained          # admission cap: leave rest in its ring
             t0 = _trace.now() if _trace.TRACE.enabled else 0
+            c0 = _hw.begin() if _hw.PROF.enabled else None
             try:
                 items = conn.transport.data.try_recv_many(
                     budget, copy=not self.zero_copy)
@@ -261,6 +283,10 @@ class Reactor:
                 break
             if t0:
                 _trace.emit(_trace.REACTOR_DRAIN, t0, arg=len(items))
+            if c0 is not None:
+                # non-empty pulls only: metering every empty spin poll
+                # would cost 2 syscalls per sweep and swamp the profile
+                _hw.end(c0, "ring_poll", nbytes=_lease_bytes(items))
             if len(items) > 1:
                 self.stats.batched_drains += 1
             drained += len(items)

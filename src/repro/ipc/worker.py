@@ -48,6 +48,7 @@ from repro.ft.monitor import SLOMonitor
 from repro.ipc.channel import DEADLINE_KEY, DEDUP_KEY, PRIO_KEY
 from repro.ipc.ring import ChannelClosed
 from repro.ipc.transport import ShmTransport, TransportSpec
+from repro.obs import hwcounters as _hw
 from repro.obs import trace as _trace
 from repro.obs.metrics import MetricsRegistry, SLOTracker
 
@@ -363,6 +364,12 @@ class ServingFabric:
             self.monitor.add_rule("slo.p95_ms",
                                   self.default_deadline_ns / 1e6)
         self.metrics.register("slo_monitor", self.monitor)
+        # hardware-witness plane: per-phase counter totals (insn/byte,
+        # LLC misses, ctx switches) land in the same flat snapshot under
+        # hw.* when profiling is enabled; a child fabric spawned by a
+        # profiling parent inherits enablement through the environment
+        _hw.maybe_enable_from_env()
+        self.metrics.register("hw", _hw.snapshot)
         self._closed = False
 
     @property
@@ -579,6 +586,10 @@ class RemoteDispatcherClient:
         self.latency = latency or transport.latency
         self.queries = QueryHandler(self.latency, self.policy)
         self._own_transport = own_transport
+        # a client process spawned by a profiling parent profiles too
+        # (publish / governor / reply_drain phases), same env handshake
+        # as the tracer's
+        _hw.maybe_enable_from_env()
         self.lane = 0                      # default priority for request()
         # 32-bit session nonce: scopes idempotent ids to this client life
         self.session_id = int.from_bytes(os.urandom(4), "little") or 1
@@ -643,6 +654,10 @@ class RemoteDispatcherClient:
             failed = False
             with self._transport_lock:
                 transport = self.transport
+                # reply_drain scope: only drains that actually yield a
+                # reply are accounted (a timed-out idle poll is sleep,
+                # not drain cost — metering it would swamp the profile)
+                c0 = _hw.begin() if _hw.PROF.enabled else None
                 try:
                     transport.heartbeat()  # liveness stamp (rate-limited)
                     tree, header = transport.recv(timeout_s=poll_s)
@@ -660,10 +675,13 @@ class RemoteDispatcherClient:
                 continue
             err = header.get("error")
             result = RuntimeError(err) if err else tree["result"]
-            if _trace.TRACE.enabled:
-                rid = header.get(_trace.RID_KEY, 0)
-                if isinstance(rid, int) and rid:
-                    _trace.instant(_trace.CLIENT_RECV, rid=rid)
+            rid = header.get(_trace.RID_KEY, 0)
+            rid = rid if isinstance(rid, int) else 0
+            if _trace.TRACE.enabled and rid:
+                _trace.instant(_trace.CLIENT_RECV, rid=rid)
+            if c0 is not None:
+                _hw.end(c0, "reply_drain", rid=rid,
+                        nbytes=getattr(result, "nbytes", 0))
             job_id = header["job_id"]
             with self._lock:
                 if job_id in self._completed:

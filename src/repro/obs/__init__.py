@@ -16,20 +16,29 @@ the runtime's instrument for doing the same to itself:
 - :mod:`repro.obs.metrics` — a :class:`MetricsRegistry` that unifies the
   stack's ad-hoc ``*Stats`` objects behind one flat snapshot/delta API,
   plus the :class:`SLOTracker` that finally wires ``ft/monitor.py`` and
-  ``core/latency.py`` into the serving path.
+  ``core/latency.py`` into the serving path;
+- :mod:`repro.obs.hwcounters` — the hardware-witness plane: a
+  zero-dependency ``perf_event_open`` binding (grouped counters, one
+  ``read()`` per scope, per-thread attach) with counted degradation
+  tiers (``perf-hw`` → ``perf-sw`` → ``rusage`` → ``none``), a
+  phase-attribution profiler for the serving hot path, and counter
+  deltas that ride the trace rings as ordinary records.
 
 Nothing here imports jax (benchmark measurement children stay jax-free),
 and with tracing disabled (the default) the hot-path cost is one
-attribute check — zero records are written, which CI gates on.
+attribute check — zero records are written, which CI gates on.  The
+same counted-zero contract holds for ``hwcounters.scope_count()``.
 """
-from repro.obs import hist, metrics, trace
+from repro.obs import hist, hwcounters, metrics, trace
 from repro.obs.hist import Histogram, phase_histograms, phase_report
+from repro.obs.hwcounters import Capability, CounterScope, Meter, PROF
 from repro.obs.metrics import MetricsRegistry, SLOTracker
 from repro.obs.trace import TRACE, TraceView, collect, disable, enable
 
 __all__ = [
-    "trace", "hist", "metrics",
+    "trace", "hist", "metrics", "hwcounters",
     "TRACE", "TraceView", "collect", "disable", "enable",
     "Histogram", "phase_histograms", "phase_report",
     "MetricsRegistry", "SLOTracker",
+    "Capability", "CounterScope", "Meter", "PROF",
 ]

@@ -115,9 +115,11 @@ class Histogram:
 def phase_histograms(view) -> dict:
     """Per-phase duration histograms from a collected
     :class:`~repro.obs.trace.TraceView` — kind name → :class:`Histogram`."""
-    from repro.obs.trace import KIND_NAMES
+    from repro.obs.trace import CTR_FIRST, KIND_NAMES
     out = {}
     for kind, name in KIND_NAMES.items():
+        if kind >= CTR_FIRST:
+            continue            # counter deltas, not wall durations
         d = view.durations_ns(kind)
         if len(d):
             out[name] = Histogram.from_durations(d)

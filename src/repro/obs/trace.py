@@ -103,6 +103,24 @@ KIND_NAMES = {
     SERVE_BATCH: "serve.generate_batch",
 }
 
+# Counter records (the hardware-witness plane, obs/hwcounters.py) share
+# the rings and record layout but carry a *counter delta*, not a wall
+# interval: duration ``t1 - t0`` is the delta, ``arg`` is the span kind
+# of the phase the delta belongs to.  Kinds ≥ CTR_FIRST are therefore
+# excluded from wall-time phase totals/histograms.
+CTR_FIRST = 32
+CTR_KINDS = {
+    "instructions": 32,
+    "cycles": 33,
+    "llc_loads": 34,
+    "llc_misses": 35,
+    "task_clock_ns": 36,
+    "ctx_sw": 37,
+    "page_faults": 38,
+    "sched_wait_ns": 39,
+}
+KIND_NAMES.update({v: f"ctr.{k}" for k, v in CTR_KINDS.items()})
+
 
 class _State:
     """Process-wide tracing switch; ``TRACE.enabled`` is THE hot-path guard."""
@@ -398,9 +416,15 @@ class TraceView:
         return out
 
     def phase_totals(self) -> dict:
-        """kind name → ``(count, total_ns)`` across the whole view."""
+        """kind name → ``(count, total_ns)`` across the whole view.
+
+        Wall-time spans only — counter records (kinds ≥ ``CTR_FIRST``,
+        whose "duration" is a counter delta) are excluded; reduce those
+        with :func:`repro.obs.hwcounters.counters_from_view`."""
         out = {}
         for kind, name in KIND_NAMES.items():
+            if kind >= CTR_FIRST:
+                continue
             d = self.durations_ns(kind)
             if len(d):
                 out[name] = (int(len(d)), int(d.sum()))
@@ -412,6 +436,19 @@ class TraceView:
         for r in self.rings:
             for rec in r.records:
                 kind = int(rec["kind"])
+                if kind >= CTR_FIRST:
+                    # counter record: the "duration" is a counter delta —
+                    # render as a zero-width instant carrying the value
+                    events.append({
+                        "name": KIND_NAMES.get(kind, f"kind{kind}"),
+                        "cat": "hwctr", "ph": "i", "s": "t",
+                        "pid": r.pid, "tid": r.tid,
+                        "ts": int(rec["t0"]) / 1e3,      # µs
+                        "args": {"rid": int(rec["rid"]),
+                                 "phase_kind": int(rec["arg"]),
+                                 "delta": int(rec["t1"]) - int(rec["t0"])},
+                    })
+                    continue
                 events.append({
                     "name": KIND_NAMES.get(kind, f"kind{kind}"),
                     "cat": "rocket", "ph": "X",

@@ -1,0 +1,30 @@
+#!/usr/bin/env python
+"""CI perf-capability probe: report the host's counter tier and smoke it.
+
+Thin wrapper around :mod:`repro.obs.hwcounters`'s CLI so CI can invoke
+the probe without the ``runpy`` double-import warning that
+``python -m repro.obs.hwcounters`` produces (the package imports the
+submodule at import time).
+
+Exit status follows the hwcounters smoke contract: non-zero only when a
+``perf-*`` tier was claimed but the smoke workload read all zeros — a
+degraded tier (``rusage``/``none``) is an honestly-reported capability,
+not a failure.
+
+Usage::
+
+    python tools/perf_probe.py --probe          # capability report
+    python tools/perf_probe.py --smoke --json   # smoke + JSON artifact
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.obs import hwcounters  # noqa: E402
+
+
+if __name__ == "__main__":
+    raise SystemExit(hwcounters.main(sys.argv[1:]))
