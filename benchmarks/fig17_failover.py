@@ -1,0 +1,192 @@
+"""Fig. 17 analogue: diskless failover — warm-standby promotion vs cold restart.
+
+The failover claim behind the checkpoint/replication plane: keeping a
+warm standby fed by diskless state replication over the fabric turns
+crash recovery from *re-initialization* (spawn + import + model build)
+into a *promotion handshake* — strictly faster on the same host — while
+preserving the replicated state byte-identically and keeping every
+exactly-once identity intact across the switchover.  Two sub-benches,
+identical except for the standby:
+
+- ``fig17/cold`` — a :class:`~repro.ft.supervisor.FabricSupervisor`
+  runs the restorable reference fabric
+  (:func:`repro.ft.standby.param_echo_factory`, ~8 MB deterministic
+  params) with ``worker.crash`` armed mid-soak and **no standby**:
+  recovery is a cold restart and its cost (the worst single-request
+  latency — the one spanning the crash) is dominated by process spawn,
+  interpreter imports, and parameter re-initialization.
+
+- ``fig17/warm`` — the same, plus a warm standby continuously pulling
+  size-classed snapshot shards (CRC-gated, streamed through the bulk
+  heap — ``heap_threshold_bytes`` is lowered so the ~256 KB shards ride
+  extents) and the dispatcher delta log.  On the crash the supervisor
+  *promotes*: the standby rebuilds the fabric from replicated state
+  under the same rendezvous name and clients ride through on
+  reconnect-with-replay.  Byte-identity is gated: the promotion ack's
+  payload digest must equal the digest pulled from the primary before
+  the crash, and the promoted fabric must re-serve that same digest.
+
+``fig17/summary`` compares the two and **fails if warm promotion is not
+strictly faster than cold restart**.  The fig16 zero-slack identities
+(``lost_replies``/``dup_replies``/``leaked_arenas``) are emitted on
+both rows and gated by ``run.py --check``.
+
+Run: ``PYTHONPATH=src python -m benchmarks.run --only fig17``
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+from benchmarks.common import fmt_row
+from repro.core.policy import OffloadPolicy, RetryPolicy
+from repro.ft.inject import FaultPlane, FaultSpec
+from repro.ft.supervisor import SHM_DIR, FabricSupervisor
+
+NAME = "rocket-fig17"
+SEED = 17
+N_REQS = 30                    # soak length (sync requests per sub-bench)
+CRASH_AT = 12                  # worker.crash fires on this drained batch
+D = 256                        # request payload width (1KB — stays inline)
+FACTORY = "repro.ft.standby:param_echo_factory"
+# fast failure detection, benchmark-sized (same shape as fig16)
+RETRY = RetryPolicy(heartbeat_interval_s=0.1, heartbeat_stale_s=0.4,
+                    connect_timeout_s=10.0, max_reconnects=8)
+
+
+def _policy() -> OffloadPolicy:
+    # low heap threshold so the ~256KB replication shards ride the bulk
+    # heap (the diskless stream's intended datapath), not ring slots
+    return OffloadPolicy(mode="pipelined", heap_threshold_bytes=1 << 16,
+                         retry=RETRY)
+
+
+def _soak(client, n: int) -> dict:
+    """Issue ``n`` sync requests, validating every reply; returns mean/max
+    latency and goodput over the whole window (the crash included)."""
+    vec = np.arange(D, dtype=np.float32)
+    lat_max = total = 0.0
+    t0 = time.perf_counter()
+    for _ in range(n):
+        t = time.perf_counter()
+        out = client.request("double", vec, mode="sync")
+        dt = time.perf_counter() - t
+        total += dt
+        lat_max = max(lat_max, dt)
+        if not np.allclose(out, vec * 2):
+            raise AssertionError("corrupted reply payload")
+    wall = time.perf_counter() - t0
+    return {"mean_us": total / n * 1e6, "max_ms": lat_max * 1e3,
+            "goodput_rps": n / wall}
+
+
+def _pull_manifest(client) -> dict:
+    """The serving fabric's current snapshot manifest, via the same
+    replication op a standby uses."""
+    from repro.checkpoint import ReplicationSource
+    raw = client.request(ReplicationSource.OP_MANIFEST,
+                         np.zeros(1, np.uint8), mode="sync")
+    return json.loads(bytes(np.asarray(raw, np.uint8)))
+
+
+def _recovery_bench(warm: bool) -> tuple[str, dict]:
+    """One crash-recovery soak; returns ``(row, measurements)``."""
+    from repro.ipc.worker import RemoteDispatcherClient
+
+    policy = _policy()
+    plane = FaultPlane(SEED, {"worker.crash": FaultSpec(at=(CRASH_AT,))})
+    sup = FabricSupervisor(
+        NAME, FACTORY, policy=policy, max_restarts=3,
+        plane_json=plane.spec_json(),
+        standby_factory=FACTORY if warm else None,
+        standby_interval_s=0.1, promote_timeout_s=20.0).start()
+    try:
+        if not sup.wait_alive(30.0):
+            raise RuntimeError("supervised fabric never came up")
+        client = RemoteDispatcherClient.connect(NAME, policy=policy,
+                                                timeout_s=30.0)
+        try:
+            if warm:
+                # the crash must not outrun replication: wait until the
+                # standby has applied at least one full snapshot
+                deadline = time.perf_counter() + 60.0
+                while time.perf_counter() < deadline:
+                    st = sup.standby_stats(timeout_s=5.0)
+                    if st and st.get("snapshots_applied", 0) >= 1:
+                        break
+                    time.sleep(0.05)
+                else:
+                    raise RuntimeError("standby never applied a snapshot")
+            psum0 = float(client.request("psum", np.zeros(1), mode="sync"))
+            digest0 = _pull_manifest(client)["digest"]
+            m = _soak(client, N_REQS)
+            # post-recovery witnesses: the replacement fabric serves the
+            # same state (psum) and the same payload digest
+            psum1 = float(client.request("psum", np.zeros(1), mode="sync"))
+            digest1 = _pull_manifest(client)["digest"]
+            lost, dup = client.lost_replies, client.dup_replies
+            reconnects = client.reconnects
+        finally:
+            client.close()
+    finally:
+        sup.close()            # terminates children, reclaims segments
+    leaked = len([f for f in os.listdir(SHM_DIR) if f.startswith(NAME)])
+    s = sup.stats()
+    if s["crashes"] < 1:
+        raise RuntimeError("chaos schedule never fired worker.crash")
+    if psum1 != psum0:
+        raise RuntimeError(f"state witness diverged across recovery: "
+                           f"psum {psum0} -> {psum1}")
+    if digest1 != digest0:
+        raise RuntimeError(f"snapshot digest diverged across recovery: "
+                           f"{digest0[:12]} -> {digest1[:12]}")
+    meas = {"recovery_ms": m["max_ms"], "stats": s}
+    base = (f"goodput={m['goodput_rps']:.0f}rps;"
+            f"recovery_ms={m['max_ms']:.0f};"
+            f"crashes={s['crashes']};restarts={s['restarts']};"
+            f"promotions={s['promotions']};reconnects={reconnects};"
+            f"lost_replies={lost};dup_replies={dup};leaked_arenas={leaked}")
+    if not warm:
+        if s["restarts"] != 1 or s["promotions"] != 0:
+            raise RuntimeError(f"cold bench recovered wrong: {s}")
+        return fmt_row("fig17/cold", m["mean_us"], base), meas
+    if s["promotions"] != 1 or s["restarts"] != 0:
+        raise RuntimeError(f"warm bench did not promote: {s}")
+    ack = s["last_promotion"]
+    # byte-identity across the handoff: the state the standby promoted IS
+    # the last completed snapshot the primary served
+    if ack["digest"] != digest0:
+        raise RuntimeError(f"promoted state digest {ack['digest'][:12]} != "
+                           f"pre-crash snapshot {digest0[:12]}")
+    rstats = ack["stats"]
+    derived = (base +
+               f";promote_ms={ack['bind_ms']:.1f};"
+               f"repl_lag_ms={ack['lag_ms']:.0f};"
+               f"ckpt_shard_copies={rstats['shard_pulls']};"
+               f"repl_mb={rstats['bytes_pulled'] / 1e6:.1f}")
+    return fmt_row("fig17/warm", m["mean_us"], derived), meas
+
+
+def run():
+    cold_row, cold = _recovery_bench(warm=False)
+    yield cold_row
+    warm_row, warm = _recovery_bench(warm=True)
+    yield warm_row
+    cold_ms, warm_ms = cold["recovery_ms"], warm["recovery_ms"]
+    if not warm_ms < cold_ms:
+        raise RuntimeError(
+            f"warm promotion ({warm_ms:.0f}ms) not strictly faster than "
+            f"cold restart ({cold_ms:.0f}ms)")
+    yield fmt_row(
+        "fig17/summary", warm_ms * 1e3,
+        f"cold_ms={cold_ms:.0f};warm_ms={warm_ms:.0f};"
+        f"speedup={cold_ms / warm_ms:.1f}x")
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    for row in run():
+        print(row)

@@ -43,6 +43,7 @@ from benchmarks import (
     fig14_multiclient,
     fig15_saturation,
     fig16_chaos,
+    fig17_failover,
     table1_workload_bytes,
 )
 
@@ -65,6 +66,7 @@ MODULES = {
     "fig14": fig14_multiclient,
     "fig15": fig15_saturation,
     "fig16": fig16_chaos,
+    "fig17": fig17_failover,
 }
 
 # counted (non-timing) metrics gated by ``--check``: metric token ->

@@ -1,3 +1,5 @@
-from repro.checkpoint.manager import CheckpointManager
+from repro.checkpoint.manager import (CheckpointManager, ReplicationSource,
+                                      ShardCodec, ShardCorrupt)
 
-__all__ = ["CheckpointManager"]
+__all__ = ["CheckpointManager", "ReplicationSource", "ShardCodec",
+           "ShardCorrupt"]

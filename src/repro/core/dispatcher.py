@@ -268,6 +268,25 @@ class _CircuitBreaker:
                 return "opened"
             return None
 
+    def export(self) -> dict:
+        """Replicable breaker state (perf_counter stamps don't cross
+        processes, so the open-cooldown clock restarts on import)."""
+        with self._lock:
+            return {"state": self.state, "consecutive": self._consecutive}
+
+    def import_state(self, st: dict) -> None:
+        """Adopt a peer's breaker state; an imported ``open`` breaker
+        starts a fresh cooldown from now (conservative: the replica
+        re-probes no earlier than the primary would have)."""
+        with self._lock:
+            self.state = st.get("state", "closed")
+            self._consecutive = int(st.get("consecutive", 0))
+            self._probing = False
+            if self.state == "half-open":
+                self.state = "open"
+            if self.state == "open":
+                self._opened_t = time.perf_counter()
+
 
 class _DedupWindow:
     """Bounded idempotency window for exactly-once request replay.
@@ -330,6 +349,31 @@ class _DedupWindow:
             while len(self._entries) > self.capacity:
                 self._entries.popitem(last=False)
             return waiters
+
+    def export(self) -> list:
+        """Settled entries as ``(key, result)`` pairs, LRU order —
+        the replication-delta half of exactly-once: a standby importing
+        these suppresses re-execution of everything the primary already
+        completed.  In-flight entries are NOT exported (their results
+        don't exist yet; replays will re-execute on the replica, still
+        producing exactly one reply since the original's died with the
+        primary)."""
+        with self._lock:
+            return [(k, v[1]) for k, v in self._entries.items()
+                    if v[0] == "done"]
+
+    def import_entries(self, entries) -> int:
+        """Install settled entries from a peer's :meth:`export`; returns
+        how many landed (the LRU cap still applies)."""
+        n = 0
+        with self._lock:
+            for key, out in entries:
+                self._entries[key] = ["done", out]
+                self._entries.move_to_end(key)
+                n += 1
+            while len(self._entries) > self.capacity:
+                self._entries.popitem(last=False)
+        return n
 
 
 class QueryHandler:
@@ -943,6 +987,34 @@ class RequestDispatcher:
             self.queries.complete(
                 req.job_id, _Failure(out) if isinstance(out, Exception)
                 else out)
+
+    # -- state replication (warm-standby failover) ------------------------------
+    def export_state(self) -> dict:
+        """The dispatcher's fast-moving replicable state: settled dedup
+        entries (exactly-once across promotion), per-op breaker states,
+        and the service-time EWMAs that drive deadline shedding.  This is
+        the "delta log" a warm standby pulls between full snapshots —
+        small (no params), picklable, and refreshed on every pull."""
+        return {
+            "dedup": self._dedup.export(),
+            "breakers": {op: br.export()
+                         for op, br in self._breakers.items()},
+            "service": dict(self.service._per_op),
+        }
+
+    def import_state(self, state: dict) -> dict:
+        """Adopt a peer dispatcher's :meth:`export_state`; returns counts
+        of what landed (``dedup_entries``/``breakers``/``service_ops``)."""
+        n_dedup = self._dedup.import_entries(state.get("dedup", []))
+        breakers = state.get("breakers", {})
+        for op, st in breakers.items():
+            br = self._breaker(op)
+            if br is not None:
+                br.import_state(st)
+        service = state.get("service", {})
+        self.service._per_op.update(service)
+        return {"dedup_entries": n_dedup, "breakers": len(breakers),
+                "service_ops": len(service)}
 
     def close(self) -> None:
         self._running = False

@@ -2,7 +2,9 @@ from repro.ft.inject import FaultPlane, FaultSpec, InjectedFault
 from repro.ft.monitor import (Heartbeat, RestartManager, StepTimer,
                               StragglerMonitor)
 from repro.ft.supervisor import FabricSupervisor, reclaim_segments
+from repro.ft.standby import StandbyHandle, StandbyReplica, param_echo_factory
 
 __all__ = ["FaultPlane", "FaultSpec", "InjectedFault",
            "Heartbeat", "RestartManager", "StepTimer", "StragglerMonitor",
-           "FabricSupervisor", "reclaim_segments"]
+           "FabricSupervisor", "reclaim_segments",
+           "StandbyHandle", "StandbyReplica", "param_echo_factory"]

@@ -43,6 +43,15 @@ site                        effect at the guard
 ``dispatcher.handler.error``  raise ``InjectedFault`` from the handler
 ``worker.crash``            ``os._exit(17)`` the serving process at the
                             dispatch point (crash mid-batch / mid-heap-fill)
+``ckpt.shard.corrupt``      flip one byte of a checkpoint shard served to a
+                            replication puller (CRC must catch it; ``arg``
+                            is the XOR value, default 0xFF)
+``standby.promote.stall``   sleep ``stall_s`` inside the standby's promote
+                            path, before it binds the rendezvous (drills the
+                            supervisor's promote timeout → cold fallback)
+``standby.lag``             skip one replication sync round on the standby
+                            (sleep ``stall_s`` instead of pulling), growing
+                            the replication lag deterministically
 ==========================  ==================================================
 
 Usage::
@@ -100,6 +109,9 @@ SITES = frozenset({
     "reactor.reply.stall",
     "dispatcher.handler.error",
     "worker.crash",
+    "ckpt.shard.corrupt",
+    "standby.promote.stall",
+    "standby.lag",
 })
 
 #: env var carrying a JSON-encoded plane spec for ``spawn`` children

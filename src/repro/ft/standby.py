@@ -1,0 +1,405 @@
+"""Warm-standby failover: a replica process that mirrors a serving fabric.
+
+The PR-8 supervisor made crashes survivable, but every recovery was a
+*cold* restart: spawn a fresh child, re-import the runtime, rebuild the
+model state from scratch — recovery time dominated by re-initialization,
+not reconnection.  This module closes that gap with diskless
+state replication over the fabric itself:
+
+- :class:`StandbyReplica` is the pull side of
+  :class:`~repro.checkpoint.manager.ReplicationSource`: it connects to
+  the primary as an ordinary (low-priority-lane) client and periodically
+  pulls the snapshot manifest, any shards it doesn't have (CRC-verified,
+  damaged shards re-pulled individually), and the small delta log
+  (dedup window + breaker + service-EWMA state) — one copy per byte,
+  streamed through the puller connection's bulk heap like any other
+  large payload.
+
+- :func:`_standby_entry` is the spawn-safe child main a
+  :class:`~repro.ft.supervisor.FabricSupervisor` runs next to the
+  primary: a replica sync loop plus a command pipe.  On ``promote`` it
+  stops pulling, rebuilds the serving fabric from the replicated state
+  via a **restorable factory**, and binds it under the primary's
+  rendezvous name — clients ride through on PR-8 reconnect-with-replay,
+  and the imported dedup window keeps the replay exactly-once.
+
+- :func:`param_echo_factory` is the reference restorable factory
+  (``factory(name, policy, state=None)``): cold-started it generates a
+  deterministic parameter pytree (the expensive initialization a warm
+  promotion skips); given replicated ``state`` it restores the params
+  byte-identically and imports the dispatcher delta.
+
+Fault sites drilled here: ``standby.lag`` (skip sync rounds — lag grows
+deterministically), ``standby.promote.stall`` (sleep inside promote, so
+the supervisor's promote timeout → cold-fallback path is testable), and
+``ckpt.shard.corrupt`` on the source side (CRC containment + re-pull).
+"""
+from __future__ import annotations
+
+import importlib
+import json
+import pickle
+import threading
+import time
+from typing import Optional
+
+import numpy as np
+
+from repro.core.policy import OffloadPolicy
+from repro.ft import inject as _inject
+
+#: replication pulls ride the lowest-urgency SLO lane so snapshot traffic
+#: never preempts live serving requests in batch formation
+REPLICATION_LANE = 7
+
+
+class StandbyReplica:
+    """Pull-side replication client: mirrors a primary fabric's state.
+
+    ``sync_once`` pulls the manifest, fetches + CRC-verifies any shards
+    for a new snapshot sequence (re-pulling damaged shards up to
+    ``max_shard_retries`` times each), decodes the pytree, and refreshes
+    the delta log.  ``run`` loops that at ``interval_s`` until stopped.
+    All pulls are bounded by ``pull_timeout_s`` so a dead primary costs
+    one timed-out round, never a hang — the promote path can always
+    interrupt between rounds.
+    """
+
+    def __init__(self, primary_name: str,
+                 policy: Optional[OffloadPolicy] = None,
+                 interval_s: float = 0.2,
+                 pull_timeout_s: Optional[float] = None,
+                 max_shard_retries: int = 3):
+        from repro.checkpoint.manager import ShardCodec
+
+        self.primary_name = primary_name
+        self.policy = policy or OffloadPolicy()
+        self.interval_s = interval_s
+        self.pull_timeout_s = (pull_timeout_s if pull_timeout_s is not None
+                               else max(1.0, 10 * interval_s))
+        self.max_shard_retries = max_shard_retries
+        self.codec = ShardCodec()        # shard size comes from the manifest
+        self._client = None
+        self._lock = threading.Lock()
+        # replicated state (all updated atomically per completed sync)
+        self.manifest: Optional[dict] = None
+        self.tree = None
+        self.extra: dict = {}
+        self.delta: dict = {}
+        self.seq = 0
+        self._applied_stamp_ns = 0
+        self._applied_at_ns = 0
+        self.stats = {"syncs": 0, "failed_syncs": 0, "snapshots_applied": 0,
+                      "shard_pulls": 0, "shard_corrupt": 0, "delta_pulls": 0,
+                      "bytes_pulled": 0, "lag_skips": 0}
+
+    # -- plumbing --------------------------------------------------------------
+    def _ensure_client(self):
+        from repro.ipc.worker import RemoteDispatcherClient
+
+        if self._client is None:
+            self._client = RemoteDispatcherClient.connect(
+                self.primary_name, policy=self.policy, lane=REPLICATION_LANE)
+        return self._client
+
+    def _drop_client(self) -> None:
+        client, self._client = self._client, None
+        if client is not None:
+            try:
+                client.close()
+            except Exception:
+                pass
+
+    def _pull(self, op: str, payload: np.ndarray) -> np.ndarray:
+        """One bounded replication request (async submit + bounded query,
+        so a dying primary costs ``pull_timeout_s``, not the policy's full
+        query timeout)."""
+        client = self._ensure_client()
+        jid = client.request(op, payload, mode="async",
+                             priority=REPLICATION_LANE)
+        return client.query(jid, timeout=self.pull_timeout_s)
+
+    # -- one sync round --------------------------------------------------------
+    def sync_once(self) -> bool:
+        """Pull manifest (+ shards if the sequence advanced) + delta;
+        returns True when a full round completed.  Any failure drops the
+        client (reconnected next round) and counts ``failed_syncs``."""
+        from repro.checkpoint.manager import ReplicationSource
+
+        ping = np.zeros(1, np.uint8)
+        try:
+            raw = self._pull(ReplicationSource.OP_MANIFEST, ping)
+            manifest = json.loads(bytes(np.asarray(raw, np.uint8)))
+            tree, extra = self.tree, self.extra
+            if manifest["seq"] != self.seq or self.tree is None:
+                shards = self._pull_shards(manifest)
+                if shards is None:
+                    return False                  # superseded mid-pull
+                tree, extra = self.codec.decode(manifest, shards)
+                self.stats["snapshots_applied"] += 1
+            raw = self._pull(ReplicationSource.OP_DELTA, ping)
+            delta = pickle.loads(bytes(np.asarray(raw, np.uint8)))
+            self.stats["delta_pulls"] += 1
+            self.stats["bytes_pulled"] += int(np.asarray(raw).nbytes)
+            with self._lock:
+                self.manifest, self.tree, self.extra = manifest, tree, extra
+                self.delta, self.seq = delta, manifest["seq"]
+                self._applied_stamp_ns = manifest["stamp_ns"]
+                self._applied_at_ns = time.perf_counter_ns()
+            self.stats["syncs"] += 1
+            return True
+        except Exception:
+            self.stats["failed_syncs"] += 1
+            self._drop_client()
+            return False
+
+    def _pull_shards(self, manifest: dict) -> Optional[list]:
+        """Fetch every shard of ``manifest``'s sequence, CRC-verifying
+        each and re-pulling damaged ones individually (bounded); None
+        when the source superseded the sequence mid-transfer."""
+        from repro.checkpoint.manager import ReplicationSource
+
+        shards = []
+        for idx in range(len(manifest["sizes"])):
+            req = np.array([manifest["seq"], idx], np.int64)
+            for _attempt in range(1 + self.max_shard_retries):
+                shard = np.asarray(
+                    self._pull(ReplicationSource.OP_SHARD, req), np.uint8)
+                self.stats["shard_pulls"] += 1
+                if shard.nbytes == 0 and manifest["sizes"][idx]:
+                    return None                   # sequence superseded
+                self.stats["bytes_pulled"] += int(shard.nbytes)
+                if self.codec.verify(manifest, idx, shard):
+                    shards.append(shard)
+                    break
+                self.stats["shard_corrupt"] += 1  # CRC caught it: re-pull
+            else:
+                raise RuntimeError(
+                    f"shard {idx} failed CRC {self.max_shard_retries + 1}x")
+        return shards
+
+    # -- loop ------------------------------------------------------------------
+    def run(self, stop: threading.Event) -> None:
+        """Sync at ``interval_s`` until ``stop`` is set.  The
+        ``standby.lag`` site skips one round per fire (sleeping
+        ``stall_s``), growing replication lag deterministically."""
+        while not stop.is_set():
+            if _inject._PLANE is not None and _inject.stall("standby.lag"):
+                self.stats["lag_skips"] += 1
+            else:
+                self.sync_once()
+            stop.wait(self.interval_s)
+        self._drop_client()
+
+    # -- introspection ---------------------------------------------------------
+    def lag_ms(self) -> float:
+        """Replication lag of the applied snapshot: how far behind the
+        primary's cut stamp this replica was when it applied it, plus
+        the time elapsed since (CLOCK_MONOTONIC, cross-process)."""
+        with self._lock:
+            if not self._applied_stamp_ns:
+                return float("inf")
+            return (time.perf_counter_ns() - self._applied_stamp_ns) / 1e6
+
+    def state(self) -> dict:
+        """The replicated state bundle a restorable factory consumes."""
+        with self._lock:
+            return {"tree": self.tree, "extra": dict(self.extra),
+                    "delta": dict(self.delta), "manifest": self.manifest,
+                    "seq": self.seq}
+
+    def snapshot_stats(self) -> dict:
+        """Flat counters + seq/lag for the supervisor's ``stats`` pipe."""
+        out = dict(self.stats)
+        out["seq"] = self.seq
+        out["lag_ms"] = self.lag_ms()
+        return out
+
+    def close(self) -> None:
+        self._drop_client()
+
+
+# ---------------------------------------------------------------------------
+# spawn-safe child main + supervisor-side handle
+# ---------------------------------------------------------------------------
+
+def _standby_entry(primary_name: str, factory_path: str,
+                   policy: OffloadPolicy, conn,
+                   plane_json: Optional[str],
+                   interval_s: float) -> None:
+    """Standby child main: replicate until told to promote (or stop).
+
+    ``conn`` is the supervisor's command pipe: ``{"cmd": "stats"}`` →
+    replica counters, ``{"cmd": "promote"}`` → stop pulling, rebuild the
+    fabric from the replicated state under the primary's rendezvous name
+    (the supervisor has already reclaimed the dead primary's segments),
+    ack with seq/digest/lag, and keep serving; ``{"cmd": "stop"}`` or a
+    closed pipe → exit.
+    """
+    if plane_json:
+        _inject.install(_inject.FaultPlane.from_spec_json(plane_json))
+    replica = StandbyReplica(primary_name, policy, interval_s=interval_s)
+    stop = threading.Event()
+    sync_thread = threading.Thread(target=replica.run, args=(stop,),
+                                   daemon=True, name="rocket-standby-sync")
+    sync_thread.start()
+    fabric = None
+    try:
+        while True:
+            try:
+                if not conn.poll(0.1):
+                    continue
+                cmd = conn.recv()
+            except (EOFError, OSError):
+                return                       # supervisor died: fold quietly
+            kind = cmd.get("cmd")
+            if kind == "stats":
+                conn.send(replica.snapshot_stats())
+            elif kind == "promote" and fabric is None:
+                stop.set()
+                # the drillable stall: a promotion wedged here exceeds the
+                # supervisor's promote timeout and falls back to cold restart
+                _inject.stall("standby.promote.stall")
+                t0 = time.perf_counter()
+                state = replica.state()
+                mod_name, fn_name = factory_path.split(":")
+                factory = getattr(importlib.import_module(mod_name), fn_name)
+                fabric = factory(primary_name, policy,
+                                 state=state if state["seq"] else None)
+                conn.send({
+                    "ok": True, "seq": state["seq"],
+                    "digest": (state["manifest"] or {}).get("digest"),
+                    "lag_ms": replica.lag_ms(),
+                    "bind_ms": (time.perf_counter() - t0) * 1e3,
+                    "stats": replica.snapshot_stats(),
+                })
+                # tear the replication client down OFF the promote critical
+                # path: a sync round caught mid-pull against the dead (and
+                # already-reclaimed) primary is deep in bounded
+                # timeouts/reconnects, and closing through it synchronously
+                # would bill those waits to the ride-through window
+                threading.Thread(target=replica.close, daemon=True,
+                                 name="rocket-standby-teardown").start()
+            elif kind == "stop":
+                return
+    finally:
+        stop.set()
+        if fabric is not None:
+            fabric.close()
+
+
+class StandbyHandle:
+    """Supervisor-side handle on a standby child: command pipe + process."""
+
+    def __init__(self, proc, conn):
+        self.proc = proc
+        self.conn = conn
+
+    def alive(self) -> bool:
+        return self.proc.is_alive()
+
+    def _roundtrip(self, cmd: dict, timeout_s: float) -> Optional[dict]:
+        """Send one command; its reply within ``timeout_s``, else None
+        (a late reply is abandoned with the pipe — callers kill the
+        child after a timeout, never reuse the handle)."""
+        try:
+            self.conn.send(cmd)
+            if self.conn.poll(timeout_s):
+                return self.conn.recv()
+        except (EOFError, OSError, BrokenPipeError):
+            pass
+        return None
+
+    def promote(self, timeout_s: float) -> Optional[dict]:
+        """Ask the standby to take over the rendezvous; ack dict on
+        success (seq/digest/lag_ms/bind_ms), None on stall/death."""
+        return self._roundtrip({"cmd": "promote"}, timeout_s)
+
+    def stats(self, timeout_s: float = 5.0) -> Optional[dict]:
+        return self._roundtrip({"cmd": "stats"}, timeout_s)
+
+    def stop(self, timeout_s: float = 5.0) -> None:
+        """Graceful stop, escalating to terminate/kill."""
+        try:
+            self.conn.send({"cmd": "stop"})
+        except (OSError, BrokenPipeError, ValueError):
+            pass
+        self.proc.join(timeout=timeout_s)
+        self.kill()
+
+    def kill(self) -> None:
+        if self.proc.is_alive():
+            self.proc.terminate()
+            self.proc.join(timeout=2.0)
+            if self.proc.is_alive():
+                self.proc.kill()
+                self.proc.join(timeout=1.0)
+        try:
+            self.conn.close()
+        except OSError:
+            pass
+
+
+# ---------------------------------------------------------------------------
+# reference restorable factory
+# ---------------------------------------------------------------------------
+
+#: deterministic parameter pytree for the reference factory: big enough
+#: that replication streams real shards through the bulk heap and cold
+#: initialization does real work, small enough for test-sized soaks
+PARAM_SHAPES = {f"layers/w{i}": (512, 512) for i in range(8)}
+
+
+def _cold_params() -> dict:
+    """The expensive deterministic initialization a warm promotion skips:
+    generate the parameter pytree (seeded — cold restarts are
+    reproducible) and run a few warmup passes through the serving math
+    so first-request latency isn't an initialization artifact."""
+    rng = np.random.default_rng(0)
+    params = {}
+    for name, shape in PARAM_SHAPES.items():
+        layer = params.setdefault(name.split("/")[0], {})
+        layer[name.split("/")[1]] = rng.standard_normal(
+            shape).astype(np.float32)
+    x = np.ones(512, np.float32)
+    for _ in range(4):                       # warmup: touch every layer
+        for layer in params["layers"].values():
+            x = np.tanh(layer @ x)
+    return params
+
+
+def param_echo_factory(name: str, policy: OffloadPolicy, state=None):
+    """Restorable reference factory (``repro.ft.standby:param_echo_factory``).
+
+    Called ``(name, policy)`` by the supervisor's cold path it builds the
+    deterministic parameter pytree from scratch; called with replicated
+    ``state`` by the promote path it restores the params byte-identically
+    and imports the dispatcher delta (dedup window, breakers, service
+    EWMAs).  Serves ``echo`` / ``double`` (soak traffic), ``psum`` (a
+    state witness: the sum of every parameter), and the ``__ckpt.*``
+    replication ops via an attached
+    :class:`~repro.checkpoint.manager.ReplicationSource` (exposed as
+    ``fabric.replication``).
+    """
+    from repro.checkpoint.manager import ReplicationSource
+    from repro.core.dispatcher import RequestDispatcher
+    from repro.ipc.worker import ServingFabric
+
+    if state is None:
+        params = _cold_params()
+    else:
+        params = state["tree"]
+    dispatcher = RequestDispatcher(policy)
+    dispatcher.register_handler("echo", lambda x: x)
+    dispatcher.register_handler("double", lambda x: x * 2)
+    dispatcher.register_handler(
+        "psum", lambda _x: np.float64(sum(
+            float(w.sum()) for w in params["layers"].values())))
+    if state is not None and state.get("delta"):
+        dispatcher.import_state(state["delta"])
+    source = ReplicationSource(lambda: (params, {}),
+                               shard_bytes=1 << 18).attach(dispatcher)
+    fabric = ServingFabric(dispatcher, name=name, policy=policy,
+                           own_dispatcher=True).start()
+    fabric.replication = source
+    return fabric

@@ -19,7 +19,26 @@ segment under the fabric's name prefix** before spawning a fresh
 incarnation under the *same* rendezvous name — so reconnecting clients
 find the replacement exactly where the casualty was.  Restarts are
 bounded (``max_restarts``) and counted; reclaimed segments are counted
-per kind (``arenas_reclaimed`` / ``heaps_reclaimed``).
+per kind (``arenas_reclaimed`` / ``heaps_reclaimed``).  Reclaim zeroes
+the dead rendezvous arena's ALIVE word *before* unlinking it, so a
+client caught mid-registration fails fast (``ConnectionError`` →
+its own reconnect loop) instead of spinning out its whole connect
+timeout against memory nobody will ever answer.
+
+**Warm failover** (``standby_factory``): alongside the primary the
+supervisor keeps a warm standby child
+(:func:`repro.ft.standby._standby_entry`) continuously replicating the
+primary's state over the fabric.  On primary death the recovery path
+*promotes* instead of cold-restarting: reclaim the wreckage, command the
+standby to rebuild the fabric from its replicated state under the same
+rendezvous name, and adopt it as the new primary — recovery cost is the
+promotion handshake plus the rendezvous bind, not process spawn +
+re-import + state re-initialization.  A promotion that stalls past
+``promote_timeout_s`` (``standby.promote.stall``) is abandoned — the
+standby is killed so it can never race the replacement for the
+rendezvous bind — and the supervisor falls back to a cold restart.
+Recoveries of either kind draw from one shared budget
+(``restarts + promotions`` vs ``max_restarts``).
 
 The fabric itself is built in the child by a spawn-safe **factory**
 (dotted ``module:function`` called as ``factory(name, policy)`` and
@@ -81,8 +100,34 @@ def echo_fabric_factory(name: str, policy: OffloadPolicy):
                          own_dispatcher=True).start()
 
 
+def _mark_rendezvous_dead(name: str) -> None:
+    """Zero a dead listener arena's ALIVE control word (word 0, offset 64)
+    before it is unlinked.  A client killed into the registration spin —
+    the server died between ``accept_once`` and the client's ACK — polls
+    that word from its *own mapping*, which unlinking alone never touches
+    (POSIX keeps the mapping alive); zeroing it first turns a full
+    connect-timeout burn into an immediate ``ConnectionError`` the
+    client's reconnect loop handles."""
+    from multiprocessing import shared_memory
+    try:
+        seg = shared_memory.SharedMemory(name=name)
+    except (FileNotFoundError, OSError, ValueError):
+        return
+    try:
+        seg.buf[64:72] = b"\x00" * 8
+    finally:
+        seg.close()
+
+
 def reclaim_segments(prefix: str) -> dict:
-    """Unlink every ``/dev/shm`` segment whose name starts with ``prefix``.
+    """Unlink every ``/dev/shm`` segment belonging to fabric ``prefix``:
+    the rendezvous arena itself (exact name — its ALIVE word is zeroed
+    first, see :func:`_mark_rendezvous_dead`) and everything under
+    ``prefix.`` (per-client arenas ``<prefix>.c<i>-<pid>``, bulk heaps
+    ``*.h``, the registration mutex ``.lk``).  The dot boundary matters:
+    a bare ``startswith(prefix)`` would also destroy a *sibling* fabric
+    whose name merely extends ours (``rocket-a`` reclaiming
+    ``rocket-ab``'s live segments).
 
     Returns per-kind counts: ``arenas`` (ring/rendezvous arenas and the
     registration mutex) and ``heaps`` (bulk-heap segments, ``*.h``).
@@ -96,8 +141,10 @@ def reclaim_segments(prefix: str) -> dict:
     except OSError:
         return counts
     for entry in entries:
-        if not entry.startswith(prefix):
+        if entry != prefix and not entry.startswith(prefix + "."):
             continue
+        if entry == prefix:
+            _mark_rendezvous_dead(entry)
         try:
             os.unlink(os.path.join(SHM_DIR, entry))
         except OSError:
@@ -116,6 +163,16 @@ class FabricSupervisor:
     (up to ``max_restarts`` times) spawns a replacement under the same
     rendezvous name.  ``plane_json`` arms a
     :class:`~repro.ft.inject.FaultPlane` inside the child only.
+
+    ``standby_factory`` (a dotted *restorable* factory path, called
+    ``factory(name, policy, state=...)`` — e.g.
+    ``repro.ft.standby:param_echo_factory``) enables warm failover: a
+    standby child replicates the primary continuously and primary death
+    is answered by promotion (bounded by ``promote_timeout_s``, cold
+    restart as the fallback).  ``standby_plane_json`` arms a fault plane
+    in the standby child only (``standby.lag``,
+    ``standby.promote.stall``, and — via the primary —
+    ``ckpt.shard.corrupt`` live there).
     """
 
     def __init__(self, name: str, factory: str,
@@ -124,6 +181,10 @@ class FabricSupervisor:
                  check_interval_s: float = 0.05,
                  plane_json: Optional[str] = None,
                  rearm_plane: bool = False,
+                 standby_factory: Optional[str] = None,
+                 standby_interval_s: float = 0.2,
+                 promote_timeout_s: float = 5.0,
+                 standby_plane_json: Optional[str] = None,
                  ctx: Optional[mp.context.BaseContext] = None):
         self.name = name
         self.factory = factory
@@ -136,15 +197,30 @@ class FabricSupervisor:
         # by default the plane arms the FIRST incarnation only ("the fault
         # happened once") — rearm_plane=True re-arms every restart
         self.rearm_plane = rearm_plane
+        self.standby_factory = standby_factory
+        self.standby_interval_s = standby_interval_s
+        self.promote_timeout_s = promote_timeout_s
+        self.standby_plane_json = standby_plane_json
         self._ctx = ctx or mp.get_context("spawn")
         self._proc: Optional[mp.process.BaseProcess] = None
+        # command pipe of a promoted primary (closing it would make the
+        # promoted child fold its fabric, so it stays open until close())
+        self._proc_conn = None
+        self._standby = None
         self._thread: Optional[threading.Thread] = None
         self._stop = threading.Event()
         self._lock = threading.Lock()
         self.restarts = 0
         self.crashes = 0
+        self.promotions = 0
+        self.promote_stalls = 0
         self.arenas_reclaimed = 0
         self.heaps_reclaimed = 0
+        #: recovery state machine: running → (on death) promoting →
+        #: running, or failed once the shared recovery budget is spent
+        self.state = "running"
+        #: last successful promotion's ack (seq/digest/lag_ms/bind_ms)
+        self.last_promotion: Optional[dict] = None
         #: last crash's exit code (None until the first death)
         self.last_exitcode: Optional[int] = None
 
@@ -152,20 +228,72 @@ class FabricSupervisor:
     def _spawn(self) -> None:
         plane = self.plane_json if (self.rearm_plane or self.restarts == 0) \
             else None
+        self._close_proc_conn()
         self._proc = self._ctx.Process(
             target=_fabric_entry,
             args=(self.name, self.factory, self.policy, plane),
             daemon=True)
         self._proc.start()
 
+    def _spawn_standby(self) -> None:
+        if self.standby_factory is None or self._stop.is_set():
+            return
+        from repro.ft.standby import StandbyHandle, _standby_entry
+        parent_conn, child_conn = self._ctx.Pipe()
+        proc = self._ctx.Process(
+            target=_standby_entry,
+            args=(self.name, self.standby_factory, self.policy, child_conn,
+                  self.standby_plane_json, self.standby_interval_s),
+            daemon=True)
+        proc.start()
+        child_conn.close()
+        self._standby = StandbyHandle(proc, parent_conn)
+
+    def _close_proc_conn(self) -> None:
+        conn, self._proc_conn = self._proc_conn, None
+        if conn is not None:
+            try:
+                conn.close()
+            except OSError:
+                pass
+
     def start(self) -> "FabricSupervisor":
-        """Spawn the fabric child and begin watching it."""
+        """Spawn the fabric child (and standby, if any); begin watching."""
         reclaim_segments(self.name)     # a stale name blocks the bind
         self._spawn()
+        self._spawn_standby()
         self._thread = threading.Thread(target=self._watch, daemon=True,
                                         name="rocket-supervisor")
         self._thread.start()
         return self
+
+    def _try_promote(self) -> bool:
+        """Hand the rendezvous to the warm standby; True on success.
+        Failure (no standby / dead / stalled past ``promote_timeout_s``)
+        kills the standby outright — a late waker must never race the
+        cold replacement for the rendezvous bind — and reports False so
+        the caller falls back to a cold restart."""
+        sb, self._standby = self._standby, None
+        if sb is None:
+            return False
+        if not sb.alive():
+            sb.kill()
+            return False
+        self.state = "promoting"
+        ack = sb.promote(self.promote_timeout_s)
+        if not (ack and ack.get("ok")):
+            self.promote_stalls += 1
+            sb.kill()
+            # a half-bound rendezvous from the aborted promotion would
+            # block the cold bind
+            self.reclaim()
+            return False
+        self.promotions += 1
+        self.last_promotion = ack
+        self._close_proc_conn()
+        self._proc = sb.proc          # the standby is the primary now
+        self._proc_conn = sb.conn     # keep open: EOF folds its fabric
+        return True
 
     def _watch(self) -> None:
         while not self._stop.is_set():
@@ -177,10 +305,15 @@ class FabricSupervisor:
                     self.crashes += 1
                     self.last_exitcode = proc.exitcode
                     self.reclaim()
-                    if self.restarts >= self.max_restarts:
+                    if self.restarts + self.promotions >= self.max_restarts:
+                        self.state = "failed"
                         break
-                    self.restarts += 1
-                    self._spawn()
+                    if not self._try_promote():
+                        self.restarts += 1
+                        self._spawn()
+                    if self._standby is None:
+                        self._spawn_standby()   # re-cover the new primary
+                    self.state = "running"
             time.sleep(self.check_interval_s)
 
     def reclaim(self) -> dict:
@@ -205,20 +338,35 @@ class FabricSupervisor:
             time.sleep(0.01)
         return False
 
+    def standby_stats(self, timeout_s: float = 5.0) -> Optional[dict]:
+        """Replication counters from the live standby (None without one)."""
+        sb = self._standby
+        return sb.stats(timeout_s) if sb is not None and sb.alive() else None
+
     def stats(self) -> dict:
         """Supervision counters as one flat dict."""
+        sb = self._standby
         return {"restarts": self.restarts, "crashes": self.crashes,
+                "promotions": self.promotions,
+                "promote_stalls": self.promote_stalls,
+                "state": self.state,
                 "arenas_reclaimed": self.arenas_reclaimed,
                 "heaps_reclaimed": self.heaps_reclaimed,
                 "alive": self.alive(),
+                "standby_alive": sb is not None and sb.alive(),
+                "last_promotion": self.last_promotion,
                 "last_exitcode": self.last_exitcode}
 
     def close(self, reclaim: bool = True) -> None:
-        """Stop watching, terminate the child, optionally reclaim shm."""
+        """Stop watching, terminate child + standby, optionally reclaim."""
         self._stop.set()
         if self._thread is not None:
             self._thread.join(timeout=self.policy.retry.join_timeout_s)
             self._thread = None
+        with self._lock:
+            sb, self._standby = self._standby, None
+        if sb is not None:
+            sb.kill()
         proc = self._proc
         if proc is not None and proc.is_alive():
             proc.terminate()
@@ -227,6 +375,7 @@ class FabricSupervisor:
                 proc.kill()
                 proc.join(timeout=1.0)
         self._proc = None
+        self._close_proc_conn()
         if reclaim:
             self.reclaim()
 

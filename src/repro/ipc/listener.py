@@ -214,8 +214,12 @@ def connect(listener_name: str, policy: Optional[OffloadPolicy] = None,
 
     def register(arena: SharedMemoryArena) -> dict:
         # inner frame so the numpy control-word view dies before arena.close()
+        # NOTE: every raise below sheds ``words`` first — the traceback
+        # would otherwise pin this frame (and the view) through
+        # arena.close(), which then hits "exported pointers exist"
         words = arena.control_words()
         if int(words[_W_ALIVE]) == 0:
+            del words
             raise ConnectionError(f"listener {listener_name!r} is shut down")
         # under the mutex the mailbox is ours; post and await the answer
         _write_mailbox(arena, _W_REQ_LOCK, _REQ_OFF,
@@ -228,9 +232,11 @@ def connect(listener_name: str, policy: Optional[OffloadPolicy] = None,
         words[_W_REQ] = ticket
         while int(words[_W_ACK]) < ticket:
             if int(words[_W_ALIVE]) == 0:
+                del words
                 raise ConnectionError(
                     f"listener {listener_name!r} died mid-registration")
             if time.perf_counter() > deadline:
+                del words
                 raise TimeoutError(
                     f"listener {listener_name!r} never answered")
             time.sleep(0.0005)

@@ -491,11 +491,19 @@ class ServingFabric:
         """Reactor thread: feed one drained batch — e.g. a client's whole
         coalesced frame — into the dispatcher as one ``submit_many``, so
         K wire-microbatched requests enter the batching window together."""
-        if _inject._PLANE is not None \
-                and _inject.fire("worker.crash") is not None:
-            # hard process death mid-batch — the chaos drill the supervisor
-            # and reconnecting clients exist for (no cleanup on purpose)
-            os._exit(23)
+        if _inject._PLANE is not None:
+            # replication pulls (__ckpt.* ops from a warm standby) drain
+            # through this same path but must not advance the crash
+            # schedule: the drill is indexed against the *serving* request
+            # stream, and standby sync cadence would make it nondeterministic
+            serving = any(
+                not str(lease.header.get("op", "")).startswith("__ckpt.")
+                for lease in leases)
+            if serving and _inject.fire("worker.crash") is not None:
+                # hard process death mid-batch — the chaos drill the
+                # supervisor and reconnecting clients exist for (no
+                # cleanup on purpose)
+                os._exit(23)
         items = [it for it in (self._prepare(conn, lease)
                                for lease in leases) if it is not None]
         if items:
@@ -556,6 +564,17 @@ class ServingFabric:
 
     def __exit__(self, *exc):
         self.close()
+
+
+class ReconnectTimeout(ConnectionError, TimeoutError):
+    """A :meth:`RemoteDispatcherClient.reconnect` ran out of a
+    caller-imposed time budget (e.g. the enclosing query's deadline)
+    before any attempt succeeded.  Distinct from the plain
+    ``ConnectionError`` of exhausted *attempts* so callers can tell "the
+    server never came back within my deadline" (a promotion or restart
+    overran it) from "the server is gone"; subclasses both
+    ``ConnectionError`` and ``TimeoutError`` so either family of
+    handlers still fires."""
 
 
 class RemoteDispatcherClient:
@@ -698,7 +717,7 @@ class RemoteDispatcherClient:
             self.queries.complete(job_id, result)
 
     # -- crash recovery -------------------------------------------------------
-    def reconnect(self) -> None:
+    def reconnect(self, deadline: Optional[float] = None) -> None:
         """Re-register through the listener and replay unacked requests.
 
         Bounded attempts (``policy.retry.max_reconnects``) with
@@ -708,23 +727,47 @@ class RemoteDispatcherClient:
         idempotent id — the server's dedup window turns the replay into
         exactly-once execution.  Raises ``ConnectionError`` when every
         attempt fails; only clients from :meth:`connect` can reconnect.
+
+        ``deadline`` (absolute ``time.perf_counter()``) bounds the
+        *cumulative* time spent here: each attempt's connect timeout and
+        each backoff sleep are clipped to the remaining budget, and
+        exhausting it raises :class:`ReconnectTimeout` — so a recovery
+        (e.g. a standby promotion) that overruns the enclosing query's
+        deadline surfaces as a typed error instead of over-waiting.
         """
         if self._listener_name is None:
             raise ConnectionError("client has no listener to reconnect to")
         from repro.ipc.listener import connect as fabric_connect
         retry = self.policy.retry
+
+        def remaining_or_raise(last: Optional[Exception]) -> Optional[float]:
+            if deadline is None:
+                return None
+            left = deadline - time.perf_counter()
+            if left <= 0:
+                raise ReconnectTimeout(
+                    f"reconnect to {self._listener_name!r} exceeded its "
+                    f"deadline budget") from last
+            return left
+
         with self._reconnect_lock:
             last: Optional[Exception] = None
             for attempt in range(max(1, retry.max_reconnects)):
+                left = remaining_or_raise(last)
+                timeout_s = (retry.connect_timeout_s if left is None
+                             else min(retry.connect_timeout_s, left))
                 try:
                     transport = fabric_connect(
                         self._listener_name, policy=self._policy_arg,
                         latency=self._latency_arg,
-                        timeout_s=retry.connect_timeout_s,
+                        timeout_s=timeout_s,
                         meta={"lane": self.lane} if self.lane else None)
                 except Exception as e:
                     last = e
-                    time.sleep(retry.backoff_s(attempt))
+                    left = remaining_or_raise(last)
+                    backoff = retry.backoff_s(attempt)
+                    time.sleep(backoff if left is None
+                               else min(backoff, left))
                     continue
                 with self._transport_lock:
                     # swap under the receiver's lock: close must not tear
@@ -842,8 +885,16 @@ class RemoteDispatcherClient:
         try:
             deadline = time.perf_counter() + timeout
             retry = self.policy.retry
-            slice_s = max(retry.heartbeat_stale_s, 0.1)
+            # wait in heartbeat-interval slices (not stale_s slices): the
+            # staleness check below only runs at slice boundaries, so a
+            # coarser slice would quantize failure detection to up to
+            # 2x stale_s depending on heartbeat phase at the crash
+            slice_s = max(retry.heartbeat_interval_s, 0.05)
             resubmits = 0
+            # single-request resubmit patience: a slice is too short to
+            # conclude a reply was dropped (it may simply be in flight),
+            # so re-send only after a full stale window of silence
+            last_send = time.perf_counter()
             while True:
                 remaining = deadline - time.perf_counter()
                 if remaining <= 0:
@@ -868,15 +919,31 @@ class RemoteDispatcherClient:
                         stale = True       # transport already torn down
                     if stale:
                         try:
-                            self.reconnect()
+                            # bound the cumulative reconnect wait by this
+                            # query's own deadline: a promotion/restart
+                            # that overruns it becomes a typed error now,
+                            # not a silent over-wait
+                            self.reconnect(deadline=deadline)
+                        except ReconnectTimeout:
+                            with self._lock:
+                                lost = (self._unacked.pop(job_id, None)
+                                        is not None)
+                            if lost:
+                                self.lost_replies += 1
+                            raise
                         except ConnectionError:
                             pass
+                        last_send = time.perf_counter()  # replay counts
                         continue
                     # server alive but this request never answered — the
                     # request (or its reply) was dropped in transit (e.g.
                     # quarantined as corrupt).  Bounded single-request
-                    # resubmit, idempotent by dedup id; the slice wait is
-                    # the backoff.
+                    # resubmit, idempotent by dedup id, and only after a
+                    # full stale window of silence since the last send —
+                    # one elapsed slice just means the reply is in flight.
+                    if (time.perf_counter() - last_send
+                            < retry.heartbeat_stale_s):
+                        continue
                     with self._lock:
                         entry = self._unacked.get(job_id)
                     if entry is not None \
@@ -890,6 +957,7 @@ class RemoteDispatcherClient:
                             continue
                         resubmits += 1
                         self.retries += 1
+                        last_send = time.perf_counter()
         finally:
             if span is not None:
                 span.__exit__(None, None, None)

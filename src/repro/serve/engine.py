@@ -80,6 +80,26 @@ class BatchedServer:
             _trace.emit(_trace.SERVE_BATCH, tt0, arg=result.shape[0])
         return result
 
+    # -- diskless checkpoint/restore ---------------------------------------------
+    def state_snapshot(self) -> tuple:
+        """``(tree, extra)`` for a :class:`repro.checkpoint.ShardCodec` /
+        :class:`repro.checkpoint.ReplicationSource`: the parameter pytree
+        pulled to host memory plus the serving counters as picklable side
+        state.  Byte-exact — :meth:`restore_state` of the encoded shards
+        reproduces the params bit-for-bit."""
+        host = jax.tree_util.tree_map(
+            lambda x: np.asarray(jax.device_get(x)), self.params)
+        return host, {"stats": dict(self.stats)}
+
+    def restore_state(self, tree, extra: Optional[dict] = None) -> None:
+        """Adopt a replicated/decoded snapshot: install the parameter
+        pytree (device placement happens lazily on first jit call) and
+        the serving counters, so a promoted replica's numbers continue
+        the primary's, not restart from zero."""
+        self.params = tree
+        if extra and "stats" in extra:
+            self.stats.update(extra["stats"])
+
     # -- request-level API (dispatcher integration) ------------------------------
     def make_dispatcher(self, latency: Optional[LatencyModel] = None,
                         workers: int = 1) -> RequestDispatcher:
@@ -115,7 +135,9 @@ class BatchedServer:
                        heap_extents: int = 32,
                        max_clients: int = 64,
                        reactors: int = 1,
-                       default_deadline_ms: Optional[float] = None):
+                       default_deadline_ms: Optional[float] = None,
+                       replicate: bool = False,
+                       shard_bytes: int = 1 << 20):
         """Expose the dispatcher to any number of client *processes* over
         the multi-client shared-memory fabric.
 
@@ -137,6 +159,13 @@ class BatchedServer:
         matching worker pool so shards execute concurrently), and
         ``default_deadline_ms`` stamps a deadline on every request that
         arrives without one, arming the fabric's SLO monitor.
+
+        ``replicate=True`` attaches a
+        :class:`repro.checkpoint.ReplicationSource` over
+        :meth:`state_snapshot` (sharded at ``shard_bytes``), so a warm
+        standby (:class:`repro.ft.StandbyReplica`) can mirror this
+        server's params + dispatcher state through the same fabric; the
+        source is exposed as ``fabric.replication``.
         """
         from repro.ipc import ServingFabric
         from repro.ipc.transport import TransportSpec
@@ -151,6 +180,11 @@ class BatchedServer:
             own_dispatcher=True, reactors=reactors,
             default_deadline_ms=default_deadline_ms)
         fabric.metrics.register("server", lambda: self.stats)
+        if replicate:
+            from repro.checkpoint import ReplicationSource
+            fabric.replication = ReplicationSource(
+                self.state_snapshot, shard_bytes=shard_bytes
+            ).attach(dispatcher)
         return fabric.start()
 
     def _pack(self, prompts: list[np.ndarray]) -> dict:
